@@ -1,0 +1,47 @@
+"""Paper Remark 1: aggregation cost scaling in n and d.
+
+Times each rule (with and without NNM) on dense stacks, plus the Pallas
+kernel path (interpret mode on CPU — structural check; real speed is a TPU
+property).  Derived column reports the observed d-scaling exponent.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, time_fn
+from repro.core import AggregatorSpec, aggregate
+from repro.kernels.gram import gram
+from repro.kernels.mixtrim import mixtrim
+
+
+def main(fast: bool = True):
+    ns = (16, 32) if fast else (16, 32, 64)
+    ds = (1024, 8192) if fast else (1024, 8192, 65536)
+    rules = ("cwtm", "gm", "krum", "cwmed", "mda", "meamed", "multikrum")
+    key = jax.random.PRNGKey(0)
+    for rule in rules:
+        for pre in (None, "nnm"):
+            times = {}
+            for n in ns:
+                for d in ds:
+                    x = jax.random.normal(key, (n, d))
+                    spec = AggregatorSpec(rule=rule, f=n // 4, pre=pre)
+                    fn = jax.jit(lambda s, spec=spec: aggregate(s, spec))
+                    times[(n, d)] = time_fn(fn, x, iters=5)
+            n0 = ns[0]
+            expo = np.log(times[(n0, ds[-1])] / times[(n0, ds[0])]) / \
+                np.log(ds[-1] / ds[0])
+            emit(f"cost_{rule}_{pre or 'vanilla'}", times[(ns[-1], ds[-1])],
+                 f"d_scaling_exp={expo:.2f}")
+
+    # kernel paths
+    x = jax.random.normal(key, (16, 8192))
+    m = jnp.eye(16) * 0.5 + jnp.ones((16, 16)) / 32
+    emit("kernel_gram_interp", time_fn(lambda: gram(x), iters=3), "n16_d8192")
+    emit("kernel_mixtrim_interp",
+         time_fn(lambda: mixtrim(x, m, f=3, mode="trim"), iters=3),
+         "n16_d8192")
+
+
+if __name__ == "__main__":
+    main(fast=False)

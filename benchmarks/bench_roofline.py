@@ -1,0 +1,42 @@
+"""Roofline table from the dry-run artifacts (deliverable g).
+
+Reads artifacts/dryrun/*.json and prints one CSV row per
+(arch x shape x mesh): the three roofline terms, dominant bottleneck,
+MODEL_FLOPS ratio, and per-device memory.
+"""
+import glob
+import json
+import os
+
+from benchmarks.common import emit
+
+
+def main(fast: bool = True, out_dir: str = "artifacts/dryrun"):
+    paths = sorted(glob.glob(os.path.join(out_dir, "*.json")))
+    if not paths:
+        emit("roofline_missing", 0.0,
+             "run `python -m repro.launch.dryrun --all` first")
+        return
+    for p in paths:
+        with open(p) as fh:
+            r = json.load(fh)
+        tag = f"roofline_{r['arch']}_{r['shape']}_{r['mesh']}"
+        if r.get("status") == "skipped":
+            emit(tag, 0.0, "SKIPPED: " + r["reason"][:60])
+            continue
+        if r.get("status") != "ok":
+            emit(tag, 0.0, "ERROR: " + r.get("error", "?")[:80])
+            continue
+        rf = r["roofline"]
+        mem = r.get("memory", {})
+        ratio = r.get("useful_flops_ratio")
+        emit(tag, 0.0,
+             f"compute={rf['compute_s']:.3e} memory={rf['memory_s']:.3e} "
+             f"collective={rf['collective_s']:.3e} dom={rf['dominant']} "
+             f"useful_ratio={ratio if ratio is None else round(ratio,3)} "
+             f"args_gb={mem.get('argument_bytes',0)/2**30:.2f} "
+             f"temp_gb={mem.get('temp_bytes',0)/2**30:.2f}")
+
+
+if __name__ == "__main__":
+    main(fast=False)

@@ -1,0 +1,43 @@
+"""Benchmark harness entry point: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows.  ``--full`` runs the paper-
+scale grids (much slower); default is the fast CI-sized pass.
+"""
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset: kappa,grid,kappahat,cost,"
+                         "convergence,roofline")
+    args = ap.parse_args()
+    fast = not args.full
+    only = set(args.only.split(",")) if args.only else None
+
+    from benchmarks import (bench_accuracy_grid, bench_agg_cost,
+                            bench_convergence, bench_kappa_hat,
+                            bench_kappa_table1, bench_roofline)
+
+    suites = [
+        ("kappa", bench_kappa_table1.main),
+        ("convergence", bench_convergence.main),
+        ("cost", bench_agg_cost.main),
+        ("kappahat", bench_kappa_hat.main),
+        ("grid", bench_accuracy_grid.main),
+        ("roofline", bench_roofline.main),
+    ]
+    print("name,us_per_call,derived")
+    for name, fn in suites:
+        if only and name not in only:
+            continue
+        t0 = time.time()
+        fn(fast=fast)
+        print(f"suite_{name}_wall_s,{(time.time()-t0)*1e6:.0f},", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,57 @@
+"""Quickstart: Byzantine-robust training in ~30 lines.
+
+8 workers, 2 Byzantine running the ALIE attack, heterogeneous data
+(Dirichlet alpha=0.1), NNM + coordinate-wise trimmed mean — the paper's
+recipe — on a small classifier.  Runs in < 1 minute on CPU.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.core import AggregatorSpec
+from repro.data import build_heterogeneous, make_classification, worker_batches
+from repro.optim import sgd
+from repro.optim.schedules import constant
+from repro.training import ByzantineConfig, TrainerConfig, train_loop
+
+N_WORKERS, F = 8, 2
+
+x, y = make_classification(6000, 10, 32, seed=0)
+(xtr, ytr), (xte, yte) = (x[:4000], y[:4000]), (x[4000:], y[4000:])
+ds = build_heterogeneous({"x": xtr, "y": ytr}, "y", N_WORKERS, alpha=0.1)
+
+
+def init(key):
+    k1, k2 = jax.random.split(key)
+    return {"w1": jax.random.normal(k1, (32, 64)) * 0.18, "b1": jnp.zeros(64),
+            "w2": jax.random.normal(k2, (64, 10)) * 0.12, "b2": jnp.zeros(10)}
+
+
+def loss_fn(p, b):
+    h = jax.nn.relu(b["x"] @ p["w1"] + p["b1"])
+    lp = jax.nn.log_softmax(h @ p["w2"] + p["b2"])
+    return -jnp.take_along_axis(lp, b["y"][:, None].astype(jnp.int32), 1).mean(), {}
+
+
+def accuracy(p):
+    h = jax.nn.relu(xte @ p["w1"] + p["b1"])
+    return (jnp.argmax(h @ p["w2"] + p["b2"], -1) == yte).mean()
+
+
+cfg = TrainerConfig(
+    algorithm="dshb", beta=0.9,                       # paper Alg. 3
+    agg=AggregatorSpec(rule="cwtm", f=F, pre="nnm"),  # the paper's recipe
+    byz=ByzantineConfig(f=F, attack="alie", eta=8.0), # simulated adversary
+)
+
+params, out = train_loop(loss_fn, init(jax.random.PRNGKey(0)),
+                         worker_batches(ds, 32, seed=1), sgd(clip=2.0), cfg,
+                         constant(0.3), steps=150, eval_fn=accuracy,
+                         eval_every=30)
+
+print(f"final loss {out['history']['loss'][-1]:.3f}  "
+      f"best accuracy {out['best']['acc']:.3f}  "
+      f"kappa_hat(last) {out['history']['kappa_hat'][-1]:.3f}")
+assert out["best"]["acc"] > 0.8, "robust training should survive ALIE"
+print("OK: trained to high accuracy despite 2/8 Byzantine workers")

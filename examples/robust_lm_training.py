@@ -1,0 +1,23 @@
+"""End-to-end driver: Byzantine-robust LM training on an assigned
+architecture (reduced scale for CPU) with the full substrate — Dirichlet-
+heterogeneous synthetic corpus, D-SHB worker momentum, NNM+CWTM
+aggregation, attack simulation, checkpointing.
+
+This is a thin veneer over the production driver; on a pod the same module
+runs the full config:
+
+  PYTHONPATH=src python examples/robust_lm_training.py            # ~minutes
+  PYTHONPATH=src python -m repro.launch.train --arch qwen2-7b --full ...
+"""
+import sys
+
+from repro.launch.train import main
+
+if __name__ == "__main__":
+    sys.argv = [sys.argv[0],
+                "--arch", "smollm-360m", "--steps", "120", "--workers", "8",
+                "--byz", "2", "--attack", "alie", "--agg", "nnm+cwtm",
+                "--batch", "4", "--seq", "128", "--lr", "0.1",
+                "--checkpoint", "artifacts/robust_lm.npz",
+                "--log-every", "20"] + sys.argv[1:]
+    main()

@@ -1,0 +1,26 @@
+"""Serving example: batched greedy decode with KV / SSM-state caches across
+three architecture families (attention, attention-free, hybrid).
+
+  PYTHONPATH=src python examples/serve_decode.py
+"""
+import time
+
+import jax
+
+from repro.configs import reduced_config
+from repro.models import build_model
+from repro.serving import ServeEngine
+
+for arch in ("smollm-360m", "rwkv6-3b", "zamba2-2.7b"):
+    cfg = reduced_config(arch)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    prompts = jax.random.randint(jax.random.PRNGKey(1), (4, 8), 0,
+                                 cfg.vocab_size)
+    eng = ServeEngine(model, params, batch_size=4, max_seq=64)
+    t0 = time.time()
+    out = eng.generate(prompts, max_new=16)
+    dt = time.time() - t0
+    print(f"{arch:14s} generated {out.shape} tokens in {dt:.2f}s; "
+          f"first row: {out[0][:8].tolist()}")
+print("OK: batched cached decode across attention / ssm / hybrid families")

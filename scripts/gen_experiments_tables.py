@@ -1,0 +1,72 @@
+"""Regenerates the §Dry-run / §Roofline markdown tables in EXPERIMENTS.md
+from artifacts/dryrun/*.json (between the AUTOGEN markers)."""
+import glob
+import json
+import os
+import sys
+
+BEGIN = "<!-- AUTOGEN:ROOFLINE BEGIN -->"
+END = "<!-- AUTOGEN:ROOFLINE END -->"
+
+
+def fmt(x, nd=2):
+    return f"{x:.{nd}e}"
+
+
+def build_tables(art="artifacts/dryrun"):
+    rows_sp, rows_mp = [], []
+    for p in sorted(glob.glob(os.path.join(art, "*.json"))):
+        r = json.load(open(p))
+        tgt = rows_mp if r.get("mesh") == "2x16x16" else rows_sp
+        tgt.append(r)
+
+    out = ["### Single-pod (16x16 = 256 chips) — full baseline table", ""]
+    out.append("| arch | shape | status | compute s | memory s | collective s"
+               " | dominant | useful ratio | args GB/dev | compile s |")
+    out.append("|---|---|---|---|---|---|---|---|---|---|")
+    for r in rows_sp:
+        if r.get("status") == "skipped":
+            out.append(f"| {r['arch']} | {r['shape']} | SKIP ({r['reason'][:48]}…) "
+                       "| – | – | – | – | – | – | – |")
+            continue
+        if r.get("status") != "ok":
+            out.append(f"| {r['arch']} | {r['shape']} | ERROR | – | – | – | – | – | – | – |")
+            continue
+        rf = r["roofline"]
+        mem = r.get("memory", {})
+        ur = r.get("useful_flops_ratio")
+        out.append(
+            f"| {r['arch']} | {r['shape']} | ok | {fmt(rf['compute_s'])} | "
+            f"{fmt(rf['memory_s'])} | {fmt(rf['collective_s'])} | "
+            f"**{rf['dominant']}** | {ur:.2f} | "
+            f"{mem.get('argument_bytes', 0)/2**30:.1f} | "
+            f"{r.get('compile_s', 0):.0f} |")
+
+    out += ["", "### Multi-pod (2x16x16 = 512 chips) — lowering proof", ""]
+    out.append("| arch | shape | status | collective bytes/dev | dominant | compile s |")
+    out.append("|---|---|---|---|---|---|")
+    for r in rows_mp:
+        if r.get("status") == "skipped":
+            out.append(f"| {r['arch']} | {r['shape']} | SKIP | – | – | – |")
+            continue
+        if r.get("status") != "ok":
+            out.append(f"| {r['arch']} | {r['shape']} | ERROR | – | – | – |")
+            continue
+        rf = r["roofline"]
+        out.append(f"| {r['arch']} | {r['shape']} | ok | "
+                   f"{fmt(rf['collective_bytes_per_device'])} | "
+                   f"{rf['dominant']} | {r.get('compile_s', 0):.0f} |")
+    return "\n".join(out)
+
+
+def main():
+    path = "EXPERIMENTS.md"
+    text = open(path).read()
+    a, b = text.index(BEGIN), text.index(END)
+    new = text[: a + len(BEGIN)] + "\n" + build_tables() + "\n" + text[b:]
+    open(path, "w").write(new)
+    print("EXPERIMENTS.md tables regenerated")
+
+
+if __name__ == "__main__":
+    main()

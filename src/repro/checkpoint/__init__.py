@@ -1,0 +1,3 @@
+from repro.checkpoint.npz import load_checkpoint, save_checkpoint
+
+__all__ = ["load_checkpoint", "save_checkpoint"]

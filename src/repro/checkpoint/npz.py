@@ -1,0 +1,42 @@
+"""npz-based checkpointing of arbitrary pytrees (single-process).
+
+Flattens the pytree with key-path strings; restores into the same treedef.
+On a multi-host pod this would stream per-shard files; here process-local
+gather suffices (the container is single-process).
+"""
+from __future__ import annotations
+
+import os
+from typing import Any
+
+import jax
+import numpy as np
+
+PyTree = Any
+_SEP = "::"
+
+
+def save_checkpoint(path: str, tree: PyTree, step: int | None = None) -> None:
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    data = {}
+    for keypath, leaf in flat:
+        data[jax.tree_util.keystr(keypath)] = np.asarray(leaf)
+    if step is not None:
+        data[f"{_SEP}step"] = np.asarray(step)
+    tmp = path + ".tmp"
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    with open(tmp, "wb") as fh:
+        np.savez(fh, **data)
+    os.replace(tmp, path)
+
+
+def load_checkpoint(path: str, like: PyTree) -> tuple[PyTree, int | None]:
+    """Restore into the structure (and dtypes) of ``like``."""
+    with np.load(path) as data:
+        flat, treedef = jax.tree_util.tree_flatten_with_path(like)
+        leaves = []
+        for keypath, leaf in flat:
+            arr = data[jax.tree_util.keystr(keypath)]
+            leaves.append(jax.numpy.asarray(arr, dtype=leaf.dtype))
+        step = int(data[f"{_SEP}step"]) if f"{_SEP}step" in data else None
+    return jax.tree_util.tree_unflatten(treedef, leaves), step

@@ -1,0 +1,21 @@
+"""Core Byzantine-robust aggregation library (the paper's contribution)."""
+from repro.core.types import AggregatorSpec, ALL_RULES, ATTACKS, COORDINATE_RULES, GRAM_RULES
+from repro.core.aggregators import (
+    aggregate, average, cwmed, cwtm, geometric_median, get_rule, krum, mda,
+    meamed, multikrum, RULES,
+)
+from repro.core.nnm import nnm, nnm_direct, nnm_matrix_from_stack
+from repro.core.bucketing import bucketing, bucketing_means, default_bucket_size
+from repro.core.attacks import apply_attack
+from repro.core.robust import robust_aggregate, tree_gram, tree_combine, tree_mix
+from repro.core import theory
+
+__all__ = [
+    "AggregatorSpec", "ALL_RULES", "ATTACKS", "COORDINATE_RULES", "GRAM_RULES",
+    "aggregate", "average", "cwmed", "cwtm", "geometric_median", "get_rule",
+    "krum", "mda", "meamed", "multikrum", "RULES",
+    "nnm", "nnm_direct", "nnm_matrix_from_stack",
+    "bucketing", "bucketing_means", "default_bucket_size",
+    "apply_attack", "robust_aggregate", "tree_gram", "tree_combine",
+    "tree_mix", "theory",
+]

@@ -1,0 +1,132 @@
+"""Robust aggregation rules on 2-D worker stacks.
+
+Every rule maps ``x : (n, d) -> (d,)``.  These are the reference ("dense")
+implementations used for CPU-scale experiments and as oracles; the
+distributed pipeline in :mod:`repro.core.robust` re-expresses the gram-space
+rules as collective linear algebra and the coordinate-wise rules as
+leaf-streamed sorts.
+
+All rules are deterministic, permutation-equivariant in the honest inputs,
+and run their internal arithmetic in fp32.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import gram as gramlib
+from repro.core.types import AggregatorSpec, COORDINATE_RULES, GRAM_RULES
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# Coordinate-wise rules.
+# ---------------------------------------------------------------------------
+
+def cwmed(x: Array, f: int = 0) -> Array:
+    """Coordinate-wise median (paper Eq. 13)."""
+    del f
+    return jnp.median(x.astype(jnp.float32), axis=0)
+
+
+def cwtm(x: Array, f: int) -> Array:
+    """Coordinate-wise trimmed mean: drop the f largest and f smallest
+    values per coordinate, average the middle n-2f (paper §8.1.1)."""
+    n = x.shape[0]
+    if not 0 <= f < n / 2:
+        raise ValueError(f"need 0 <= f < n/2, got f={f}, n={n}")
+    if f == 0:
+        return x.astype(jnp.float32).mean(axis=0)
+    xs = jnp.sort(x.astype(jnp.float32), axis=0)
+    return xs[f : n - f].mean(axis=0)
+
+
+def meamed(x: Array, f: int) -> Array:
+    """Mean-around-median (Xie et al.): per coordinate, average the n-f
+    values closest to the coordinate-wise median."""
+    n = x.shape[0]
+    x = x.astype(jnp.float32)
+    med = jnp.median(x, axis=0, keepdims=True)
+    dist = jnp.abs(x - med)
+    # Sort values by distance-to-median per coordinate, keep n-f closest.
+    order = jnp.argsort(dist, axis=0)
+    xs = jnp.take_along_axis(x, order, axis=0)
+    return xs[: n - f].mean(axis=0)
+
+
+# ---------------------------------------------------------------------------
+# Gram-space rules (thin wrappers over repro.core.gram).
+# ---------------------------------------------------------------------------
+
+def average(x: Array, f: int = 0) -> Array:
+    del f
+    return x.astype(jnp.float32).mean(axis=0)
+
+
+def _gram_rule(rule: str, x: Array, f: int, **kw) -> Array:
+    g = gramlib.gram(x)
+    c = gramlib.coeff_for_rule(rule, g, f, **kw)
+    return c @ x.astype(jnp.float32)
+
+
+def krum(x: Array, f: int) -> Array:
+    return _gram_rule("krum", x, f)
+
+
+def multikrum(x: Array, f: int) -> Array:
+    return _gram_rule("multikrum", x, f)
+
+
+def geometric_median(x: Array, f: int = 0, iters: int = 8,
+                     eps: float = 1e-8) -> Array:
+    return _gram_rule("gm", x, f, gm_iters=iters, gm_eps=eps)
+
+
+def mda(x: Array, f: int) -> Array:
+    return _gram_rule("mda", x, f)
+
+
+RULES = {
+    "average": average,
+    "krum": krum,
+    "multikrum": multikrum,
+    "gm": geometric_median,
+    "cwmed": cwmed,
+    "cwtm": cwtm,
+    "mda": mda,
+    "meamed": meamed,
+}
+
+
+def get_rule(name: str):
+    try:
+        return RULES[name]
+    except KeyError:
+        raise ValueError(f"unknown rule {name!r}; known: {sorted(RULES)}")
+
+
+def aggregate(x: Array, spec: AggregatorSpec, *, key: Array | None = None) -> Array:
+    """Full pipeline on a dense (n, d) stack: pre-aggregation + rule.
+
+    ``key`` is only consumed by Bucketing (the paper's randomized baseline).
+    """
+    from repro.core.bucketing import bucketing as _bucketing
+    from repro.core.nnm import nnm as _nnm
+
+    f = spec.f
+    if spec.pre == "nnm":
+        x = _nnm(x, f)
+    elif spec.pre == "bucketing":
+        if key is None:
+            raise ValueError("bucketing requires a PRNG key")
+        x, f = _bucketing(x, f, key, bucket_size=spec.bucket_size)
+    elif spec.pre not in (None, "none"):
+        raise ValueError(f"unknown pre-aggregation {spec.pre!r}")
+
+    rule = spec.rule
+    if rule == "gm":
+        return geometric_median(x, f, iters=spec.gm_iters, eps=spec.gm_eps)
+    return get_rule(rule)(x, f)

@@ -1,0 +1,213 @@
+"""State-of-the-art Byzantine gradient attacks (paper §6.1 / Appendix 14.3).
+
+Every attack produces the f Byzantine rows given the honest rows.  The
+primitive shared by ALIE / FOE / SF is
+
+    B_t = sbar_t + eta * a_t
+
+with sbar_t the honest mean (of gradients for D-GD, momenta for D-SHB).
+
+The *optimized* ALIE/FOE variants (Shejwalkar & Houmansadr, used by the
+paper) grid-search eta to maximize || F(attacked stack) - sbar_t ||, i.e.
+they are adaptive to the deployed aggregation rule.
+
+Label-flipping is not a vector transformation — it is applied in the data
+pipeline (see repro.training.trainer: Byzantine workers compute real
+gradients on labels 9 - l).  `lf` here is a passthrough marker.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+# eta grid for the optimized attacks (log-ish spacing around the published
+# sweet spots; ALIE's published z* for n=17,f=4 is ~0.3-1.5, FOE's ~0.1-10).
+_ETA_GRID = (0.05, 0.1, 0.2, 0.5, 0.8, 1.0, 1.5, 2.0, 3.0, 5.0, 10.0, 20.0)
+
+
+def _mean_std(honest: Array) -> tuple[Array, Array]:
+    h = honest.astype(jnp.float32)
+    return h.mean(axis=0), h.std(axis=0)
+
+
+def alie(honest: Array, f: int, eta: float = 1.0, **_) -> Array:
+    """A Little Is Enough: sbar + eta * coordinate-wise std."""
+    mean, std = _mean_std(honest)
+    byz = mean + eta * std
+    return jnp.broadcast_to(byz, (f,) + byz.shape)
+
+
+def foe(honest: Array, f: int, eta: float = 2.0, **_) -> Array:
+    """Fall of Empires: (1 - eta) * sbar  (a_t = -sbar)."""
+    mean, _ = _mean_std(honest)
+    byz = (1.0 - eta) * mean
+    return jnp.broadcast_to(byz, (f,) + byz.shape)
+
+
+def sign_flip(honest: Array, f: int, **_) -> Array:
+    """Sign flipping: B_t = -sbar (FOE with eta = 2)."""
+    return foe(honest, f, eta=2.0)
+
+
+def mimic(honest: Array, f: int, *, target: Optional[Array] = None, **_) -> Array:
+    """Mimic: all Byzantine workers copy one honest worker.
+
+    Paper heuristic [26]: mimic the honest worker most aligned with the top
+    principal direction of the honest stack — approximated here by one power
+    iteration from the honest mean-centered stack (cheap and jit-safe).
+    `target` overrides with an explicit worker index.
+    """
+    h = honest.astype(jnp.float32)
+    if target is None:
+        centered = h - h.mean(axis=0, keepdims=True)
+        # one power-iteration step: v ~ top eigvec of centered^T centered
+        v = centered.sum(axis=0)
+        v = centered.T @ (centered @ v)
+        norm = jnp.linalg.norm(v) + 1e-12
+        scores = centered @ (v / norm)
+        target = jnp.argmax(jnp.abs(scores))
+    byz = h[target]
+    return jnp.broadcast_to(byz, (f,) + byz.shape)
+
+
+def _optimized(base: Callable, honest: Array, f: int, agg_closure: Callable,
+               **kw) -> Array:
+    """Grid-search eta maximizing ||F(attacked) - honest mean||.
+
+    agg_closure: (full stack (n, d)) -> (d,) — the deployed aggregator,
+    including pre-aggregation; the attacker is assumed omniscient (worst
+    case), per the paper's optimized ALIE/FOE protocol.
+    """
+    mean = honest.astype(jnp.float32).mean(axis=0)
+
+    def damage(eta):
+        byz = base(honest, f, eta=eta, **kw)
+        out = agg_closure(jnp.concatenate([honest.astype(jnp.float32), byz]))
+        return jnp.sum((out - mean) ** 2)
+
+    etas = jnp.asarray(_ETA_GRID, dtype=jnp.float32)
+    damages = jax.lax.map(damage, etas)
+    best = etas[jnp.argmax(damages)]
+    return base(honest, f, eta=best, **kw)
+
+
+def alie_opt(honest: Array, f: int, *, agg_closure: Callable, **kw) -> Array:
+    return _optimized(alie, honest, f, agg_closure, **kw)
+
+
+def foe_opt(honest: Array, f: int, *, agg_closure: Callable, **kw) -> Array:
+    return _optimized(foe, honest, f, agg_closure, **kw)
+
+
+ATTACKS: dict[str, Callable] = {
+    "alie": alie,
+    "foe": foe,
+    "sf": sign_flip,
+    "mimic": mimic,
+    "alie_opt": alie_opt,
+    "foe_opt": foe_opt,
+}
+
+
+def apply_attack(name: str, honest: Array, f: int, **kw) -> Array:
+    """Attacked full stack (n, d): honest rows followed by f Byzantine rows.
+
+    name == "none" or "lf" returns honest rows untouched on the vector side
+    (LF acts through the data pipeline).
+    """
+    if f == 0 or name in ("none", "lf"):
+        # For "lf" the Byzantine rows are honest *computations* on flipped
+        # labels and already live in `honest`'s companion rows upstream.
+        return honest
+    if name not in ATTACKS:
+        raise ValueError(f"unknown attack {name!r}; known: {sorted(ATTACKS)}")
+    byz = ATTACKS[name](honest, f, **kw)
+    return jnp.concatenate([honest.astype(jnp.float32), byz], axis=0)
+
+
+# ---------------------------------------------------------------------------
+# Pytree-stack attacks (distributed trainer integration).
+#
+# Leaves carry a leading worker axis; honest rows are [: n-f], Byzantine
+# rows [n-f :] get overwritten.  Coordinate-wise primitives apply leaf-wise;
+# Mimic's global target selection runs in gram space (n x n replicated).
+# ---------------------------------------------------------------------------
+
+def _tree_honest(tree, n_honest):
+    return jax.tree_util.tree_map(lambda l: l[:n_honest], tree)
+
+
+def apply_attack_tree(name: str, tree, f: int, *, eta: float | None = None,
+                      agg_closure: Callable | None = None,
+                      eta_grid: tuple = _ETA_GRID):
+    """Attacked worker-stacked pytree (worker axis leading on every leaf).
+
+    ``agg_closure`` (tree -> aggregated tree) enables the optimized
+    ALIE/FOE eta line search, evaluated on the full pytree.
+    """
+    if f == 0 or name in ("none", "lf"):
+        return tree
+    leaves = jax.tree_util.tree_leaves(tree)
+    n = leaves[0].shape[0]
+    nh = n - f
+
+    def leafwise(make_byz):
+        def go(leaf):
+            h = leaf[:nh].astype(jnp.float32)
+            byz = make_byz(h)
+            out = jnp.concatenate([h, jnp.broadcast_to(byz, (f,) + byz.shape)])
+            return out.astype(leaf.dtype)
+        return jax.tree_util.tree_map(go, tree)
+
+    if name in ("alie", "foe", "sf", "alie_opt", "foe_opt"):
+        base = name.split("_")[0]
+        if name.endswith("_opt"):
+            assert agg_closure is not None, "optimized attacks need agg_closure"
+            best_eta = _tree_eta_search(base, tree, nh, f, agg_closure, eta_grid)
+        else:
+            best_eta = eta if eta is not None else (1.0 if base == "alie" else 2.0)
+        if base == "alie":
+            mk = lambda h: h.mean(0) + best_eta * h.std(0)
+        else:  # foe / sf
+            e = 2.0 if name == "sf" else best_eta
+            mk = lambda h: (1.0 - e) * h.mean(0)
+        return leafwise(mk)
+
+    if name == "mimic":
+        from repro.core import robust as robust_lib
+        honest = _tree_honest(tree, nh)
+        g = robust_lib.tree_gram(honest)
+        # Gram of the centered stack: C = (I - 11^T/n) G (I - 11^T/n)
+        c = g - g.mean(0, keepdims=True) - g.mean(1, keepdims=True) + g.mean()
+        # one power-iteration in coefficient space
+        v = c @ jnp.ones((nh,), jnp.float32)
+        v = c @ (c @ v)
+        scores = jnp.abs(v)
+        target = jnp.argmax(scores)
+        return leafwise(lambda h: h[target])
+
+    raise ValueError(f"unknown attack {name!r}")
+
+
+def _tree_eta_search(base: str, tree, nh: int, f: int, agg_closure, eta_grid):
+    """Pick eta maximizing || F(attacked) - honest mean ||^2 over the tree."""
+    honest = _tree_honest(tree, nh)
+
+    def damage(eta):
+        attacked = apply_attack_tree(base, tree, f, eta=eta)
+        agg = agg_closure(attacked)
+        tot = 0.0
+        for a, h in zip(jax.tree_util.tree_leaves(agg),
+                        jax.tree_util.tree_leaves(honest)):
+            mean = h.astype(jnp.float32).mean(0)
+            tot = tot + jnp.sum((a.astype(jnp.float32) - mean) ** 2)
+        return tot
+
+    etas = jnp.asarray(eta_grid, jnp.float32)
+    damages = jax.lax.map(damage, etas)
+    return etas[jnp.argmax(damages)]

@@ -1,0 +1,58 @@
+"""Bucketing (Karimireddy et al. 2022) — the randomized baseline the paper
+compares against (and outperforms; see paper Appendix 10).
+
+Randomly permutes the n inputs, averages consecutive groups of size s, and
+feeds the ceil(n/s) bucket means to the downstream rule with an adjusted
+Byzantine count.  The heterogeneity reduction holds only in expectation over
+the permutation — Observation 1 in the paper shows no worst-case guarantee
+exists, which our kappa-hat benchmark reproduces empirically.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def default_bucket_size(n: int, f: int) -> int:
+    """Paper / [26] choice: s = floor(n / 2f) (>= 1)."""
+    if f <= 0:
+        return 1
+    return max(1, n // (2 * f))
+
+
+def bucketing(x: Array, f: int, key: Array, *, bucket_size: int | None = None
+              ) -> tuple[Array, int]:
+    """Returns (bucket means (ceil(n/s), d), adjusted f).
+
+    Every bucket touched by >= 1 Byzantine input is arbitrarily manipulable,
+    so the adjusted Byzantine count for the downstream rule stays f (each
+    Byzantine input contaminates at most one bucket) while the population
+    shrinks to ceil(n/s) — exactly the paper's Observation 2 trade-off.
+    """
+    n = x.shape[0]
+    s = bucket_size if bucket_size is not None else default_bucket_size(n, f)
+    s = max(1, min(s, n))
+    perm = jax.random.permutation(key, n)
+    xp = x.astype(jnp.float32)[perm]
+    n_buckets = -(-n // s)  # ceil
+    pad = n_buckets * s - n
+    if pad:
+        # Ragged tail bucket: pad with zeros and renormalize by true count.
+        xp = jnp.concatenate([xp, jnp.zeros((pad, x.shape[1]), jnp.float32)])
+        counts = jnp.minimum(
+            jnp.full((n_buckets,), s), n - jnp.arange(n_buckets) * s
+        ).astype(jnp.float32)
+    else:
+        counts = jnp.full((n_buckets,), float(s))
+    sums = xp.reshape(n_buckets, s, -1).sum(axis=1)
+    means = sums / counts[:, None]
+    # Downstream rule must still satisfy f' < n_buckets / 2.
+    f_adj = min(f, max(0, (n_buckets - 1) // 2)) if f else 0
+    return means, f_adj
+
+
+def bucketing_means(x: Array, f: int, key: Array, *, bucket_size: int | None = None
+                    ) -> Array:
+    return bucketing(x, f, key, bucket_size=bucket_size)[0]

@@ -1,0 +1,172 @@
+"""Gram-space machinery for distributed robust aggregation.
+
+Krum, Multi-Krum, GM (Weiszfeld) and MDA depend on the worker stack
+``x : (n, d)`` only through its Gram matrix ``G = x @ x.T`` (n x n).  On a
+pod, G is accumulated leaf-by-leaf / block-by-block with a worker-axis
+all-gather and a feature contraction, and the final output is a linear
+combination ``coeff @ x``.  This module implements the *small replicated*
+side of that pipeline: everything that maps G -> coefficients.
+
+All functions are jit-safe and operate on fp32 n x n matrices.
+"""
+from __future__ import annotations
+
+import itertools
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+
+
+def gram(x: Array) -> Array:
+    """Plain Gram matrix of a (n, d) stack in fp32."""
+    x = x.astype(jnp.float32)
+    return x @ x.T
+
+
+def pdist_sq_from_gram(g: Array) -> Array:
+    """Pairwise squared distances ||x_i - x_j||^2 from the Gram matrix."""
+    diag = jnp.diagonal(g)
+    d2 = diag[:, None] - 2.0 * g + diag[None, :]
+    # Numerical floor: distances are nonnegative; bf16/fp32 rounding can
+    # produce tiny negatives that break sqrt/sort stability downstream.
+    return jnp.maximum(d2, 0.0)
+
+
+def mixed_gram(g: Array, m: Array) -> Array:
+    """Gram matrix of the mixed stack Y = M @ X, i.e. M G M^T."""
+    return m @ g @ m.T
+
+
+# ---------------------------------------------------------------------------
+# Neighbor selection / scoring (all O(n^2) replicated math).
+# ---------------------------------------------------------------------------
+
+def nnm_matrix(d2: Array, f: int) -> Array:
+    """NNM mixing matrix from squared distances.
+
+    Row i averages the n-f nearest neighbors of x_i (itself included, since
+    d(i,i)=0 is always minimal).  Returns an (n, n) row-stochastic matrix M
+    such that Y = M @ X is the NNM output (paper Alg. 2).
+    """
+    n = d2.shape[0]
+    k = n - f
+    # Indices of the k smallest distances per row.
+    _, idx = jax.lax.top_k(-d2, k)
+    mask = jax.nn.one_hot(idx, n, dtype=jnp.float32).sum(axis=1)
+    return mask / float(k)
+
+
+def krum_coeff(d2: Array, f: int) -> Array:
+    """One-hot selection vector for (our adaptation of) Krum.
+
+    Scores each candidate j by the sum of squared distances to its n-f
+    nearest neighbors (paper §8.1.2, discarding f furthest) and selects the
+    argmin.  Output c satisfies Krum(x) = c @ x.
+    """
+    n = d2.shape[0]
+    k = n - f
+    neigh, _ = jax.lax.top_k(-d2, k)   # negated distances, k smallest
+    scores = -neigh.sum(axis=1)
+    return jax.nn.one_hot(jnp.argmin(scores), n, dtype=jnp.float32)
+
+
+def multikrum_coeff(d2: Array, f: int) -> Array:
+    """Multi-Krum: average of the n-f best Krum-scoring candidates."""
+    n = d2.shape[0]
+    k = n - f
+    neigh, _ = jax.lax.top_k(-d2, k)
+    scores = -neigh.sum(axis=1)
+    _, best = jax.lax.top_k(-scores, k)
+    c = jax.nn.one_hot(best, n, dtype=jnp.float32).sum(axis=0)
+    return c / float(k)
+
+
+def gm_coeff(g: Array, f: int, iters: int = 8, eps: float = 1e-8) -> Array:
+    """Weiszfeld coefficients for the geometric median, in gram space.
+
+    Maintains y = w @ x implicitly via its coefficient vector w.  The
+    distances ||y - x_i|| needed by each Weiszfeld step are computed from G:
+        ||y - x_i||^2 = w G w^T - 2 (G w)_i + G_ii.
+    Uses the smoothed update of Pillutla et al. (the approximation the paper
+    itself uses, ref [38]).
+    """
+    del f  # GM does not need f; kept for interface uniformity.
+    n = g.shape[0]
+    diag = jnp.diagonal(g)
+
+    def step(w, _):
+        gw = g @ w
+        quad = w @ gw
+        d2 = jnp.maximum(diag - 2.0 * gw + quad, 0.0)
+        inv = 1.0 / jnp.sqrt(d2 + eps)
+        w_new = inv / inv.sum()
+        return w_new, None
+
+    w0 = jnp.full((n,), 1.0 / n, dtype=jnp.float32)
+    w, _ = jax.lax.scan(step, w0, None, length=iters)
+    return w
+
+
+# ---------------------------------------------------------------------------
+# MDA: minimum-diameter averaging.
+# ---------------------------------------------------------------------------
+
+_MDA_EXACT_LIMIT = 60_000
+
+
+def _subsets(n: int, f: int) -> np.ndarray:
+    """All (n-f)-subsets of [n] as an int32 array (static, host-side)."""
+    combos = list(itertools.combinations(range(n), n - f))
+    return np.asarray(combos, dtype=np.int32)
+
+
+def mda_coeff(d2: Array, f: int) -> Array:
+    """Coefficients of minimum-diameter averaging.
+
+    Exact subset enumeration for C(n, f) <= 60k (covers the paper's n=17,
+    f<=8); greedy diameter pruning beyond (iteratively drop the point with
+    the largest max-distance) — documented in DESIGN.md.
+    """
+    n = d2.shape[0]
+    import math
+    if f == 0:
+        return jnp.full((n,), 1.0 / n, dtype=jnp.float32)
+    if math.comb(n, f) <= _MDA_EXACT_LIMIT:
+        subs = jnp.asarray(_subsets(n, f))          # (S, n-f)
+        sub_d = d2[subs[:, :, None], subs[:, None, :]]  # (S, n-f, n-f)
+        diam = sub_d.max(axis=(1, 2))
+        best = subs[jnp.argmin(diam)]
+        c = jax.nn.one_hot(best, n, dtype=jnp.float32).sum(axis=0)
+        return c / float(n - f)
+    # Greedy: drop the worst point f times.
+    alive = jnp.ones((n,), dtype=jnp.float32)
+
+    def drop(alive, _):
+        masked = jnp.where(alive[None, :] * alive[:, None] > 0, d2, -jnp.inf)
+        worst = jnp.argmax(masked.max(axis=1))
+        return alive.at[worst].set(0.0), None
+
+    alive, _ = jax.lax.scan(drop, alive, None, length=f)
+    return alive / alive.sum()
+
+
+def coeff_for_rule(rule: str, g: Array, f: int, *, gm_iters: int = 8,
+                   gm_eps: float = 1e-8) -> Array:
+    """Dispatch: Gram matrix -> linear-combination coefficients."""
+    n = g.shape[0]
+    if rule == "average":
+        return jnp.full((n,), 1.0 / n, dtype=jnp.float32)
+    d2 = pdist_sq_from_gram(g)
+    if rule == "krum":
+        return krum_coeff(d2, f)
+    if rule == "multikrum":
+        return multikrum_coeff(d2, f)
+    if rule == "gm":
+        return gm_coeff(g, f, iters=gm_iters, eps=gm_eps)
+    if rule == "mda":
+        return mda_coeff(d2, f)
+    raise ValueError(f"{rule!r} is not a gram-space rule")

@@ -1,0 +1,220 @@
+"""Distributed robust aggregation over *pytrees* of per-worker stacks.
+
+This is the first-class integration point of the paper's technique into the
+training framework.  Inputs are pytrees whose every leaf carries a leading
+worker axis ``n`` (sharded over the mesh worker axes by the caller via
+``vmap(spmd_axis_name=...)``); the output is the aggregated pytree without
+the worker axis, sharded like the parameters.
+
+Two execution strategies (DESIGN.md §3):
+
+* **gram path** (average / krum / multikrum / gm / mda, with or without
+  NNM): accumulate the n x n Gram matrix leaf-by-leaf (GSPMD turns the
+  leaf einsum into a worker-axis all-gather + model-sharded contraction),
+  derive the linear-combination coefficients from G alone, and apply them
+  leaf-by-leaf.  Peak memory: n x (largest leaf shard).
+* **coordinate path** (cwtm / cwmed / meamed): optionally mix leaves with
+  the NNM matrix (itself from the gram pass) then sort/trim along the
+  worker axis, leaf-by-leaf.  On TPU the fused Pallas `mixtrim` kernel
+  implements mix+trim per VMEM block; here we emit the jnp form that XLA
+  fuses similarly.
+
+Both paths do ranking-sensitive arithmetic in fp32.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.bucketing import default_bucket_size as _default_bucket_size
+from repro.core import gram as gramlib
+from repro.core.types import AggregatorSpec, COORDINATE_RULES, GRAM_RULES
+
+Array = jax.Array
+PyTree = Any
+
+
+def tree_gram(tree: PyTree) -> Array:
+    """Accumulate the (n, n) fp32 Gram matrix over all leaves.
+
+    Leaves have shape (n, ...).  The per-leaf contraction is what GSPMD
+    converts into the worker-axis all-gather; the n x n result replicates.
+    """
+    leaves = jax.tree_util.tree_leaves(tree)
+    n = leaves[0].shape[0]
+    g = jnp.zeros((n, n), dtype=jnp.float32)
+    for leaf in leaves:
+        # Contract in the leaf's own dtype (fp32 accumulate): when the
+        # caller pre-cast the stack to bf16 for transport, the worker-axis
+        # all-gather must move bf16 bytes — an eager astype(f32) here would
+        # silently re-inflate the collective (measured; §Perf).
+        flat = leaf.reshape(n, -1)
+        g = g + jax.lax.dot_general(flat, flat, (((1,), (1,)), ((), ())),
+                                    preferred_element_type=jnp.float32)
+    return g
+
+
+def tree_sketch_gram(tree: PyTree, sketch_dim: int, key: Array) -> Array:
+    """Gram matrix of a structured sketch of the stack (beyond-paper §Perf).
+
+    Chunked signed-sum (CountSketch with bucket = position mod sketch_dim
+    and random per-chunk signs): each worker folds its own rows into a
+    (n, sketch_dim) sketch *locally* — O(d) work, O(sketch_dim) memory,
+    and only the tiny sketch crosses the worker axis.  Distance RANKS —
+    all NNM's neighbor selection needs — are preserved with high
+    probability; coefficients are still applied to the exact stack.
+    """
+    leaves = jax.tree_util.tree_leaves(tree)
+    n = leaves[0].shape[0]
+    sk = jnp.zeros((n, sketch_dim), jnp.float32)
+    for i, leaf in enumerate(leaves):
+        flat = leaf.reshape(n, -1)
+        d = flat.shape[1]
+        pad = (-d) % sketch_dim
+        if pad:
+            flat = jnp.pad(flat, ((0, 0), (0, pad)))
+        chunks = flat.reshape(n, -1, sketch_dim)
+        kproj = jax.random.fold_in(key, i)
+        signs = jax.random.rademacher(
+            kproj, (chunks.shape[1],), dtype=jnp.float32)
+        sk = sk + jnp.einsum("ncs,c->ns", chunks, signs,
+                             preferred_element_type=jnp.float32)
+    return sk @ sk.T
+
+
+def tree_combine(tree: PyTree, coeff: Array) -> PyTree:
+    """R = coeff @ X, leaf by leaf (contraction over the worker axis).
+
+    The contraction runs in the leaf's dtype (fp32 accumulation) so bf16
+    transport stacks are gathered as bf16 (see tree_gram note)."""
+    def comb(leaf):
+        return jnp.einsum("n,n...->...", coeff.astype(leaf.dtype), leaf,
+                          preferred_element_type=jnp.float32)
+    return jax.tree_util.tree_map(comb, tree)
+
+
+def tree_mix(tree: PyTree, m: Array) -> PyTree:
+    """Y = M @ X, leaf by leaf, keeping the worker axis (dtype-preserving,
+    fp32 accumulation — see tree_gram note)."""
+    def mix(leaf):
+        return jnp.einsum("mn,n...->m...", m.astype(leaf.dtype), leaf,
+                          preferred_element_type=jnp.float32)
+    return jax.tree_util.tree_map(mix, tree)
+
+
+def _tree_coordinate_rule(tree: PyTree, rule: str, f: int) -> PyTree:
+    """Apply a coordinate-wise rule along the worker axis of every leaf."""
+    def apply(leaf):
+        n = leaf.shape[0]
+        x = leaf.astype(jnp.float32)
+        if rule == "cwmed":
+            out = jnp.median(x, axis=0)
+        elif rule == "cwtm":
+            if f == 0:
+                out = x.mean(axis=0)
+            else:
+                xs = jnp.sort(x, axis=0)
+                out = jax.lax.slice_in_dim(xs, f, n - f, axis=0).mean(axis=0)
+        elif rule == "meamed":
+            med = jnp.median(x, axis=0, keepdims=True)
+            order = jnp.argsort(jnp.abs(x - med), axis=0)
+            xs = jnp.take_along_axis(x, order, axis=0)
+            out = jax.lax.slice_in_dim(xs, 0, n - f, axis=0).mean(axis=0)
+        else:
+            raise ValueError(rule)
+        return out
+    return jax.tree_util.tree_map(apply, tree)
+
+
+def _tree_bucket(tree: PyTree, f: int, key: Array,
+                 bucket_size: Optional[int]) -> tuple[PyTree, int]:
+    """Bucketing on pytrees: one shared permutation across all leaves.
+
+    Ragged tails are handled exactly (paper: n=17, s=2 -> 9 buckets, one
+    singleton): zero-pad and renormalize by true bucket occupancy."""
+    leaves = jax.tree_util.tree_leaves(tree)
+    n = leaves[0].shape[0]
+    s = bucket_size if bucket_size is not None else _default_bucket_size(n, f)
+    s = max(1, min(s, n))
+    perm = jax.random.permutation(key, n)
+    n_buckets = -(-n // s)
+    pad = n_buckets * s - n
+    counts = jnp.minimum(jnp.full((n_buckets,), s),
+                         n - jnp.arange(n_buckets) * s).astype(jnp.float32)
+
+    def bucket(leaf):
+        x = leaf[perm].astype(jnp.float32)
+        if pad:
+            x = jnp.concatenate(
+                [x, jnp.zeros((pad,) + leaf.shape[1:], jnp.float32)])
+        sums = x.reshape((n_buckets, s) + leaf.shape[1:]).sum(axis=1)
+        return sums / counts.reshape((n_buckets,) + (1,) * (leaf.ndim - 1))
+
+    f_adj = min(f, max(0, (n_buckets - 1) // 2)) if f else 0
+    return jax.tree_util.tree_map(bucket, tree), f_adj
+
+
+def robust_aggregate(tree: PyTree, spec: AggregatorSpec, *,
+                     key: Optional[Array] = None,
+                     return_coeff: bool = False) -> PyTree:
+    """Full distributed pipeline: pre-aggregation + rule on a worker-stacked
+    pytree.  Returns the aggregated pytree (worker axis removed).
+
+    With ``return_coeff=True`` additionally returns the effective linear
+    coefficient vector when one exists (gram rules), else None — used by the
+    kappa-hat diagnostics.
+    """
+    f = spec.f
+    work = tree
+    mix_matrix = None
+
+    if spec.pre == "bucketing":
+        if key is None:
+            raise ValueError("bucketing requires a PRNG key")
+        work, f = _tree_bucket(work, f, key, spec.bucket_size)
+
+    if spec.transport_dtype == "bf16":
+        # Halve the worker-axis all-gather bytes; coefficient math below
+        # stays fp32 (EXPERIMENTS.md §Perf).
+        work = jax.tree_util.tree_map(
+            lambda l: l.astype(jnp.bfloat16), work)
+
+    if spec.sketch_dim and key is not None:
+        g = tree_sketch_gram(work, spec.sketch_dim, key)
+    else:
+        g = tree_gram(work)
+
+    if spec.pre == "nnm":
+        d2 = gramlib.pdist_sq_from_gram(g)
+        mix_matrix = gramlib.nnm_matrix(d2, f)
+        # Gram of the mixed stack is M G M^T — free, no second data pass.
+        g = gramlib.mixed_gram(g, mix_matrix)
+
+    if spec.rule in GRAM_RULES:
+        coeff = gramlib.coeff_for_rule(spec.rule, g, f,
+                                       gm_iters=spec.gm_iters, gm_eps=spec.gm_eps)
+        if mix_matrix is not None:
+            coeff = coeff @ mix_matrix   # R = c^T (M X) = (c^T M) X
+        out = tree_combine(work, coeff)
+        return (out, coeff) if return_coeff else out
+
+    if spec.rule in COORDINATE_RULES:
+        if mix_matrix is not None:
+            work = tree_mix(work, mix_matrix)
+        out = _tree_coordinate_rule(work, spec.rule, f)
+        if return_coeff:
+            return out, None
+        return out
+
+    raise ValueError(f"unknown rule {spec.rule!r}")
+
+
+def flatten_stack(tree: PyTree) -> Array:
+    """Debug/test helper: concatenate a worker-stacked pytree to (n, D)."""
+    leaves = jax.tree_util.tree_leaves(tree)
+    n = leaves[0].shape[0]
+    return jnp.concatenate([l.reshape(n, -1).astype(jnp.float32) for l in leaves],
+                           axis=1)

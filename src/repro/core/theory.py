@@ -1,0 +1,115 @@
+"""Theoretical quantities from the paper, as executable code.
+
+Used by tests (property-checking (f, kappa)-robustness with the exact Table 1
+coefficients) and by the convergence benchmarks (Theorem 1/2 error bounds).
+"""
+from __future__ import annotations
+
+import math
+
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# Table 1 / Appendix 8.1 robustness coefficients (exact, incl. constants).
+# ---------------------------------------------------------------------------
+
+def kappa(rule: str, n: int, f: int) -> float:
+    """Exact (f, kappa)-robustness coefficient proved in Appendix 8.1."""
+    if rule == "average" and f == 0:
+        return 0.0
+    return _kappa_pos(rule, n, f)
+
+
+def _kappa_pos(rule: str, n: int, f: int) -> float:
+    if n <= 2 * f:
+        raise ValueError("kappa undefined for n <= 2f")
+    r = f / (n - 2 * f)
+    if rule == "cwtm":
+        # Prop. 2: 6f/(n-2f) (1 + f/(n-2f))
+        return 6.0 * r * (1.0 + r)
+    if rule == "krum":
+        # Prop. 3: 6 (1 + f/(n-2f))
+        return 6.0 * (1.0 + r)
+    if rule in ("gm", "cwmed"):
+        # Prop. 4/5: 4 (1 + f/(n-2f))^2
+        return 4.0 * (1.0 + r) ** 2
+    if rule == "average":
+        return 0.0
+    raise ValueError(f"no proved kappa for rule {rule!r}")
+
+
+def kappa_lower_bound(n: int, f: int) -> float:
+    """Universal lower bound (Prop. 6): kappa >= f/(n-2f)."""
+    return f / (n - 2 * f)
+
+
+def nnm_kappa(base_kappa: float, n: int, f: int) -> float:
+    """Lemma 1: F∘NNM is (f, kappa')-robust with kappa' <= 8f/(n-f)(kappa+1)."""
+    return 8.0 * f / (n - f) * (base_kappa + 1.0)
+
+
+def nnm_variance_factor(n: int, f: int) -> float:
+    """Lemma 5: var(Y_S) + bias^2 <= [8f/(n-f)] var(X_S)."""
+    return 8.0 * f / (n - f)
+
+
+# ---------------------------------------------------------------------------
+# Convergence bounds.
+# ---------------------------------------------------------------------------
+
+def dgd_bound(kappa_: float, g_sq: float, smooth_l: float, loss_gap: float,
+              steps: int) -> float:
+    """Theorem 1: ||grad L_H(theta_hat)||^2 <= 4 kappa G^2 + 4 L Delta / T."""
+    return 4.0 * kappa_ * g_sq + 4.0 * smooth_l * loss_gap / steps
+
+
+def dshb_bound(kappa_: float, g_sq: float, sigma_sq: float, smooth_l: float,
+               loss_gap: float, n: int, f: int, steps: int) -> float:
+    """Theorem 2 expected-error bound with the paper's explicit constants."""
+    a1 = 36.0
+    a2 = 6.0 * math.sqrt(max(loss_gap, 0.0))
+    a3 = 1728.0 * smooth_l
+    a4 = 288.0 * smooth_l
+    a5 = 6.0 * smooth_l * a2 ** 2
+    a_k = math.sqrt(a3 * kappa_ + a4 / (n - f))
+    sigma = math.sqrt(sigma_sq)
+    t = float(steps)
+    bound = a1 * kappa_ * g_sq + a2 * a_k * sigma / math.sqrt(t) + a5 / t
+    if a_k > 0:
+        bound += a2 * a4 * sigma / (n * a_k * t ** 1.5)
+    return bound
+
+
+def dshb_hyperparams(smooth_l: float, loss_gap: float, kappa_: float,
+                     sigma_sq: float, n: int, f: int, steps: int
+                     ) -> tuple[float, float]:
+    """Theorem 2's (learning rate, momentum beta) prescription."""
+    a2 = 6.0 * math.sqrt(max(loss_gap, 1e-12))
+    a3 = 1728.0 * smooth_l
+    a4 = 288.0 * smooth_l
+    a_k = math.sqrt(a3 * kappa_ + a4 / (n - f))
+    sigma = math.sqrt(max(sigma_sq, 1e-12))
+    gamma = min(1.0 / (24.0 * smooth_l), a2 / (2.0 * a_k * sigma * math.sqrt(steps)))
+    beta = math.sqrt(max(0.0, 1.0 - 24.0 * gamma * smooth_l))
+    return gamma, beta
+
+
+def resilience_lower_bound(n: int, f: int, g_sq: float) -> float:
+    """Prop. 1 / Appendix 12 explicit constant: eps >= f/(4(n-2f)) G^2."""
+    return f / (4.0 * (n - 2 * f)) * g_sq
+
+
+def empirical_kappa_hat(agg_out, stack, honest_idx=None):
+    """kappa_hat_t of Eq. (26): ||R - mbar||^2 / mean_i ||m_i - mbar||^2.
+
+    `stack` are the honest rows (or the full stack with `honest_idx`).
+    Returns the *squared* ratio's square root companion per the paper's
+    figure (they plot kappa_hat, we return kappa_hat^2's sqrt = kappa_hat).
+    """
+    h = stack if honest_idx is None else stack[honest_idx]
+    h = h.astype(jnp.float32)
+    mbar = h.mean(axis=0)
+    num = jnp.sum((agg_out.astype(jnp.float32) - mbar) ** 2)
+    den = jnp.mean(jnp.sum((h - mbar) ** 2, axis=-1)) + 1e-20
+    return jnp.sqrt(num / den)

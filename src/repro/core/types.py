@@ -1,0 +1,67 @@
+"""Shared types for the Byzantine-robust aggregation core.
+
+The canonical input of every aggregation primitive is a 2-D stack
+``x : (n, d)`` holding one vector per worker.  Pytree-level wrappers live in
+:mod:`repro.core.robust`.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+# An aggregation rule maps (n, d) -> (d,).
+AggFn = Callable[..., Array]
+
+
+@dataclasses.dataclass(frozen=True)
+class AggregatorSpec:
+    """Fully describes a robust aggregation pipeline.
+
+    Attributes:
+      rule: base rule name ("average", "krum", "multikrum", "gm", "cwmed",
+        "cwtm", "mda", "meamed").
+      f: number of Byzantine workers tolerated (f < n/2).
+      pre: optional pre-aggregation ("nnm", "bucketing", or None).
+      bucket_size: Bucketing bucket size s (defaults to floor(n / 2f)).
+      gm_iters: Weiszfeld iteration count for GM.
+      gm_eps: Weiszfeld smoothing epsilon.
+    """
+
+    rule: str = "cwtm"
+    f: int = 0
+    pre: Optional[str] = "nnm"
+    bucket_size: Optional[int] = None
+    gm_iters: int = 8
+    gm_eps: float = 1e-8
+    # --- beyond-paper performance options (EXPERIMENTS.md §Perf) ---
+    # Transport dtype for the worker-axis all-gathers.  Distance ranks and
+    # all gram/coefficient math stay fp32; bf16 transport halves the
+    # dominant collective bytes at the cost of ~3 mantissa digits on the
+    # gathered values themselves.
+    transport_dtype: Optional[str] = None          # None (=fp32) | "bf16"
+    # Johnson-Lindenstrauss sketch for neighbor selection: the Gram pass
+    # runs on a (n, sketch_dim) random projection computed worker-locally,
+    # removing one of the two full-stack all-gather passes for the
+    # coordinate-wise rules.  0 disables (paper-faithful exact distances).
+    sketch_dim: int = 0
+
+    def describe(self) -> str:
+        pre = f"{self.pre}+" if self.pre else ""
+        return f"{pre}{self.rule}(f={self.f})"
+
+
+#: Rules whose output is a linear combination coeff @ x with coeff a pure
+#: function of the Gram matrix.  For these the distributed pipeline never
+#: materializes the mixed stack (see DESIGN.md §3).
+GRAM_RULES = frozenset({"average", "krum", "multikrum", "gm", "mda"})
+
+#: Rules that operate coordinate-wise on the (optionally mixed) stack.
+COORDINATE_RULES = frozenset({"cwmed", "cwtm", "meamed"})
+
+ALL_RULES = tuple(sorted(GRAM_RULES | COORDINATE_RULES))
+
+ATTACKS = ("none", "alie", "foe", "sf", "lf", "mimic", "alie_opt", "foe_opt")

@@ -1,0 +1,9 @@
+from repro.data.dirichlet import dirichlet_proportions, heterogeneity_g2, partition_by_class
+from repro.data.pipeline import WorkerDataset, build_heterogeneous, full_batches, worker_batches
+from repro.data.synthetic import make_classification, make_lm_corpus
+
+__all__ = [
+    "dirichlet_proportions", "heterogeneity_g2", "partition_by_class",
+    "WorkerDataset", "build_heterogeneous", "full_batches", "worker_batches",
+    "make_classification", "make_lm_corpus",
+]

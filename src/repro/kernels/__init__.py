@@ -1,0 +1,12 @@
+"""Pallas TPU kernels for the robust-aggregation hot spots.
+
+Each kernel subpackage follows the kernel.py (pl.pallas_call + BlockSpec)
+/ ops.py (jit'd wrapper) / ref.py (pure-jnp oracle) layout.  Kernels target
+TPU VMEM/MXU tiling and are validated in interpret mode on CPU; the
+distributed (GSPMD) path uses the oracles so the CPU dry-run lowers, and
+deployments flip to the kernels on real TPU hardware.
+"""
+from repro.kernels.gram import gram, gram_ref
+from repro.kernels.mixtrim import mixtrim, mixtrim_ref
+
+__all__ = ["gram", "gram_ref", "mixtrim", "mixtrim_ref"]

@@ -1,0 +1,56 @@
+"""Pallas TPU kernel: blocked Gram matrix accumulation.
+
+The robust-aggregation hot spot is the O(n^2 d) pairwise structure over the
+worker gradient stack.  On TPU we stream the (n, d) stack through VMEM in
+(n, BLK_D) tiles and accumulate the tiny (n, n) Gram matrix with the MXU:
+
+    HBM:  X (n, d)                      --- d is huge (per-shard params)
+    VMEM: X_blk (n, BLK_D)              --- one tile per grid step
+    MXU:  G += X_blk @ X_blk^T          --- (n, BLK_D) x (BLK_D, n)
+
+n is the worker count (16 / 32; multiple of 8 so the sublane dim is
+hardware-aligned) and BLK_D is a multiple of 128 (lane dim / MXU-aligned).
+The (n, n) accumulator lives in the output VMEM block, revisited by every
+grid step (standard reduce-into-output pattern).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _gram_kernel(x_ref, o_ref):
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x = x_ref[...].astype(jnp.float32)
+    o_ref[...] += jax.lax.dot_general(
+        x, x, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("block_d", "interpret"))
+def gram_pallas(x: jax.Array, *, block_d: int = 512, interpret: bool = False
+                ) -> jax.Array:
+    """G = X X^T via the blocked Pallas kernel.
+
+    Args:
+      x: (n, d) stack; d must be a multiple of ``block_d`` (ops.py pads).
+      block_d: VMEM tile width, multiple of 128.
+      interpret: run the kernel body in the Pallas interpreter (CPU).
+    """
+    n, d = x.shape
+    assert d % block_d == 0, (d, block_d)
+    grid = (d // block_d,)
+    return pl.pallas_call(
+        _gram_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((n, block_d), lambda i: (0, i))],
+        out_specs=pl.BlockSpec((n, n), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, n), jnp.float32),
+        interpret=interpret,
+    )(x)

@@ -1,0 +1,31 @@
+"""Jit'd public wrapper for the Gram kernel (padding + dispatch)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.gram.kernel import gram_pallas
+from repro.kernels.gram.ref import gram_ref
+
+
+@functools.partial(jax.jit, static_argnames=("block_d", "use_pallas", "interpret"))
+def gram(x: jax.Array, *, block_d: int = 512, use_pallas: bool = True,
+         interpret: bool | None = None) -> jax.Array:
+    """Gram matrix of a (n, d) stack.
+
+    Pads d up to a multiple of ``block_d`` with zeros (exact: zero columns
+    contribute nothing to X X^T) and dispatches to the Pallas kernel, or to
+    the jnp oracle when ``use_pallas=False``.  ``interpret=None`` resolves
+    to True off-TPU so the same call site works everywhere.
+    """
+    if not use_pallas:
+        return gram_ref(x)
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    n, d = x.shape
+    pad = (-d) % block_d
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad)))
+    return gram_pallas(x, block_d=block_d, interpret=interpret)

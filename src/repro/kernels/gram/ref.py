@@ -1,0 +1,8 @@
+"""Pure-jnp oracle for the blocked Gram kernel."""
+import jax.numpy as jnp
+
+
+def gram_ref(x):
+    """Gram matrix X X^T of a (n, d) stack, accumulated in fp32."""
+    xf = x.astype(jnp.float32)
+    return xf @ xf.T

@@ -1,0 +1,35 @@
+"""Jit'd public wrapper for the fused mix+trim kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.mixtrim.kernel import mixtrim_pallas
+from repro.kernels.mixtrim.ref import mixtrim_ref
+
+
+@functools.partial(jax.jit, static_argnames=("f", "mode", "block_d",
+                                             "use_pallas", "interpret"))
+def mixtrim(x: jax.Array, m: jax.Array, *, f: int, mode: str = "trim",
+            block_d: int = 512, use_pallas: bool = True,
+            interpret: bool | None = None) -> jax.Array:
+    """Fused NNM-mix + coordinate-wise trim/median of a (n, d) stack.
+
+    Pads d to a multiple of ``block_d`` (zero columns mix/sort/trim to an
+    exact zero tail which is sliced off).  Falls back to the jnp oracle when
+    n is not a power of two (the bitonic network requirement) or when
+    ``use_pallas=False``.
+    """
+    n, d = x.shape
+    if not use_pallas or n & (n - 1) != 0:
+        return mixtrim_ref(x, m, f, mode)
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    pad = (-d) % block_d
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad)))
+    out = mixtrim_pallas(x, m, f=f, mode=mode, block_d=block_d,
+                         interpret=interpret)
+    return out[:d]

@@ -1,0 +1,29 @@
+"""Pure-jnp oracle for the fused NNM-mix + coordinate-wise-trim kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def mixtrim_ref(x, m, f: int, mode: str = "trim"):
+    """Fused Y = M @ X followed by a coordinate-wise robust reduction.
+
+    Args:
+      x: (n, d) worker stack.
+      m: (n, n) mixing matrix (identity = no NNM).
+      f: trim count.
+      mode: "trim" (CWTM over the mixed stack) or "med" (CWMed).
+
+    Returns: (d,) aggregated vector, fp32.
+    """
+    n = x.shape[0]
+    y = m.astype(jnp.float32) @ x.astype(jnp.float32)
+    ys = jnp.sort(y, axis=0)
+    if mode == "trim":
+        if f == 0:
+            return y.mean(axis=0)
+        return ys[f : n - f].mean(axis=0)
+    if mode == "med":
+        if n % 2 == 1:
+            return ys[n // 2]
+        return 0.5 * (ys[n // 2 - 1] + ys[n // 2])
+    raise ValueError(mode)

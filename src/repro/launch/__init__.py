@@ -1,0 +1,12 @@
+"""Launch layer: mesh construction, dry-run, training driver.
+
+NOTE: do not import repro.launch.dryrun from here — it sets XLA_FLAGS at
+import time and must only be imported as the program entry point.
+"""
+from repro.launch.mesh import (
+    HBM_BW, ICI_BW, PEAK_FLOPS, make_debug_mesh, make_production_mesh,
+    mesh_axes_for, n_workers,
+)
+
+__all__ = ["HBM_BW", "ICI_BW", "PEAK_FLOPS", "make_debug_mesh",
+           "make_production_mesh", "mesh_axes_for", "n_workers"]

@@ -1,0 +1,50 @@
+"""Production mesh construction + per-arch mesh-axes resolution.
+
+Defined as FUNCTIONS so importing this module never touches jax device
+state (required: the dry-run sets XLA_FLAGS before any jax init).
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.configs.base import ModelConfig
+from repro.models.common import MeshAxes, pad_heads
+
+#: TPU v5e hardware constants for the roofline (see system assignment).
+PEAK_FLOPS = 197e12          # bf16 FLOP/s per chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link
+
+MODEL_PAR = 16
+DATA_PAR = 16
+PODS = 2
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (PODS, DATA_PAR, MODEL_PAR) if multi_pod else (DATA_PAR, MODEL_PAR)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_debug_mesh(data: int = 2, model: int = 2):
+    """Small mesh for CPU integration tests (host-device override)."""
+    return jax.make_mesh((data, model), ("data", "model"))
+
+
+def mesh_axes_for(cfg: ModelConfig, *, multi_pod: bool = False,
+                  model_par: int = MODEL_PAR,
+                  data_axes: tuple[str, ...] | None = None,
+                  pad_kv: bool = False) -> MeshAxes:
+    """Resolve per-arch sharding switches for a mesh geometry."""
+    if data_axes is None:
+        data_axes = ("pod", "data") if multi_pod else ("data",)
+    _, hkv_p, _, shard_kv = pad_heads(cfg.num_heads, cfg.num_kv_heads,
+                                      model_par, pad_kv=pad_kv)
+    shard_expert = cfg.num_experts > 0 and cfg.num_experts % model_par == 0
+    return MeshAxes(data=tuple(data_axes), model="model", model_par=model_par,
+                    shard_kv=shard_kv, shard_expert=shard_expert,
+                    pad_kv_to_mesh=pad_kv)
+
+
+def n_workers(*, multi_pod: bool = False) -> int:
+    return DATA_PAR * (PODS if multi_pod else 1)

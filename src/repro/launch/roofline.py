@@ -1,0 +1,164 @@
+"""Roofline terms from compiled dry-run artifacts.
+
+compute    = HLO_FLOPs       / (chips * PEAK_FLOPS)
+memory     = HLO_bytes       / (chips * HBM_BW)
+collective = collective_bytes / (chips * ICI_BW)
+
+``cost_analysis`` supplies flops / bytes; collective bytes come from
+parsing the optimized HLO: every all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute instruction's *operand* sizes, resolved
+through a name -> bytes symbol table built from instruction definitions.
+
+NOTE on per-device vs global: under SPMD partitioning XLA emits ONE
+per-device module; cost_analysis numbers and parsed collective bytes are
+therefore per-device.  The roofline divides global quantities by chip
+count — per-device numbers are already that quotient, so terms use them
+directly (validated against analytic 6*N*D in EXPERIMENTS.md §Dry-run).
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+    "token": 0, "opaque": 0,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?(%?[\w.\-]+)\s*=\s*(.+?)\s+"
+                     r"([a-z][a-z0-9\-]*)\(", re.ASCII)
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def shape_bytes(shape_str: str) -> int:
+    """Total bytes of an HLO shape string (handles tuples)."""
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict[str, int]:
+    """Sum of operand bytes per collective kind, via a symbol table."""
+    # Pass 1: name -> result bytes.
+    sizes: dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        m = _DEF_RE.match(line)
+        if not m:
+            continue
+        name, shape_part, _op = m.groups()
+        sizes[name.lstrip("%")] = shape_bytes(shape_part)
+
+    # Pass 2: collective instructions -> sum named operand sizes.
+    out = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        m = _DEF_RE.match(line)
+        if not m:
+            continue
+        _name, _shape, op = m.groups()
+        kind = next((k for k in _COLLECTIVES if op.startswith(k)), None)
+        if kind is None:
+            continue
+        # operand list: everything inside the first (...) after the op name
+        call = line[m.end() - 1:]
+        depth, args, buf = 0, [], ""
+        for ch in call:
+            if ch == "(":
+                depth += 1
+                if depth == 1:
+                    continue
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    args.append(buf)
+                    break
+            if depth >= 1:
+                buf += ch
+        operand_names = re.findall(r"%?([\w.\-]+)", args[0] if args else "")
+        b = sum(sizes.get(nm, 0) for nm in operand_names if nm in sizes)
+        if b == 0:
+            # fall back to the result size (e.g. fused operand exprs)
+            b = shape_bytes(_shape)
+        out[kind] += b
+    return out
+
+
+@dataclass
+class RooflineTerms:
+    flops: float
+    hbm_bytes: float
+    coll_bytes: float
+    peak_flops: float
+    hbm_bw: float
+    ici_bw: float
+
+    @property
+    def compute_s(self) -> float:
+        return self.flops / self.peak_flops
+
+    @property
+    def memory_s(self) -> float:
+        return self.hbm_bytes / self.hbm_bw
+
+    @property
+    def collective_s(self) -> float:
+        return self.coll_bytes / self.ici_bw
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    def as_dict(self) -> dict:
+        return {
+            "flops_per_device": self.flops,
+            "hbm_bytes_per_device": self.hbm_bytes,
+            "collective_bytes_per_device": self.coll_bytes,
+            "compute_s": self.compute_s,
+            "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "dominant": self.dominant,
+        }
+
+
+def model_flops(cfg, n_tokens: int) -> float:
+    """Analytic MODEL_FLOPS = 6 * N_active * tokens (decode: tokens=batch)."""
+    n_active = active_params(cfg)
+    return 6.0 * n_active * n_tokens
+
+
+def total_params(cfg) -> float:
+    from repro.models import build_model
+    import jax
+    descs = build_model(cfg).param_descs()
+    tot = 0
+    for d in jax.tree_util.tree_leaves(
+            descs, is_leaf=lambda x: hasattr(x, "shape") and hasattr(x, "init")):
+        n = 1
+        for s in d.shape:
+            n *= s
+        tot += n
+    return float(tot)
+
+
+def active_params(cfg) -> float:
+    """Parameters touched per token (MoE: top-k of E experts)."""
+    tot = total_params(cfg)
+    if cfg.num_experts:
+        expert = 3.0 * cfg.num_experts * cfg.d_model * cfg.d_ff * cfg.num_layers
+        active_frac = cfg.experts_per_token / cfg.num_experts
+        return tot - expert * (1.0 - active_frac)
+    return tot

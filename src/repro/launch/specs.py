@@ -1,0 +1,99 @@
+"""ShapeDtypeStruct stand-ins + PartitionSpecs for every model input.
+
+``input_specs(cfg, shape, ...)`` returns (abstract batch tree, spec tree)
+for the given assigned input shape — the dry-run lowers against these with
+no device allocation.  The same builders produce real (host numpy) batches
+for the CPU-scale integration tests via ``materialize_batch``.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import InputShape, ModelConfig
+from repro.models.common import MeshAxes
+
+PyTree = Any
+
+
+def _train_batch_shapes(cfg: ModelConfig, shape: InputShape, n_workers: int
+                        ) -> dict[str, tuple[tuple[int, ...], Any]]:
+    """{name: (shape, dtype)} with a leading worker axis."""
+    assert shape.global_batch % n_workers == 0, (shape.global_batch, n_workers)
+    pw = shape.global_batch // n_workers
+    seq = shape.seq_len
+    out: dict[str, tuple[tuple[int, ...], Any]] = {}
+    if cfg.family == "vlm":
+        text = seq - cfg.num_patches
+        out["tokens"] = ((n_workers, pw, text), jnp.int32)
+        out["labels"] = ((n_workers, pw, text), jnp.int32)
+        out["patches"] = ((n_workers, pw, cfg.num_patches, cfg.vision_dim),
+                          jnp.bfloat16)
+    elif cfg.family == "encdec":
+        out["tokens"] = ((n_workers, pw, seq), jnp.int32)
+        out["labels"] = ((n_workers, pw, seq), jnp.int32)
+        out["frames"] = ((n_workers, pw, cfg.encoder_seq, cfg.d_model),
+                         jnp.bfloat16)
+    else:
+        out["tokens"] = ((n_workers, pw, seq), jnp.int32)
+        out["labels"] = ((n_workers, pw, seq), jnp.int32)
+    return out
+
+
+def train_input_specs(cfg: ModelConfig, shape: InputShape, axes: MeshAxes,
+                      n_workers: int) -> tuple[PyTree, PyTree]:
+    shapes = _train_batch_shapes(cfg, shape, n_workers)
+    abstract = {k: jax.ShapeDtypeStruct(s, d) for k, (s, d) in shapes.items()}
+    specs = {k: P(axes.data) for k in shapes}
+    return abstract, specs
+
+
+def prefill_input_specs(cfg: ModelConfig, shape: InputShape, axes: MeshAxes
+                        ) -> tuple[PyTree, PyTree]:
+    b, seq = shape.global_batch, shape.seq_len
+    batch_spec = axes.data if b > 1 else None
+    out, specs = {}, {}
+    if cfg.family == "vlm":
+        text = seq - cfg.num_patches
+        out["tokens"] = jax.ShapeDtypeStruct((b, text), jnp.int32)
+        out["patches"] = jax.ShapeDtypeStruct((b, cfg.num_patches, cfg.vision_dim),
+                                              jnp.bfloat16)
+        specs = {"tokens": P(batch_spec), "patches": P(batch_spec)}
+    elif cfg.family == "encdec":
+        out["tokens"] = jax.ShapeDtypeStruct((b, seq), jnp.int32)
+        out["frames"] = jax.ShapeDtypeStruct((b, cfg.encoder_seq, cfg.d_model),
+                                             jnp.bfloat16)
+        specs = {"tokens": P(batch_spec), "frames": P(batch_spec)}
+    else:
+        out["tokens"] = jax.ShapeDtypeStruct((b, seq), jnp.int32)
+        specs = {"tokens": P(batch_spec)}
+    return out, specs
+
+
+def decode_input_specs(cfg: ModelConfig, shape: InputShape, axes: MeshAxes
+                       ) -> tuple[PyTree, PyTree]:
+    """(tokens, pos) for one decode step; the cache comes from cache_descs."""
+    b = shape.global_batch
+    batch_spec = axes.data if b > 1 else None
+    abstract = {
+        "tokens": jax.ShapeDtypeStruct((b, 1), jnp.int32),
+        "pos": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+    specs = {"tokens": P(batch_spec), "pos": P()}
+    return abstract, specs
+
+
+def materialize_batch(cfg: ModelConfig, shapes: dict, seed: int = 0) -> dict:
+    """Real numpy batch matching _train_batch_shapes (integration tests)."""
+    rng = np.random.default_rng(seed)
+    out = {}
+    for k, v in shapes.items():
+        if v.dtype == jnp.int32:
+            out[k] = rng.integers(0, cfg.vocab_size, size=v.shape).astype(np.int32)
+        else:
+            out[k] = rng.normal(size=v.shape).astype(np.float32)
+    return out

@@ -1,0 +1,11 @@
+"""Model zoo: the 10 assigned architectures, pure JAX."""
+from repro.models.registry import build_model
+from repro.models.common import (
+    MeshAxes, ParamDesc, abstract, constrain, materialize, mesh_axes_scope,
+    partition_specs, set_mesh_axes,
+)
+
+__all__ = [
+    "build_model", "MeshAxes", "ParamDesc", "abstract", "constrain",
+    "materialize", "mesh_axes_scope", "partition_specs", "set_mesh_axes",
+]

@@ -1,0 +1,140 @@
+"""Chunked (gated) linear-attention scans shared by Mamba2/SSD and RWKV6.
+
+Both families are diagonal linear recurrences over a matrix-valued state
+S in R^{K x V} per head:
+
+    S_t = diag(lambda_t) S_{t-1} + k_t v_t^T          (lambda in (0, 1])
+    y_t = q_t^T S_t            (+ RWKV "bonus": q_t^T diag(u) k_t v_t^T)
+
+Mamba2 (SSD) uses a scalar-per-head decay; RWKV6 ("Finch") a data-dependent
+per-channel decay.  The chunked parallel form processes the sequence in
+chunks of Q tokens: intra-chunk contributions use a masked (Q, Q) kernel
+matrix, inter-chunk state flows through a jax.lax.scan over chunks — depth
+S/Q instead of S, and the chunk math is MXU-friendly einsums.
+
+Numerical note: the factorized intra-chunk evaluation computes each pair
+contribution as (q_i e^{c_i}) . (k_j e^{-c_j}); per-element fp32 relative
+error is magnitude-independent, so the only failure mode is overflow /
+underflow of an individual factor, i.e. |cumlog| ≳ 80.  Factors are clamped
+at ±CLIP=80 and models clamp the per-step log-decay (so a default chunk of
+64 stays far inside the safe region); see DESIGN.md.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+CLIP = 80.0
+#: models clamp per-step log-decay to >= -MAX_STEP_DECAY so that
+#: chunk * MAX_STEP_DECAY < CLIP with margin.
+MAX_STEP_DECAY = 1.0
+
+
+def _chunk(x: Array, q: int) -> Array:
+    b, s = x.shape[:2]
+    assert s % q == 0, (s, q)
+    return x.reshape((b, s // q, q) + x.shape[2:])
+
+
+def gla_chunked(q_in: Array, k_in: Array, v_in: Array, log_decay: Array,
+                *, chunk: int = 64, u: Array | None = None,
+                init_state: Array | None = None) -> tuple[Array, Array]:
+    """Per-channel-decay chunked linear attention (RWKV6 / GLA).
+
+    Args:
+      q_in, k_in: (B, S, H, K); v_in: (B, S, H, V).
+      log_decay: (B, S, H, K), <= 0; decay applied *before* the new kv write
+        at each step (S_t = diag(w_t) S_{t-1} + k_t v_t^T).
+      u: optional (H, K) bonus weighting the *current* token (RWKV6).
+      init_state: optional (B, H, K, V).
+    Returns: (y (B, S, H, V), final_state (B, H, K, V)).
+    """
+    b, s, h, kdim = q_in.shape
+    vdim = v_in.shape[-1]
+    qc = _chunk(q_in.astype(jnp.float32), chunk)
+    kc = _chunk(k_in.astype(jnp.float32), chunk)
+    vc = _chunk(v_in.astype(jnp.float32), chunk)
+    wc = _chunk(log_decay.astype(jnp.float32), chunk)
+    nck = qc.shape[1]
+
+    # Cumulative log-decay within each chunk.  Reads differ between the two
+    # recurrences: without u the output taps S_t (post-update, inclusive
+    # decay exponent); with u (RWKV6) it taps S_{t-1} + u (.) k v (exclusive
+    # exponent).
+    cum = jnp.cumsum(wc, axis=2)                       # (B, nc, Q, H, K)
+    total = cum[:, :, -1]                              # (B, nc, H, K)
+    read_cum = (cum - wc) if u is not None else cum    # exclusive vs inclusive
+
+    # Stable factorizations (see module docstring).
+    q_scaled = qc * jnp.exp(jnp.clip(read_cum, -CLIP, CLIP))
+    k_scaled = kc * jnp.exp(jnp.clip(-cum, -CLIP, CLIP))
+    k_carry = kc * jnp.exp(jnp.clip(total[:, :, None] - cum, -CLIP, CLIP))
+
+    # Intra-chunk kernel: A[i, j] = sum_k q'_i k'_j, strictly causal.
+    a = jnp.einsum("bnihk,bnjhk->bnhij", q_scaled, k_scaled)
+    mask = jnp.tril(jnp.ones((chunk, chunk), bool), k=-1)
+    a = jnp.where(mask[None, None, None], a, 0.0)
+    y_intra = jnp.einsum("bnhij,bnjhv->bnihv", a, vc)
+
+    # Diagonal (current-token) term: u-weighted bonus for RWKV6, plain
+    # post-update read otherwise.
+    if u is not None:
+        diag = jnp.einsum("bnihk,hk,bnihk->bnih", qc, u.astype(jnp.float32), kc)
+    else:
+        diag = jnp.einsum("bnihk,bnihk->bnih", qc, kc)
+    y_intra = y_intra + diag[..., None] * vc
+
+    # Inter-chunk: scan the state across chunks.
+    if init_state is None:
+        init_state = jnp.zeros((b, h, kdim, vdim), jnp.float32)
+
+    def step(state, inputs):
+        q_s, k_c, v_c, tot = inputs
+        y_inter = jnp.einsum("bihk,bhkv->bihv", q_s, state)
+        new = state * jnp.exp(jnp.clip(tot, -CLIP, 0.0))[..., None] + \
+            jnp.einsum("bihk,bihv->bhkv", k_c, v_c)
+        return new, y_inter
+
+    xs = (jnp.moveaxis(q_scaled, 1, 0), jnp.moveaxis(k_carry, 1, 0),
+          jnp.moveaxis(vc, 1, 0), jnp.moveaxis(total, 1, 0))
+    final, y_inter = jax.lax.scan(step, init_state.astype(jnp.float32), xs)
+    y = y_intra + jnp.moveaxis(y_inter, 0, 1)
+    return y.reshape(b, s, h, vdim), final
+
+
+def gla_decode_step(state: Array, q: Array, k: Array, v: Array,
+                    log_decay: Array, u: Array | None = None
+                    ) -> tuple[Array, Array]:
+    """Single-token recurrence.  state: (B, H, K, V); q/k/log_decay:
+    (B, H, K); v: (B, H, V).  Returns (y (B, H, V), new_state)."""
+    state = state.astype(jnp.float32)
+    kv = jnp.einsum("bhk,bhv->bhkv", k.astype(jnp.float32), v.astype(jnp.float32))
+    if u is not None:
+        eff = state + u.astype(jnp.float32)[None, :, :, None] * kv
+        y = jnp.einsum("bhk,bhkv->bhv", q.astype(jnp.float32), eff)
+        new = state * jnp.exp(jnp.clip(log_decay.astype(jnp.float32), -CLIP, 0))[..., None] + kv
+    else:
+        new = state * jnp.exp(jnp.clip(log_decay.astype(jnp.float32), -CLIP, 0))[..., None] + kv
+        y = jnp.einsum("bhk,bhkv->bhv", q.astype(jnp.float32), new)
+    return y, new
+
+
+def gla_naive(q_in: Array, k_in: Array, v_in: Array, log_decay: Array,
+              *, u: Array | None = None, init_state: Array | None = None
+              ) -> tuple[Array, Array]:
+    """Token-by-token oracle for tests (jax.lax.scan over time)."""
+    b, s, h, kdim = q_in.shape
+    vdim = v_in.shape[-1]
+    if init_state is None:
+        init_state = jnp.zeros((b, h, kdim, vdim), jnp.float32)
+
+    def step(state, inputs):
+        q, k, v, w = inputs
+        y, new = gla_decode_step(state, q, k, v, w, u)
+        return new, y
+
+    xs = tuple(jnp.moveaxis(x.astype(jnp.float32), 1, 0)
+               for x in (q_in, k_in, v_in, log_decay))
+    final, ys = jax.lax.scan(step, init_state, xs)
+    return jnp.moveaxis(ys, 0, 1), final

@@ -1,0 +1,46 @@
+"""Feed-forward blocks: SwiGLU (llama-family) and GELU (whisper)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import ParamDesc, constrain
+
+Array = jax.Array
+
+
+def swiglu_params(cfg: ModelConfig, layers: int, d_ff: int | None = None) -> dict:
+    d = cfg.d_model
+    ff = d_ff or cfg.d_ff
+    L = (layers,) if layers else ()
+    lax = ("layers",) if layers else ()
+    return {
+        "wi": ParamDesc(L + (d, ff), cfg.dtype, lax + ("embed", "ff")),
+        "wg": ParamDesc(L + (d, ff), cfg.dtype, lax + ("embed", "ff")),
+        "wo": ParamDesc(L + (ff, d), cfg.dtype, lax + ("ff", "embed")),
+    }
+
+
+def swiglu(p: dict, x: Array) -> Array:
+    h = jax.nn.silu(x @ p["wg"]) * (x @ p["wi"])
+    h = constrain(h, "batch", None, "ff")
+    return h @ p["wo"]
+
+
+def gelu_mlp_params(cfg: ModelConfig, layers: int) -> dict:
+    d, ff = cfg.d_model, cfg.d_ff
+    L = (layers,) if layers else ()
+    lax = ("layers",) if layers else ()
+    return {
+        "wi": ParamDesc(L + (d, ff), cfg.dtype, lax + ("embed", "ff")),
+        "bi": ParamDesc(L + (ff,), cfg.dtype, lax + ("ff",), "zeros"),
+        "wo": ParamDesc(L + (ff, d), cfg.dtype, lax + ("ff", "embed")),
+        "bo": ParamDesc(L + (d,), cfg.dtype, lax + ("embed",), "zeros"),
+    }
+
+
+def gelu_mlp(p: dict, x: Array) -> Array:
+    h = jax.nn.gelu(x @ p["wi"] + p["bi"])
+    h = constrain(h, "batch", None, "ff")
+    return h @ p["wo"] + p["bo"]

@@ -1,0 +1,108 @@
+"""Mixture-of-Experts with top-k routing and capacity-based dispatch.
+
+GSPMD-native formulation: tokens are dispatched *per group*, where a group
+is one batch row (GShard-style).  The dispatch buffer is (B, E, C, d) with
+B sharded over the data axes and E over the model axis (arctic, 128e); for
+expert counts not divisible by the mesh (mixtral, 8e) the per-expert ff dim
+shards instead.  Positions within each (group, expert) are computed with a
+stable argsort — no one-hot (T, E, C) tensors — and tokens beyond capacity
+drop (GShard).  On a real pod the scatter lowers to the data<->model
+all-to-all.
+
+FSDP experts (giant MoE; DESIGN.md §Arch-applicability): when the mesh axes
+context sets ``expert_fsdp``, expert weights additionally shard over the
+data axes (ZeRO-3 style), which is what makes 480B-scale training fit —
+at the cost of per-worker expert gradients never existing (selective
+robustness; see repro.training.trainer).
+
+Includes the standard load-balance auxiliary loss (Switch eq. 4).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import ParamDesc, constrain
+
+Array = jax.Array
+
+
+def moe_params(cfg: ModelConfig, layers: int) -> dict:
+    d, ff, e = cfg.d_model, cfg.d_ff, cfg.num_experts
+    L = (layers,) if layers else ()
+    lax = ("layers",) if layers else ()
+    p = {
+        "router": ParamDesc(L + (d, e), jnp.float32, lax + ("embed", "expert")),
+        "wi": ParamDesc(L + (e, d, ff), cfg.dtype,
+                        lax + ("expert", "expert_embed", "ff_inner")),
+        "wg": ParamDesc(L + (e, d, ff), cfg.dtype,
+                        lax + ("expert", "expert_embed", "ff_inner")),
+        "wo": ParamDesc(L + (e, ff, d), cfg.dtype,
+                        lax + ("expert", "ff_inner", "expert_embed")),
+    }
+    if cfg.moe_dense_ff:
+        from repro.models import mlp
+        p["dense"] = mlp.swiglu_params(cfg, layers, d_ff=cfg.moe_dense_ff)
+    return p
+
+
+def _dispatch_group(x: Array, probs: Array, k: int, cap: int):
+    """Single group.  x: (t, d); probs: (t, e).  Returns
+    (buf (e, cap, d), flat_assign (t*k,), pos (t*k,), weights (t*k,))."""
+    t, d = x.shape
+    e = probs.shape[-1]
+    gates, assign = jax.lax.top_k(probs, k)                  # (t, k)
+    gates = gates / (gates.sum(axis=-1, keepdims=True) + 1e-9)
+
+    flat = assign.reshape(-1)
+    order = jnp.argsort(flat, stable=True)
+    counts = jnp.zeros((e,), jnp.int32).at[flat].add(1)
+    starts = jnp.cumsum(counts) - counts
+    pos_sorted = jnp.arange(t * k, dtype=jnp.int32) - starts[flat[order]]
+    pos = jnp.zeros((t * k,), jnp.int32).at[order].set(pos_sorted)
+    keep = pos < cap
+    pos_c = jnp.minimum(pos, cap - 1)
+    w = (gates.reshape(-1) * keep).astype(x.dtype)
+
+    xk = jnp.repeat(x, k, axis=0)                            # (t*k, d)
+    buf = jnp.zeros((e, cap, d), x.dtype).at[flat, pos_c].add(
+        xk * keep[:, None].astype(x.dtype))
+    return buf, flat, pos_c, w
+
+
+def moe_block(p: dict, x: Array, cfg: ModelConfig) -> tuple[Array, Array]:
+    """x: (B, S, d) -> (out (B, S, d), aux_loss scalar).  Groups = batch rows."""
+    b, s, d = x.shape
+    e, k = cfg.num_experts, cfg.experts_per_token
+    cap = int(cfg.capacity_factor * s * k / e) + 1
+
+    logits = (x.astype(jnp.float32) @ p["router"])           # (B, S, e)
+    probs = jax.nn.softmax(logits, axis=-1)
+
+    # Load-balance aux (Switch): e * mean_e( fraction_e * router_prob_e ).
+    top1 = jnp.argmax(probs, axis=-1)
+    frac = jnp.mean(jax.nn.one_hot(top1, e, dtype=jnp.float32), axis=(0, 1))
+    aux = cfg.router_aux_weight * e * jnp.sum(frac * probs.mean(axis=(0, 1)))
+
+    buf, flat, pos_c, w = jax.vmap(
+        lambda xg, pg: _dispatch_group(xg, pg, k, cap))(x, probs)
+    buf = constrain(buf, "batch", "expert", None, None)
+
+    h = jax.nn.silu(jnp.einsum("becd,edf->becf", buf, p["wg"])) * \
+        jnp.einsum("becd,edf->becf", buf, p["wi"])
+    h = constrain(h, "batch", "expert", None, "ff_act")
+    out_buf = jnp.einsum("becf,efd->becd", h, p["wo"])
+    out_buf = constrain(out_buf, "batch", "expert", None, None)
+
+    # Combine: gather each (token, k) slot back and weight by its gate.
+    def combine(ob, fl, pc, wg):                             # per group
+        picked = ob[fl, pc]                                  # (s*k, d)
+        return (picked * wg[:, None]).reshape(s, k, d).sum(axis=1)
+
+    out = jax.vmap(combine)(out_buf, flat, pos_c, w)
+
+    if "dense" in p:                                         # arctic residual
+        from repro.models import mlp
+        out = out + mlp.swiglu(p["dense"], x)
+    return out, aux

@@ -1,0 +1,14 @@
+"""Model registry: ModelConfig -> assembled model object."""
+from __future__ import annotations
+
+from repro.configs.base import ModelConfig
+from repro.models.encdec import EncDecLM
+from repro.models.lm import DecoderLM
+
+
+def build_model(cfg: ModelConfig):
+    if cfg.family == "encdec":
+        return EncDecLM(cfg)
+    if cfg.family in ("dense", "moe", "vlm", "ssm", "hybrid"):
+        return DecoderLM(cfg)
+    raise ValueError(f"unknown family {cfg.family!r}")

@@ -1,0 +1,152 @@
+"""RWKV6 ("Finch") block: attention-free time mix with data-dependent
+per-channel decay, plus the RWKV channel mix.
+
+Faithful structure (arXiv:2404.05892), with the low-rank "token-shift
+dynamic mixing" simplified to static per-channel lerp coefficients and a
+single low-rank data-dependent decay projection (documented in DESIGN.md).
+The core recurrence — diag(w_t) state decay with the u-bonus on the current
+token — is exact, via :func:`repro.models.linear_scan.gla_chunked`.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import linear_scan
+from repro.models.common import ParamDesc, constrain, rms_norm
+
+Array = jax.Array
+DECAY_LORA = 64
+
+
+def _dims(cfg: ModelConfig) -> tuple[int, int, int]:
+    from repro.models import common
+    ctx = common.get_mesh_axes()
+    par = ctx.model_par if ctx else 1
+    h, hd = cfg.ssm_heads, cfg.ssm_head_dim
+    if par > 1 and h % par:
+        h = -(-h // par) * par          # mesh head padding (DESIGN.md)
+    return h, hd, h * hd
+
+
+def rwkv_params(cfg: ModelConfig, layers: int) -> dict:
+    d = cfg.d_model
+    h, hd, inner = _dims(cfg)
+    L = (layers,) if layers else ()
+    lax = ("layers",) if layers else ()
+    lora = min(DECAY_LORA, d)
+    return {
+        # time-mix lerp coefficients for r/k/v/w/g streams
+        "mix": ParamDesc(L + (5, d), cfg.dtype, lax + (None, "embed"), "ones", 0.5),
+        "wr": ParamDesc(L + (d, inner), cfg.dtype, lax + ("embed", "heads")),
+        "wk": ParamDesc(L + (d, inner), cfg.dtype, lax + ("embed", "heads")),
+        "wv": ParamDesc(L + (d, inner), cfg.dtype, lax + ("embed", "heads")),
+        "wg": ParamDesc(L + (d, inner), cfg.dtype, lax + ("embed", "heads")),
+        # data-dependent decay: low-rank projection + bias
+        "wd1": ParamDesc(L + (d, lora), cfg.dtype, lax + ("embed", None)),
+        "wd2": ParamDesc(L + (lora, inner), cfg.dtype, lax + (None, "heads")),
+        "decay_bias": ParamDesc(L + (inner,), jnp.float32, lax + ("heads",),
+                                "ones", -1.0),
+        "u": ParamDesc(L + (h, hd), jnp.float32, lax + (None, None), "ones", 0.5),
+        "ln_g": ParamDesc(L + (inner,), cfg.dtype, lax + ("heads",), "ones"),
+        "wo": ParamDesc(L + (inner, d), cfg.dtype, lax + ("heads", "embed")),
+        # channel mix
+        "cmix": ParamDesc(L + (2, d), cfg.dtype, lax + (None, "embed"), "ones", 0.5),
+        "ck": ParamDesc(L + (d, cfg.d_ff), cfg.dtype, lax + ("embed", "ff")),
+        "cv": ParamDesc(L + (cfg.d_ff, d), cfg.dtype, lax + ("ff", "embed")),
+        "cr": ParamDesc(L + (d, d), cfg.dtype, lax + ("embed", "embed")),
+    }
+
+
+def _token_shift(x: Array, prev: Array | None = None) -> Array:
+    """x_{t-1} stream; prev supplies the carry for decode (B, d)."""
+    if prev is None:
+        return jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, : x.shape[1]]
+    return prev[:, None]
+
+
+def _streams(p: dict, x: Array, shifted: Array):
+    mix = p["mix"]
+    lerp = lambda i: x + (shifted - x) * mix[i]
+    return lerp(0), lerp(1), lerp(2), lerp(3), lerp(4)   # r k v w g
+
+
+def _log_decay(p: dict, xw: Array) -> Array:
+    dd = jnp.tanh(xw @ p["wd1"]) @ p["wd2"]
+    raw = p["decay_bias"] + dd.astype(jnp.float32)
+    # w_t = exp(-exp(raw)); clamp per-step log decay for the chunked scan.
+    return -jnp.clip(jnp.exp(raw), 1e-6, linear_scan.MAX_STEP_DECAY)
+
+
+def time_mix(p: dict, x: Array, cfg: ModelConfig) -> Array:
+    b, s, d = x.shape
+    h, hd, inner = _dims(cfg)
+    xr, xk, xv, xw, xg = _streams(p, x, _token_shift(x))
+    r = (xr @ p["wr"]).reshape(b, s, h, hd)
+    k = (xk @ p["wk"]).reshape(b, s, h, hd)
+    v = (xv @ p["wv"]).reshape(b, s, h, hd)
+    g = jax.nn.silu(xg @ p["wg"])
+    w = _log_decay(p, xw).reshape(b, s, h, hd)
+
+    y, _ = linear_scan.gla_chunked(r, k, v, w, chunk=cfg.ssm_chunk, u=p["u"])
+    y = y.reshape(b, s, inner).astype(x.dtype)
+    y = constrain(y, "batch", None, "heads")
+    y = rms_norm(y, p["ln_g"], cfg.norm_eps) * g
+    return y @ p["wo"]
+
+
+def channel_mix(p: dict, x: Array, cfg: ModelConfig) -> Array:
+    shifted = _token_shift(x)
+    cm = p["cmix"]
+    xk = x + (shifted - x) * cm[0]
+    xr = x + (shifted - x) * cm[1]
+    k = jnp.square(jax.nn.relu(xk @ p["ck"]))
+    k = constrain(k, "batch", None, "ff")
+    return (k @ p["cv"]) * jax.nn.sigmoid(xr @ p["cr"])
+
+
+# ---------------------------------------------------------------------------
+# Decode.
+# ---------------------------------------------------------------------------
+
+def rwkv_cache_desc(cfg: ModelConfig, layers: int, batch: int) -> dict:
+    h, hd, inner = _dims(cfg)
+    d = cfg.d_model
+    baxis = "batch" if batch > 1 else None
+    return {
+        "state": ParamDesc((layers, batch, h, hd, hd), jnp.float32,
+                           ("layers", baxis, "heads", None, None), "zeros"),
+        "tshift": ParamDesc((layers, batch, d), jnp.float32,
+                            ("layers", baxis, "embed"), "zeros"),
+        "cshift": ParamDesc((layers, batch, d), jnp.float32,
+                            ("layers", baxis, "embed"), "zeros"),
+    }
+
+
+def time_mix_decode(p: dict, x: Array, state: Array, tshift: Array,
+                    cfg: ModelConfig):
+    """x: (B, 1, d); state: (B, H, hd, hd); tshift: (B, d)."""
+    b = x.shape[0]
+    h, hd, inner = _dims(cfg)
+    xr, xk, xv, xw, xg = _streams(p, x, _token_shift(x, tshift.astype(x.dtype)))
+    r = (xr @ p["wr"]).reshape(b, h, hd)
+    k = (xk @ p["wk"]).reshape(b, h, hd)
+    v = (xv @ p["wv"]).reshape(b, h, hd)
+    g = jax.nn.silu(xg @ p["wg"])[:, 0]
+    w = _log_decay(p, xw).reshape(b, h, hd)
+
+    y, new_state = linear_scan.gla_decode_step(state, r, k, v, w, u=p["u"])
+    y = y.reshape(b, inner).astype(x.dtype)
+    y = rms_norm(y, p["ln_g"], cfg.norm_eps) * g
+    return (y @ p["wo"])[:, None], new_state, x[:, 0].astype(jnp.float32)
+
+
+def channel_mix_decode(p: dict, x: Array, cshift: Array, cfg: ModelConfig):
+    shifted = _token_shift(x, cshift.astype(x.dtype))
+    cm = p["cmix"]
+    xk = x + (shifted - x) * cm[0]
+    xr = x + (shifted - x) * cm[1]
+    k = jnp.square(jax.nn.relu(xk @ p["ck"]))
+    out = (k @ p["cv"]) * jax.nn.sigmoid(xr @ p["cr"])
+    return out, x[:, 0].astype(jnp.float32)

@@ -1,0 +1,151 @@
+"""Mamba2 (SSD) block — the recurrent backbone of zamba2.
+
+Simplifications vs the reference CUDA implementation (documented in
+DESIGN.md): single B/C group, short-conv applied to the concatenated
+(x, B, C) stream via four shifted adds (kernel size 4, causal), and the
+chunked scan from :mod:`repro.models.linear_scan` with a per-head scalar
+decay (the SSD structure).  The state-expand factor and head layout follow
+the paper: d_inner = expand * d_model = H * P, state size N.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import linear_scan
+from repro.models.common import ParamDesc, constrain
+
+Array = jax.Array
+CONV_K = 4
+
+
+def _dims(cfg: ModelConfig) -> tuple[int, int, int, int]:
+    from repro.models import common
+    ctx = common.get_mesh_axes()
+    par = ctx.model_par if ctx else 1
+    h, p, n = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    if par > 1 and h % par:
+        h = -(-h // par) * par          # mesh head padding (DESIGN.md)
+    d_inner = h * p
+    return h, p, n, d_inner
+
+
+def ssm_params(cfg: ModelConfig, layers: int) -> dict:
+    d = cfg.d_model
+    h, p, n, d_inner = _dims(cfg)
+    L = (layers,) if layers else ()
+    lax = ("layers",) if layers else ()
+    conv_dim = d_inner + 2 * n
+    return {
+        # projections: z (gate), x, B, C, dt
+        "in_proj": ParamDesc(L + (d, 2 * d_inner + 2 * n + h), cfg.dtype,
+                             lax + ("embed", "ff")),
+        "conv_w": ParamDesc(L + (CONV_K, conv_dim), cfg.dtype,
+                            lax + (None, "ff"), "normal", 0.5),
+        "conv_b": ParamDesc(L + (conv_dim,), cfg.dtype, lax + ("ff",), "zeros"),
+        "a_log": ParamDesc(L + (h,), jnp.float32, lax + (None,), "zeros"),
+        "dt_bias": ParamDesc(L + (h,), jnp.float32, lax + (None,), "zeros"),
+        "d_skip": ParamDesc(L + (h,), jnp.float32, lax + (None,), "ones"),
+        "norm_g": ParamDesc(L + (d_inner,), cfg.dtype, lax + ("ff",), "ones"),
+        "out_proj": ParamDesc(L + (d_inner, d), cfg.dtype, lax + ("ff", "embed")),
+    }
+
+
+def _short_conv(x: Array, w: Array, b: Array) -> Array:
+    """Causal depthwise conv, kernel CONV_K, via shifted adds.  x: (B,S,C)."""
+    out = x * w[CONV_K - 1]
+    for i in range(1, CONV_K):
+        shifted = jnp.pad(x, ((0, 0), (i, 0), (0, 0)))[:, : x.shape[1]]
+        out = out + shifted * w[CONV_K - 1 - i]
+    return out + b
+
+
+def _project(p: dict, x: Array, cfg: ModelConfig):
+    h, pp, n, d_inner = _dims(cfg)
+    zxbcdt = x @ p["in_proj"]
+    z, xin, bmat, cmat, dt = jnp.split(
+        zxbcdt, [d_inner, 2 * d_inner, 2 * d_inner + n, 2 * d_inner + 2 * n],
+        axis=-1)
+    return z, xin, bmat, cmat, dt
+
+
+def _decays(p: dict, dt: Array) -> tuple[Array, Array]:
+    """Returns (per-head log decay <= 0, per-head dt > 0)."""
+    dtv = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    a = jnp.exp(p["a_log"])                      # > 0
+    # Clamp so chunk * max-step-decay stays inside linear_scan.CLIP.
+    log_decay = -jnp.clip(dtv * a, 0.0, linear_scan.MAX_STEP_DECAY)
+    return log_decay, dtv
+
+
+def ssm_block(p: dict, x: Array, cfg: ModelConfig) -> Array:
+    """Full-sequence Mamba2 mixer.  x: (B, S, d) -> (B, S, d)."""
+    b, s, _ = x.shape
+    h, pp, n, d_inner = _dims(cfg)
+    z, xin, bmat, cmat, dt = _project(p, x, cfg)
+
+    conv_in = jnp.concatenate([xin, bmat, cmat], axis=-1)
+    conv_out = jax.nn.silu(_short_conv(conv_in, p["conv_w"], p["conv_b"]))
+    xin, bmat, cmat = jnp.split(conv_out, [d_inner, d_inner + n], axis=-1)
+
+    log_decay, dtv = _decays(p, dt)              # (B,S,H), (B,S,H)
+    v = (xin.reshape(b, s, h, pp) * dtv[..., None]).astype(jnp.float32)
+    k = jnp.broadcast_to(bmat[:, :, None, :], (b, s, h, n))
+    q = jnp.broadcast_to(cmat[:, :, None, :], (b, s, h, n))
+    w = jnp.broadcast_to(log_decay[..., None], (b, s, h, n))
+
+    y, _ = linear_scan.gla_chunked(q, k, v, w, chunk=cfg.ssm_chunk)
+    y = y + p["d_skip"][None, None, :, None] * xin.reshape(b, s, h, pp)
+    y = y.reshape(b, s, d_inner).astype(x.dtype)
+    y = constrain(y, "batch", None, "ff")
+
+    from repro.models.common import rms_norm
+    y = rms_norm(y * jax.nn.silu(z), p["norm_g"], cfg.norm_eps)
+    return y @ p["out_proj"]
+
+
+# ---------------------------------------------------------------------------
+# Decode (stateful single token).
+# ---------------------------------------------------------------------------
+
+def ssm_cache_desc(cfg: ModelConfig, layers: int, batch: int) -> dict:
+    h, pp, n, d_inner = _dims(cfg)
+    conv_dim = d_inner + 2 * n
+    baxis = "batch" if batch > 1 else None
+    return {
+        "state": ParamDesc((layers, batch, h, n, pp), jnp.float32,
+                           ("layers", baxis, "ff", None, None), "zeros"),
+        "conv": ParamDesc((layers, batch, CONV_K - 1, conv_dim), jnp.float32,
+                          ("layers", baxis, None, "ff"), "zeros"),
+    }
+
+
+def ssm_decode_step(p: dict, x: Array, state: Array, conv_state: Array,
+                    cfg: ModelConfig):
+    """x: (B, 1, d); state: (B, H, N, P); conv_state: (B, CONV_K-1, conv_dim).
+    Returns (out (B, 1, d), new_state, new_conv_state)."""
+    b = x.shape[0]
+    h, pp, n, d_inner = _dims(cfg)
+    z, xin, bmat, cmat, dt = _project(p, x, cfg)
+
+    conv_in = jnp.concatenate([xin, bmat, cmat], axis=-1)[:, 0]   # (B, C)
+    window = jnp.concatenate([conv_state, conv_in[:, None]], axis=1)
+    conv_out = jax.nn.silu(
+        (window * p["conv_w"][None]).sum(axis=1) + p["conv_b"])
+    new_conv_state = window[:, 1:]
+    xin_c, bmat_c, cmat_c = jnp.split(conv_out, [d_inner, d_inner + n], axis=-1)
+
+    log_decay, dtv = _decays(p, dt[:, 0])        # (B, H)
+    v = (xin_c.reshape(b, h, pp) * dtv[..., None]).astype(jnp.float32)
+    k = jnp.broadcast_to(bmat_c[:, None, :], (b, h, n))
+    q = jnp.broadcast_to(cmat_c[:, None, :], (b, h, n))
+    w = jnp.broadcast_to(log_decay[..., None], (b, h, n))
+
+    y, new_state = linear_scan.gla_decode_step(state, q, k, v, w)
+    y = y + p["d_skip"][None, :, None] * xin_c.reshape(b, h, pp)
+    y = y.reshape(b, 1, d_inner).astype(x.dtype)
+
+    from repro.models.common import rms_norm
+    y = rms_norm(y * jax.nn.silu(z), p["norm_g"], cfg.norm_eps)
+    return y @ p["out_proj"], new_state, new_conv_state

@@ -1,0 +1,12 @@
+"""Server-side optimizers and schedules (pure JAX, optax-free).
+
+Worker-side momentum (the paper's D-SHB) lives in the trainer, per Alg. 3 —
+these optimizers consume the *robustly aggregated* direction R_t.
+"""
+from repro.optim.optimizers import (
+    adam, clip_by_global_norm, global_norm, sgd, OptState, Optimizer,
+)
+from repro.optim.schedules import constant, cosine, piecewise, step_decay
+
+__all__ = ["adam", "clip_by_global_norm", "global_norm", "sgd", "OptState",
+           "Optimizer", "constant", "cosine", "piecewise", "step_decay"]

@@ -1,0 +1,83 @@
+"""Minimal optimizer library: (init, update) pairs over pytrees."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[PyTree], PyTree]
+    update: Callable[[PyTree, PyTree, PyTree, jax.Array], tuple[PyTree, PyTree]]
+    # update(direction, opt_state, params, lr) -> (new_params, new_state)
+
+
+OptState = PyTree
+
+
+def global_norm(tree: PyTree) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(l.astype(jnp.float32) ** 2)
+                        for l in jax.tree_util.tree_leaves(tree)))
+
+
+def clip_by_global_norm(tree: PyTree, max_norm: float) -> PyTree:
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-12))
+    return jax.tree_util.tree_map(lambda l: l * scale.astype(l.dtype), tree)
+
+
+def sgd(*, weight_decay: float = 0.0, clip: float | None = None) -> Optimizer:
+    def init(params):
+        return ()
+
+    def update(direction, state, params, lr):
+        if clip is not None:
+            direction = clip_by_global_norm(direction, clip)
+
+        def upd(p, d):
+            d32 = d.astype(jnp.float32)
+            if weight_decay:
+                d32 = d32 + weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * d32).astype(p.dtype)
+
+        return jax.tree_util.tree_map(upd, params, direction), state
+
+    return Optimizer(init, update)
+
+
+def adam(*, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
+         weight_decay: float = 0.0, clip: float | None = None) -> Optimizer:
+    """Server-side Adam over the robust direction (beyond-paper option)."""
+    def init(params):
+        z = jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        return {"m": z, "v": jax.tree_util.tree_map(jnp.copy, z),
+                "t": jnp.zeros((), jnp.int32)}
+
+    def update(direction, state, params, lr):
+        if clip is not None:
+            direction = clip_by_global_norm(direction, clip)
+        t = state["t"] + 1
+        m = jax.tree_util.tree_map(
+            lambda m_, d: b1 * m_ + (1 - b1) * d.astype(jnp.float32),
+            state["m"], direction)
+        v = jax.tree_util.tree_map(
+            lambda v_, d: b2 * v_ + (1 - b2) * jnp.square(d.astype(jnp.float32)),
+            state["v"], direction)
+        bc1 = 1 - b1 ** t.astype(jnp.float32)
+        bc2 = 1 - b2 ** t.astype(jnp.float32)
+
+        def upd(p, m_, v_):
+            step = (m_ / bc1) / (jnp.sqrt(v_ / bc2) + eps)
+            if weight_decay:
+                step = step + weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * step).astype(p.dtype)
+
+        return (jax.tree_util.tree_map(upd, params, m, v),
+                {"m": m, "v": v, "t": t})
+
+    return Optimizer(init, update)

@@ -1,0 +1,35 @@
+"""Learning-rate schedules (incl. the paper's experimental choices)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(lr: float):
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def step_decay(lr0: float, every: int, factor: float = 0.5):
+    """Paper's MNIST schedule: gamma_t = lr0 / (1 + floor(t/every))."""
+    def fn(step):
+        return jnp.asarray(lr0, jnp.float32) / (1.0 + step // every)
+    return fn
+
+
+def piecewise(lr0: float, boundaries: tuple[int, ...], values: tuple[float, ...]):
+    """Paper's CIFAR schedule: lr0 until boundary, then values[i]."""
+    def fn(step):
+        lr = jnp.asarray(lr0, jnp.float32)
+        for b, v in zip(boundaries, values):
+            lr = jnp.where(step >= b, jnp.asarray(v, jnp.float32), lr)
+        return lr
+    return fn
+
+
+def cosine(lr0: float, total_steps: int, warmup: int = 0, floor: float = 0.0):
+    def fn(step):
+        s = jnp.asarray(step, jnp.float32)
+        warm = jnp.minimum(1.0, s / jnp.maximum(1, warmup)) if warmup else 1.0
+        frac = jnp.clip((s - warmup) / max(1, total_steps - warmup), 0.0, 1.0)
+        cos = floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * frac))
+        return lr0 * warm * cos
+    return fn

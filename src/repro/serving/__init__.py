@@ -1,0 +1,3 @@
+from repro.serving.engine import ServeEngine, greedy_decode
+
+__all__ = ["ServeEngine", "greedy_decode"]

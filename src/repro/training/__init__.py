@@ -1,0 +1,7 @@
+from repro.training.trainer import (
+    ByzantineConfig, TrainerConfig, TrainState, build_train_step, init_state,
+    train_loop,
+)
+
+__all__ = ["ByzantineConfig", "TrainerConfig", "TrainState",
+           "build_train_step", "init_state", "train_loop"]

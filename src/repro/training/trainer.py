@@ -1,0 +1,246 @@
+"""Robust distributed training: the paper's Alg. 1 (D-GD) and Alg. 3 (D-SHB)
+as first-class train steps over arbitrary models.
+
+Structure of one step (DESIGN.md §3):
+
+  1. per-worker gradients — ``vmap(grad(loss), spmd_axis_name=worker_axes)``
+     over a batch with a leading worker dim; NO cross-worker psum.
+  2. worker-side momentum (D-SHB): m_i <- beta m_i + (1-beta) g_i, one
+     momentum pytree per worker (worker axis sharded over the mesh, so
+     per-device memory equals a single momentum).
+  3. Byzantine injection (simulation/testing only): the last f worker rows
+     are overwritten by the configured attack.
+  4. robust aggregation over the worker axis (gram path or coordinate path)
+     -> direction R_t, plus the kappa-hat diagnostic of paper Eq. (26).
+  5. server optimizer applies R_t.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import robust as robust_lib
+from repro.core.attacks import apply_attack_tree
+from repro.core.types import AggregatorSpec
+from repro.optim import Optimizer, global_norm
+
+PyTree = Any
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class ByzantineConfig:
+    """Simulation of f Byzantine workers executing ``attack``."""
+    f: int = 0
+    attack: str = "none"           # none|alie|foe|sf|lf|mimic|alie_opt|foe_opt
+    eta: Optional[float] = None
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainerConfig:
+    algorithm: str = "dshb"        # dgd (full grads, no momentum) | dshb
+    beta: float = 0.9              # momentum coefficient (dshb)
+    agg: AggregatorSpec = AggregatorSpec()
+    byz: ByzantineConfig = ByzantineConfig()
+    track_kappa_hat: bool = True
+    worker_axes: Optional[tuple[str, ...]] = None   # spmd axes for vmap
+    # Selective robustness (giant MoE; DESIGN.md §Arch-applicability):
+    # params whose key-path matches get FSDP mean-gradients (no per-worker
+    # copy ever exists) instead of the robust per-worker path.  Per-worker
+    # state for 100B+ expert tables is Theta(n|theta|) and exceeds any
+    # fixed pod — this is the deployable compromise, and it is reported.
+    fsdp_keys: tuple[str, ...] = ()   # substring match on key paths
+
+
+# TrainState is a plain dict pytree: params / momentum / opt_state / step.
+TrainState = dict
+
+
+def _split_info(params: PyTree, fsdp_keys: tuple[str, ...]):
+    """Flattens params into (robust leaves, fsdp leaves) index lists."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    paths = [jax.tree_util.keystr(p) for p, _ in flat]
+    is_fsdp = [any(k in path for k in fsdp_keys) for path in paths]
+    return treedef, paths, is_fsdp
+
+
+def split_params(params: PyTree, fsdp_keys: tuple[str, ...]):
+    treedef, _, is_fsdp = _split_info(params, fsdp_keys)
+    leaves = treedef.flatten_up_to(params)
+    robust = [l for l, f in zip(leaves, is_fsdp) if not f]
+    fsdp = [l for l, f in zip(leaves, is_fsdp) if f]
+    return robust, fsdp
+
+
+def merge_params(robust: list, fsdp: list, treedef, is_fsdp: list) -> PyTree:
+    it_r, it_f = iter(robust), iter(fsdp)
+    leaves = [next(it_f) if f else next(it_r) for f in is_fsdp]
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def init_state(params: PyTree, optimizer: Optimizer, n_workers: int,
+               cfg: TrainerConfig) -> TrainState:
+    state = dict(params=params, opt_state=optimizer.init(params),
+                 step=jnp.zeros((), jnp.int32))
+    if cfg.algorithm == "dshb":
+        robust, _ = split_params(params, cfg.fsdp_keys)
+        state["momentum"] = [
+            jnp.zeros((n_workers,) + p.shape, jnp.float32) for p in robust]
+    return state
+
+
+def _kappa_hat(agg: PyTree, stack: PyTree, n_honest: int) -> Array:
+    """Paper Eq. (26), computed leaf-streamed in fp32."""
+    num = jnp.zeros((), jnp.float32)
+    den = jnp.zeros((), jnp.float32)
+    for a, s in zip(jax.tree_util.tree_leaves(agg),
+                    jax.tree_util.tree_leaves(stack)):
+        h = s[:n_honest].astype(jnp.float32)
+        mbar = h.mean(axis=0)
+        num += jnp.sum((a.astype(jnp.float32) - mbar) ** 2)
+        den += jnp.mean(jnp.sum((h - mbar).reshape(n_honest, -1) ** 2, axis=1))
+    return jnp.sqrt(num / (den + 1e-20))
+
+
+def build_train_step(loss_fn: Callable, optimizer: Optimizer,
+                     cfg: TrainerConfig, lr_schedule: Callable
+                     ) -> Callable:
+    """Returns step(state, batch, key) -> (state, metrics).
+
+    ``loss_fn(params, worker_batch) -> (scalar, metrics_dict)`` is the
+    per-worker loss; ``batch`` carries a leading worker axis on every leaf.
+    """
+    spec = dataclasses.replace(cfg.agg, f=cfg.byz.f) \
+        if cfg.agg.f != cfg.byz.f else cfg.agg
+
+    vmap_kw = {}
+    if cfg.worker_axes:
+        vmap_kw["spmd_axis_name"] = cfg.worker_axes
+
+    def step(state: TrainState, batch: PyTree, key: Array):
+        params = state["params"]
+        treedef, _, is_fsdp = _split_info(params, cfg.fsdp_keys)
+        robust_p, fsdp_p = split_params(params, cfg.fsdp_keys)
+        has_fsdp = any(is_fsdp)
+
+        def loss_of(rp, fp, wbatch):
+            merged = merge_params(rp, fp, treedef, is_fsdp)
+            l, m = loss_fn(merged, wbatch)
+            return l, m
+
+        # Pass A: per-worker gradients of the robust subset (no psum).
+        def grad_a(rp, fp, wbatch):
+            (l, m), g = jax.value_and_grad(loss_of, argnums=0, has_aux=True)(
+                rp, fp, wbatch)
+            return l, g
+
+        losses, grads = jax.vmap(grad_a, in_axes=(None, None, 0), **vmap_kw)(
+            robust_p, fsdp_p, batch)
+        grads = jax.tree_util.tree_map(lambda g: g.astype(jnp.float32), grads)
+        n_workers = losses.shape[0]
+        n_honest = n_workers - cfg.byz.f
+
+        # Pass B (giant-MoE FSDP subset): single backward of the mean loss;
+        # expert gradients arrive pre-reduced over workers — per-worker
+        # copies never materialize (DESIGN.md §3).
+        if has_fsdp:
+            def mean_loss(fp, rp, b):
+                ls, _ = jax.vmap(lambda wb: loss_of(rp, fp, wb),
+                                 **vmap_kw)(b)
+                return ls.mean()
+            fsdp_grads = jax.grad(mean_loss)(fsdp_p, robust_p, batch)
+        else:
+            fsdp_grads = []
+
+        if cfg.algorithm == "dshb":
+            beta = jnp.asarray(cfg.beta, jnp.float32)
+            stack = jax.tree_util.tree_map(
+                lambda m, g: beta * m + (1 - beta) * g,
+                state["momentum"], grads)
+            new_momentum = stack
+        else:
+            stack = grads
+            new_momentum = None
+
+        # Byzantine simulation: overwrite the last f rows.
+        agg_key, key = jax.random.split(key)
+        closure = (lambda t: robust_lib.robust_aggregate(t, spec, key=agg_key)) \
+            if cfg.byz.attack.endswith("_opt") else None
+        attacked = apply_attack_tree(cfg.byz.attack, stack, cfg.byz.f,
+                                     eta=cfg.byz.eta, agg_closure=closure)
+
+        robust_dir = robust_lib.robust_aggregate(attacked, spec, key=agg_key)
+        direction = merge_params(robust_dir, list(fsdp_grads), treedef, is_fsdp)
+
+        lr = lr_schedule(state["step"])
+        new_params, new_opt = optimizer.update(direction, state["opt_state"],
+                                               params, lr)
+        new_state = dict(params=new_params, opt_state=new_opt,
+                         step=state["step"] + 1)
+        if new_momentum is not None:
+            # NOTE: Byzantine rows keep honest-computed momentum; their
+            # transmitted values were attacked, not their local state —
+            # matching the simulation protocol of the paper's code.
+            new_state["momentum"] = new_momentum
+
+        metrics = {
+            "loss": losses[:n_honest].mean(),
+            "lr": lr,
+            "direction_norm": global_norm(direction),
+        }
+        if cfg.track_kappa_hat:
+            metrics["kappa_hat"] = _kappa_hat(robust_dir, attacked, n_honest)
+        return new_state, metrics
+
+    return step
+
+
+# ---------------------------------------------------------------------------
+# Convenience: full training loop for CPU-scale experiments.
+# ---------------------------------------------------------------------------
+
+def train_loop(loss_fn, params, batches, optimizer, cfg: TrainerConfig,
+               lr_schedule, steps: int, *, seed: int = 0,
+               eval_fn: Optional[Callable] = None, eval_every: int = 0,
+               track_best: bool = True):
+    """Runs `steps` iterations; returns (final_params, history dict).
+
+    Implements the paper's model selection: for D-GD, theta_hat is the
+    iterate with the smallest aggregate norm (Alg. 1); history records
+    everything needed for that selection and for accuracy curves.
+    """
+    import numpy as np
+
+    first = next(batches) if hasattr(batches, "__next__") else batches
+    n_workers = jax.tree_util.tree_leaves(first)[0].shape[0]
+    state = init_state(params, optimizer, n_workers, cfg)
+    step_fn = jax.jit(build_train_step(loss_fn, optimizer, cfg, lr_schedule))
+    key = jax.random.PRNGKey(seed)
+
+    hist: dict[str, list] = {"loss": [], "direction_norm": [], "kappa_hat": [],
+                             "eval": [], "eval_step": []}
+    best = {"norm": np.inf, "params": params, "acc": -np.inf}
+    batch = first
+    for t in range(steps):
+        key, sub = jax.random.split(key)
+        prev_params = state["params"]
+        state, metrics = step_fn(state, batch, sub)
+        hist["loss"].append(float(metrics["loss"]))
+        dn = float(metrics["direction_norm"])
+        hist["direction_norm"].append(dn)
+        if "kappa_hat" in metrics:
+            hist["kappa_hat"].append(float(metrics["kappa_hat"]))
+        if track_best and dn < best["norm"]:
+            best["norm"], best["params"] = dn, prev_params
+        if eval_fn and eval_every and (t + 1) % eval_every == 0:
+            acc = float(eval_fn(state["params"]))
+            hist["eval"].append(acc)
+            hist["eval_step"].append(t + 1)
+            best["acc"] = max(best["acc"], acc)
+        if hasattr(batches, "__next__"):
+            batch = next(batches)
+    return state["params"], {"history": hist, "best": best, "state": state}

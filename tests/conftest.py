@@ -1,0 +1,13 @@
+import os
+
+# Smoke tests and benches run on the single real CPU device; ONLY
+# launch/dryrun.py overrides device count (see system design).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)

@@ -1,0 +1,192 @@
+"""Unit + property tests for the robust aggregation rules.
+
+The (f, kappa)-robustness property tests check Definition 2 with the exact
+Table 1 / Appendix 8.1 coefficients over randomized inputs and randomized
+honest subsets — the paper's central quantitative claims, executed.
+"""
+import itertools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    AggregatorSpec, aggregate, average, cwmed, cwtm, geometric_median, krum,
+    mda, meamed, multikrum, nnm, nnm_direct, theory,
+)
+
+RULES_WITH_KAPPA = ("cwtm", "krum", "gm", "cwmed")
+ALL_RULE_FNS = {
+    "average": average, "krum": krum, "multikrum": multikrum,
+    "gm": geometric_median, "cwmed": cwmed, "cwtm": cwtm, "mda": mda,
+    "meamed": meamed,
+}
+
+
+def _rand_stack(seed, n, d, scale=1.0):
+    rng = np.random.default_rng(seed)
+    base = rng.normal(size=(n, d)) * scale
+    # heavy-tail contamination on a few rows to stress robustness
+    base[rng.integers(0, n, 2)] *= 20.0
+    return jnp.asarray(base, jnp.float32)
+
+
+def _check_kappa(rule_fn, rule, x, n, f, subsets_checked=10, seed=0):
+    """Definition 2 over sampled honest subsets S."""
+    kappa = theory.kappa(rule, n, f)
+    rng = np.random.default_rng(seed)
+    out = np.asarray(rule_fn(x, f), np.float64)
+    xs = np.asarray(x, np.float64)
+    for _ in range(subsets_checked):
+        s = rng.choice(n, size=n - f, replace=False)
+        mean = xs[s].mean(axis=0)
+        var = np.mean(np.sum((xs[s] - mean) ** 2, axis=1))
+        err = np.sum((out - mean) ** 2)
+        assert err <= kappa * var + 1e-6 * (1 + var), \
+            f"{rule}: err {err} > kappa {kappa} * var {var}"
+
+
+@pytest.mark.parametrize("rule", RULES_WITH_KAPPA)
+@pytest.mark.parametrize("n,f", [(9, 2), (17, 4), (17, 8), (16, 3), (32, 7)])
+def test_kappa_robustness_table1(rule, n, f):
+    fn = ALL_RULE_FNS[rule]
+    for seed in range(5):
+        x = _rand_stack(seed, n, 24)
+        _check_kappa(fn, rule, x, n, f, seed=seed)
+
+
+@given(st.integers(0, 10_000), st.integers(5, 24), st.integers(1, 6))
+@settings(max_examples=30, deadline=None)
+def test_kappa_robustness_hypothesis(seed, n, d):
+    f = max(1, (n - 1) // 3)
+    if n <= 2 * f:
+        return
+    x = _rand_stack(seed, n, d)
+    for rule in RULES_WITH_KAPPA:
+        _check_kappa(ALL_RULE_FNS[rule], rule, x, n, f, subsets_checked=4,
+                     seed=seed)
+
+
+@given(st.integers(0, 10_000), st.integers(6, 20))
+@settings(max_examples=25, deadline=None)
+def test_nnm_lemma5_variance_reduction(seed, n):
+    """Lemma 5: var(Y_S) + ||ybar_S - xbar_S||^2 <= 8f/(n-f) var(X_S)."""
+    f = max(1, (n - 1) // 3)
+    if n <= 2 * f:
+        return
+    d = 16
+    x = np.asarray(_rand_stack(seed, n, d), np.float64)
+    y = np.asarray(nnm(jnp.asarray(x), f), np.float64)
+    factor = theory.nnm_variance_factor(n, f)
+    rng = np.random.default_rng(seed)
+    for _ in range(5):
+        s = rng.choice(n, size=n - f, replace=False)
+        xbar, ybar = x[s].mean(0), y[s].mean(0)
+        var_x = np.mean(np.sum((x[s] - xbar) ** 2, axis=1))
+        var_y = np.mean(np.sum((y[s] - ybar) ** 2, axis=1))
+        bias = np.sum((ybar - xbar) ** 2)
+        assert var_y + bias <= factor * var_x + 1e-8 * (1 + var_x)
+
+
+@given(st.integers(0, 10_000))
+@settings(max_examples=20, deadline=None)
+def test_nnm_composition_lemma1(seed):
+    """Lemma 1: F∘NNM is (f, 8f/(n-f)(kappa+1))-robust."""
+    n, f, d = 17, 4, 12
+    x = _rand_stack(seed, n, d)
+    rng = np.random.default_rng(seed)
+    for rule in RULES_WITH_KAPPA:
+        base_kappa = theory.kappa(rule, n, f)
+        kap = theory.nnm_kappa(base_kappa, n, f)
+        spec = AggregatorSpec(rule=rule, f=f, pre="nnm")
+        out = np.asarray(aggregate(x, spec), np.float64)
+        xs = np.asarray(x, np.float64)
+        for _ in range(5):
+            s = rng.choice(n, size=n - f, replace=False)
+            mean = xs[s].mean(axis=0)
+            var = np.mean(np.sum((xs[s] - mean) ** 2, axis=1))
+            err = np.sum((out - mean) ** 2)
+            assert err <= kap * var + 1e-6 * (1 + var)
+
+
+def test_kappa_lower_bound_construction():
+    """Prop. 6's adversarial instance: every rule must err by >= the bound."""
+    n, f = 9, 2
+    d = 1
+    x = jnp.concatenate([jnp.zeros((n - f, d)), jnp.ones((f, d))])
+    lb = theory.kappa_lower_bound(n, f)
+    # For S = the last n-f indices, the bound implies a nonzero error floor.
+    s = np.arange(f, n)
+    xs = np.asarray(x)
+    mean = xs[s].mean(axis=0)
+    var = np.mean(np.sum((xs[s] - mean) ** 2, axis=1))
+    for rule in RULES_WITH_KAPPA:
+        kappa = theory.kappa(rule, n, f)
+        assert kappa >= lb - 1e-12
+
+
+def test_nnm_matches_direct_oracle():
+    for seed in range(5):
+        x = _rand_stack(seed, 17, 33)
+        np.testing.assert_allclose(np.asarray(nnm(x, 4)),
+                                   np.asarray(nnm_direct(x, 4)),
+                                   rtol=1e-5, atol=1e-5)
+
+
+def test_permutation_equivariance():
+    """Aggregation output must be invariant to input ordering."""
+    x = _rand_stack(3, 16, 20)
+    perm = np.random.default_rng(0).permutation(16)
+    for rule, fn in ALL_RULE_FNS.items():
+        a = np.asarray(fn(x, 3))
+        b = np.asarray(fn(x[perm], 3))
+        np.testing.assert_allclose(a, b, rtol=2e-4, atol=2e-4,
+                                   err_msg=rule)
+
+
+def test_average_exact():
+    x = _rand_stack(0, 8, 5)
+    np.testing.assert_allclose(np.asarray(average(x)),
+                               np.asarray(x).mean(0), rtol=1e-6)
+
+
+def test_cwtm_matches_numpy():
+    x = _rand_stack(1, 11, 7)
+    f = 3
+    xs = np.sort(np.asarray(x), axis=0)
+    expect = xs[f:11 - f].mean(axis=0)
+    np.testing.assert_allclose(np.asarray(cwtm(x, f)), expect, rtol=1e-5)
+
+
+def test_krum_selects_an_input():
+    x = _rand_stack(2, 13, 9)
+    out = np.asarray(krum(x, 3))
+    dists = np.abs(np.asarray(x) - out).sum(axis=1)
+    assert dists.min() < 1e-4
+
+
+def test_mda_minimizes_diameter():
+    x = _rand_stack(4, 9, 4)
+    out = np.asarray(mda(x, 2))
+    xs = np.asarray(x)
+    best = None
+    for s in itertools.combinations(range(9), 7):
+        sub = xs[list(s)]
+        diam = max(np.linalg.norm(a - b) for a in sub for b in sub)
+        if best is None or diam < best[0]:
+            best = (diam, sub.mean(axis=0))
+    np.testing.assert_allclose(out, best[1], rtol=1e-5, atol=1e-5)
+
+
+def test_gm_stationarity():
+    """Weiszfeld output should (approximately) minimize sum of distances."""
+    x = _rand_stack(5, 15, 6)
+    out = np.asarray(geometric_median(x, 0, iters=64))
+    xs = np.asarray(x)
+    obj = lambda y: np.sum(np.linalg.norm(xs - y, axis=1))
+    base = obj(out)
+    rng = np.random.default_rng(0)
+    for _ in range(20):
+        assert obj(out + rng.normal(size=6) * 0.05) >= base - 1e-3

@@ -1,0 +1,117 @@
+"""Attacks, Bucketing, and the paper's Bucketing counterexamples."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    AggregatorSpec, aggregate, apply_attack, bucketing, cwtm,
+    default_bucket_size, nnm, theory,
+)
+from repro.core.attacks import apply_attack_tree
+
+
+def _honest(seed, n_h, d):
+    return jax.random.normal(jax.random.PRNGKey(seed), (n_h, d))
+
+
+def test_attack_shapes_and_finiteness():
+    h = _honest(0, 13, 40)
+    for att in ("alie", "foe", "sf", "mimic"):
+        full = apply_attack(att, h, 4)
+        assert full.shape == (17, 40)
+        assert np.isfinite(np.asarray(full)).all()
+        # honest rows preserved
+        np.testing.assert_allclose(np.asarray(full[:13]), np.asarray(h),
+                                   rtol=1e-6)
+
+
+def test_sf_is_negated_mean():
+    h = _honest(1, 10, 8)
+    full = np.asarray(apply_attack("sf", h, 3))
+    expect = np.broadcast_to(-np.asarray(h).mean(0), (3, 8))
+    np.testing.assert_allclose(full[10:], expect, rtol=1e-5, atol=1e-6)
+
+
+def test_mimic_copies_an_honest_worker():
+    h = _honest(2, 12, 16)
+    full = np.asarray(apply_attack("mimic", h, 2))
+    hs = np.asarray(h)
+    dists = np.linalg.norm(hs - full[12], axis=1)
+    assert dists.min() < 1e-5
+
+
+def test_optimized_attack_does_more_damage():
+    """The eta line search must dominate any fixed grid eta."""
+    h = _honest(3, 13, 32)
+    spec = AggregatorSpec(rule="cwtm", f=4, pre=None)
+    clos = lambda s: aggregate(s, spec)
+    mean = np.asarray(h).mean(0)
+
+    def damage(full):
+        return float(np.sum((np.asarray(clos(full)) - mean) ** 2))
+
+    d_opt = damage(apply_attack("alie_opt", h, 4, agg_closure=clos))
+    d_fixed = max(damage(apply_attack("alie", h, 4, eta=e))
+                  for e in (0.5, 1.0, 2.0))
+    assert d_opt >= d_fixed - 1e-6
+
+
+def test_attack_tree_consistent_with_dense():
+    key = jax.random.PRNGKey(0)
+    n, f, d = 16, 3, 30
+    x = jax.random.normal(key, (n, d))
+    tree = {"a": x[:, :18].reshape(n, 3, 6), "b": x[:, 18:]}
+    for att in ("alie", "foe", "sf"):
+        dense = np.asarray(apply_attack(att, x[:n - f], f))
+        t = apply_attack_tree(att, tree, f)
+        flat = np.concatenate([np.asarray(t["a"]).reshape(n, -1),
+                               np.asarray(t["b"])], axis=1)
+        np.testing.assert_allclose(flat, dense, rtol=1e-4, atol=1e-5)
+
+
+def test_bucketing_means_and_fadj():
+    x = jnp.arange(12.0)[:, None] * jnp.ones((1, 3))
+    means, f_adj = bucketing(x, 2, jax.random.PRNGKey(0), bucket_size=3)
+    assert means.shape == (4, 3)
+    assert f_adj <= 2
+    # every bucket mean is a mean of 3 original rows -> global mean preserved
+    np.testing.assert_allclose(np.asarray(means).mean(), float(x.mean()),
+                               rtol=1e-6)
+
+
+def test_default_bucket_size_matches_paper():
+    assert default_bucket_size(17, 4) == 2   # paper: s = floor(n/2f)
+    assert default_bucket_size(17, 6) == 1
+    assert default_bucket_size(17, 8) == 1
+
+
+def test_bucketing_no_worst_case_reduction_observation1():
+    """Paper Observation 1: a permutation-aligned input defeats Bucketing's
+    variance reduction, while NNM reduces deterministically (Lemma 5)."""
+    n, f, d, s = 16, 4, 8, 2
+    key = jax.random.PRNGKey(0)
+    base = jax.random.normal(key, (n // s, d)) * 5.0
+    # adversarially equal values within each would-be bucket
+    x = jnp.repeat(base, s, axis=0)
+
+    def spread(stack):
+        m = stack.mean(0)
+        return float(jnp.mean(jnp.sum((stack - m) ** 2, axis=1)))
+
+    var_x = spread(x)
+    # Bucketing with the identity permutation (worst case) keeps variance.
+    means = x.reshape(n // s, s, d).mean(axis=1)
+    assert spread(means) > 0.9 * var_x
+    # NNM reduces for EVERY input (deterministic).
+    y = nnm(x, f)
+    assert spread(y) <= theory.nnm_variance_factor(n, f) * var_x + 1e-5
+
+
+@given(st.integers(0, 10_000))
+@settings(max_examples=15, deadline=None)
+def test_lf_and_none_are_passthrough(seed):
+    h = _honest(seed, 9, 5)
+    for att in ("none", "lf"):
+        out = apply_attack(att, h, 3)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(h))

@@ -1,0 +1,133 @@
+"""Data pipeline, checkpoint, serving, and schedule tests."""
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.checkpoint import load_checkpoint, save_checkpoint
+from repro.configs import reduced_config
+from repro.data import (
+    build_heterogeneous, dirichlet_proportions, make_classification,
+    make_lm_corpus, partition_by_class, worker_batches,
+)
+from repro.models import build_model
+from repro.optim.schedules import cosine, piecewise, step_decay
+from repro.serving import ServeEngine
+
+
+# -- data -------------------------------------------------------------------
+
+@given(st.integers(0, 1000), st.sampled_from([0.1, 1.0, 10.0]))
+@settings(max_examples=10, deadline=None)
+def test_dirichlet_partition_properties(seed, alpha):
+    _, y = make_classification(2000, 10, 8, seed=seed)
+    parts = partition_by_class(y, 8, alpha, seed=seed)
+    sizes = [len(p) for p in parts]
+    assert len(set(sizes)) == 1                     # rectangular
+    flat = np.concatenate(parts)
+    assert len(flat) == len(set(flat))              # disjoint
+
+
+def test_alpha_controls_heterogeneity():
+    """Smaller alpha => more skewed per-worker class distributions."""
+    _, y = make_classification(20000, 10, 8, seed=0)
+
+    def skew(alpha):
+        parts = partition_by_class(y, 10, alpha, seed=0)
+        tv = []
+        for p in parts:
+            hist = np.bincount(y[p], minlength=10) / len(p)
+            tv.append(0.5 * np.abs(hist - 0.1).sum())
+        return float(np.mean(tv))
+
+    assert skew(0.1) > skew(1.0) > skew(10.0)
+
+
+def test_worker_batches_label_flip():
+    x, y = make_classification(1000, 10, 4, seed=0)
+    ds = build_heterogeneous({"x": x, "y": y}, "y", 5, alpha=10.0, seed=0)
+    b = next(worker_batches(ds, 8, seed=0, flip_labels_for=2))
+    assert b["x"].shape == (5, 8, 4)
+    # flipped workers have complementary labels present in original data
+    assert b["y"].min() >= 0 and b["y"].max() <= 9
+
+
+def test_lm_corpus_topics_skew_tokens():
+    seqs, topics = make_lm_corpus(50_000, vocab=100, n_topics=5, seq_len=50)
+    span = 100 // 5
+    for t in range(5):
+        sel = seqs[topics == t]
+        frac = np.mean((sel >= t * span) & (sel < (t + 1) * span))
+        assert frac > 0.5
+
+
+# -- checkpoint ---------------------------------------------------------------
+
+def test_checkpoint_roundtrip():
+    cfg = reduced_config("smollm-360m")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "ckpt.npz")
+        save_checkpoint(path, params, step=42)
+        restored, step = load_checkpoint(path, params)
+        assert step == 42
+        for a, b in zip(jax.tree_util.tree_leaves(params),
+                        jax.tree_util.tree_leaves(restored)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# -- serving ------------------------------------------------------------------
+
+def test_serve_engine_greedy_batch():
+    cfg = reduced_config("smollm-360m")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    prompts = jax.random.randint(jax.random.PRNGKey(1), (3, 5), 0,
+                                 cfg.vocab_size)
+    eng = ServeEngine(model, params, batch_size=3, max_seq=40)
+    out = eng.generate(prompts, max_new=8)
+    assert out.shape == (3, 8)
+    assert (out >= 0).all()
+    # determinism: same prompts -> same tokens
+    out2 = eng.generate(prompts, max_new=8)
+    np.testing.assert_array_equal(out, out2)
+
+
+def test_serve_engine_ssm():
+    cfg = reduced_config("rwkv6-3b")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    prompts = jax.random.randint(jax.random.PRNGKey(1), (2, 4), 0,
+                                 cfg.vocab_size)
+    eng = ServeEngine(model, params, batch_size=2, max_seq=16)
+    out = eng.generate(prompts, max_new=4)
+    assert out.shape == (2, 4)
+
+
+# -- schedules ----------------------------------------------------------------
+
+def test_step_decay_matches_paper():
+    sched = step_decay(0.75, 50)
+    assert float(sched(0)) == pytest.approx(0.75)
+    assert float(sched(49)) == pytest.approx(0.75)
+    assert float(sched(50)) == pytest.approx(0.375)
+    assert float(sched(100)) == pytest.approx(0.25)
+
+
+def test_piecewise_matches_paper_cifar():
+    sched = piecewise(0.25, (1500,), (0.025,))
+    assert float(sched(0)) == pytest.approx(0.25)
+    assert float(sched(1499)) == pytest.approx(0.25)
+    assert float(sched(1500)) == pytest.approx(0.025)
+
+
+def test_cosine_monotone_after_warmup():
+    sched = cosine(1.0, 100, warmup=10)
+    vals = [float(sched(t)) for t in range(100)]
+    assert vals[0] < vals[9] <= 1.0
+    assert all(a >= b - 1e-6 for a, b in zip(vals[10:], vals[11:]))
