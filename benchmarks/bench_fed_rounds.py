@@ -1,0 +1,76 @@
+"""Federated round throughput: rounds/sec vs cohort size and local steps.
+
+The vmap'd client pass is the hot path of the scenario engine; this bench
+verifies (a) a round compiles ONCE per attack family and is reused across
+rounds, and (b) how device-side round time scales with cohort size m and
+client local steps K.  Host-side cohort sampling/batch building is timed
+separately so regressions are attributable.
+
+  PYTHONPATH=src python benchmarks/bench_fed_rounds.py [--full]
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, time_fn
+from repro.core import AggregatorSpec
+from repro.fed import ClientConfig, FedConfig, FedServer, rescale_f
+from repro.fed.scenarios import _mlp_init, _mlp_loss, cohort_batch_fn
+from repro.data import build_heterogeneous, make_classification
+from repro.optim import sgd
+from repro.optim.schedules import constant
+
+
+def bench_round(m: int, local_steps: int, *, dim: int = 48,
+                batch_size: int = 16, iters: int = 20) -> None:
+    n = 2 * m
+    f = max(1, n // 5)
+    x, y = make_classification(4000, 10, dim, seed=0)
+    ds = build_heterogeneous({"x": x, "y": y}, "y", n, alpha=0.3, seed=0)
+
+    cfg = FedConfig(n_clients=n, clients_per_round=m, f=f,
+                    agg=AggregatorSpec(rule="cwtm", f=f, pre="nnm"),
+                    client=ClientConfig(local_steps=local_steps,
+                                        local_lr=0.1))
+    server = FedServer(_mlp_loss, sgd(clip=2.0), cfg, constant(0.1))
+    state = server.init_state(_mlp_init(jax.random.PRNGKey(0), dim))
+    m_byz = rescale_f(f, n, m)
+    step = server.round_fn("alie", m_byz)
+
+    rng = np.random.default_rng(0)
+    batch_fn = cohort_batch_fn(ds, batch_size, local_steps)
+    cohort = np.arange(m, dtype=np.int32)          # fixed shapes: any ids do
+
+    # Host path: sampling + batch assembly (numpy, per round).
+    t0 = time.perf_counter()
+    for _ in range(5):
+        host_batch = batch_fn(cohort, 0, rng)
+    host_us = (time.perf_counter() - t0) / 5 * 1e6
+
+    batch = jax.tree_util.tree_map(jnp.asarray, host_batch)
+    idx = jnp.asarray(cohort)
+    eta = jnp.float32(8.0)
+    key = jax.random.PRNGKey(1)
+
+    # Device path: the jitted round, compiled once and reused.
+    us = time_fn(lambda: step(state, batch, idx, eta, key), iters=iters)
+    assert len(server._round_cache) == 1, "round must jit once"
+    emit(f"fed_round_m{m}_K{local_steps}_device", us,
+         f"rounds_per_s={1e6 / us:.1f}")
+    emit(f"fed_round_m{m}_K{local_steps}_host_batch", host_us, "")
+
+
+def main(fast: bool = True) -> None:
+    sizes = (4, 8, 16) if fast else (4, 8, 16, 32, 64)
+    for m in sizes:
+        for local_steps in (0, 4):
+            bench_round(m, local_steps, iters=10 if fast else 30)
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    main(fast=not ap.parse_args().full)

@@ -1,0 +1,7 @@
+#!/usr/bin/env bash
+# One-line reproducible tier-1 suite (ROADMAP.md "Tier-1 verify").
+# Usage: scripts/ci.sh [extra pytest args...]
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+exec python -m pytest -x -q "$@"

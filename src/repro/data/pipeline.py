@@ -34,6 +34,35 @@ def build_heterogeneous(arrays: dict[str, np.ndarray], labels_key: str,
     return WorkerDataset(arrays, idx)
 
 
+def infer_n_classes(ds: WorkerDataset, labels_key: str = "y"
+                    ) -> Optional[int]:
+    if labels_key not in ds.arrays:
+        return None
+    return int(ds.arrays[labels_key].max()) + 1
+
+
+def sample_worker_batch(ds: WorkerDataset, worker: int, size: int,
+                        rng: np.random.Generator, *, flip: bool = False,
+                        labels_key: str = "y",
+                        n_classes: Optional[int] = None
+                        ) -> dict[str, np.ndarray]:
+    """One worker's {key: (size, ...)} sample, with-replacement.
+
+    ``flip`` applies the LF attack's label transformation l -> C-1-l — the
+    Byzantine worker computes honestly on corrupted labels.  This is THE
+    sampling + flip primitive; both the lockstep pipeline and the federated
+    cohort batcher go through it so the semantics cannot drift.
+    """
+    take = rng.choice(ds.worker_idx[worker], size=size, replace=True)
+    out = {}
+    for k, arr in ds.arrays.items():
+        part = arr[take]
+        if flip and k == labels_key and n_classes is not None:
+            part = (n_classes - 1) - part
+        out[k] = part
+    return out
+
+
 def worker_batches(ds: WorkerDataset, batch_size: int, *, seed: int = 0,
                    flip_labels_for: int = 0, labels_key: str = "y",
                    n_classes: Optional[int] = None
@@ -45,19 +74,15 @@ def worker_batches(ds: WorkerDataset, batch_size: int, *, seed: int = 0,
     """
     rng = np.random.default_rng(seed)
     n = ds.n_workers
-    if n_classes is None and labels_key in ds.arrays:
-        n_classes = int(ds.arrays[labels_key].max()) + 1
+    if n_classes is None:
+        n_classes = infer_n_classes(ds, labels_key)
     while True:
-        batch: dict[str, list[np.ndarray]] = {k: [] for k in ds.arrays}
-        for w in range(n):
-            take = rng.choice(ds.worker_idx[w], size=batch_size, replace=True)
-            for k, arr in ds.arrays.items():
-                part = arr[take]
-                if (k == labels_key and w >= n - flip_labels_for
-                        and n_classes is not None):
-                    part = (n_classes - 1) - part
-                batch[k].append(part)
-        yield {k: np.stack(v) for k, v in batch.items()}
+        rows = [sample_worker_batch(ds, w, batch_size, rng,
+                                    flip=w >= n - flip_labels_for,
+                                    labels_key=labels_key,
+                                    n_classes=n_classes)
+                for w in range(n)]
+        yield {k: np.stack([r[k] for r in rows]) for k in ds.arrays}
 
 
 def full_batches(ds: WorkerDataset, *, flip_labels_for: int = 0,

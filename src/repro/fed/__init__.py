@@ -1,0 +1,43 @@
+"""Federated scenario engine: client/server rounds over the robust core.
+
+Division of labor with ``repro.training``:
+
+* ``repro.training.trainer`` — the paper's lockstep algorithms (Alg. 1/3):
+  every worker participates every step, one jitted train step.  It remains
+  the reference implementation and owns the shared primitives (param
+  split/merge, kappa-hat).
+* ``repro.fed`` — multi-round orchestration on top of the same robust
+  aggregation: partial participation, client local steps, time-varying
+  attack schedules, rotating Byzantine identities, and a declarative
+  scenario registry.  With full participation and zero local steps a fed
+  round IS a trainer step (tested bit-for-bit).
+"""
+from repro.fed.clients import (
+    ClientConfig, client_updates, gather_rows, init_client_momentum,
+    scatter_rows,
+)
+from repro.fed.metrics import FedHistory, kappa_hat
+from repro.fed.schedules import (
+    AttackPhase, AttackSchedule, FixedByzantine, RotatingByzantine,
+    constant_attack, ramp_eta, switch_attack,
+)
+from repro.fed.scenarios import (
+    SCENARIOS, Scenario, build_scenario, cohort_batch_fn, get_scenario,
+    list_scenarios, register, run_scenario,
+)
+from repro.fed.server import (
+    FedConfig, FedServer, cohort_breakdown, rescale_f, run_rounds,
+    sample_cohort,
+)
+
+__all__ = [
+    "ClientConfig", "client_updates", "gather_rows", "init_client_momentum",
+    "scatter_rows",
+    "FedHistory", "kappa_hat",
+    "AttackPhase", "AttackSchedule", "FixedByzantine", "RotatingByzantine",
+    "constant_attack", "ramp_eta", "switch_attack",
+    "SCENARIOS", "Scenario", "build_scenario", "cohort_batch_fn",
+    "get_scenario", "list_scenarios", "register", "run_scenario",
+    "FedConfig", "FedServer", "cohort_breakdown", "rescale_f", "run_rounds",
+    "sample_cohort",
+]

@@ -1,0 +1,132 @@
+"""Vectorized federated clients: one ``vmap`` over the sampled cohort.
+
+The cohort's client pass is the hot path of every federated round — it is
+a single jitted ``vmap`` over the sampled clients (no Python loop), in two
+flavors selected statically by ``ClientConfig.local_steps``:
+
+* ``local_steps == 0`` — gradient mode: each client sends its (momentum-
+  blended) gradient at the server parameters.  This is exactly one
+  ``repro.training.trainer.build_train_step`` pass restricted to the
+  cohort; with full participation the fed round reduces to the lockstep
+  trainer step bit-for-bit (tested).
+* ``local_steps == K > 0`` — local-SGD mode: each client runs K SGD steps
+  from the broadcast parameters via ``lax.scan`` and sends the *pseudo-
+  gradient* (theta_0 - theta_K) / (K * local_lr), normalized so its
+  magnitude matches a single gradient and the server optimizer / robust
+  aggregation operate on the same scale in both modes.
+
+Client momentum (D-SHB, paper Alg. 3) lives server-side as full
+(n_clients, ...) stacks; the round gathers the sampled rows, blends, and
+scatters back — unsampled clients keep stale momentum, the standard
+partial-participation protocol.
+
+Batches carry a leading cohort axis AND a local-step axis:
+``(m, max(local_steps, 1), batch, ...)`` on every leaf.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+# Shared pieces of the lockstep trainer — re-used, not duplicated, so the
+# two subsystems cannot drift (ISSUE: fed/trainer division of labor).
+from repro.training.trainer import _split_info, merge_params, split_params
+
+Array = jax.Array
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class ClientConfig:
+    """Static per-client computation config (jit cache key material)."""
+    local_steps: int = 0        # 0 => send gradient at server params
+    local_lr: float = 0.05      # client-side SGD step size (local_steps > 0)
+    algorithm: str = "dshb"     # dshb (client momentum) | dgd
+    beta: float = 0.9           # momentum coefficient (dshb)
+
+
+def init_client_momentum(params: PyTree, n_clients: int) -> list[Array]:
+    """Full-population momentum stacks, one (n_clients, ...) row per client.
+
+    Stored as the flattened-leaf list of ``split_params(params, ())`` so the
+    layout matches ``trainer.init_state`` exactly."""
+    robust, _ = split_params(params, ())
+    return [jnp.zeros((n_clients,) + p.shape, jnp.float32) for p in robust]
+
+
+def gather_rows(momentum: list[Array], idx: Array) -> list[Array]:
+    """Momentum rows of the sampled cohort (m, ...) — jit-safe gather."""
+    return [jnp.take(m, idx, axis=0) for m in momentum]
+
+
+def scatter_rows(momentum: list[Array], idx: Array,
+                 rows: list[Array]) -> list[Array]:
+    """Write updated cohort rows back into the full stacks."""
+    return [m.at[idx].set(r) for m, r in zip(momentum, rows)]
+
+
+def client_updates(loss_fn: Callable, params: PyTree,
+                   cohort_momentum: list[Array], batch: PyTree,
+                   ccfg: ClientConfig) -> tuple[Array, list[Array], list[Array]]:
+    """The vmapped cohort pass.
+
+    Args:
+      loss_fn: ``loss_fn(params, worker_batch) -> (scalar, aux)`` — the same
+        contract as the lockstep trainer.
+      params: server parameters (broadcast to every client).
+      cohort_momentum: gathered momentum rows, list of (m, ...).
+      batch: pytree with (m, L, batch, ...) leaves, L = max(local_steps, 1).
+      ccfg: static client config.
+
+    Returns ``(losses (m,), transmitted stack, new cohort momentum)``; the
+    transmitted stack is the flattened-leaf list with a leading cohort axis,
+    ready for attack injection + robust aggregation.
+    """
+    treedef, _, is_fsdp = _split_info(params, ())
+    robust_p, _ = split_params(params, ())
+
+    def loss_of(rp, wbatch):
+        merged = merge_params(rp, [], treedef, is_fsdp)
+        l, _ = loss_fn(merged, wbatch)
+        return l
+
+    if ccfg.local_steps == 0:
+        # Gradient mode: identical op sequence to trainer's pass A.
+        wbatch = jax.tree_util.tree_map(lambda l: l[:, 0], batch)
+
+        def grad_a(rp, wb):
+            l, g = jax.value_and_grad(loss_of, argnums=0)(rp, wb)
+            return l, g
+
+        losses, grads = jax.vmap(grad_a, in_axes=(None, 0))(robust_p, wbatch)
+        sends = [g.astype(jnp.float32) for g in grads]
+    else:
+        k = ccfg.local_steps
+        lr = ccfg.local_lr
+
+        def local_sgd(rp0, cbatch):
+            def body(rp, wb):
+                l, g = jax.value_and_grad(loss_of, argnums=0)(rp, wb)
+                stepped = [
+                    (p.astype(jnp.float32) - lr * gg.astype(jnp.float32)
+                     ).astype(p.dtype) for p, gg in zip(rp, g)]
+                return stepped, l
+            rpk, ls = jax.lax.scan(body, rp0, cbatch)
+            # Pseudo-gradient, normalized to single-gradient magnitude.
+            delta = [(a.astype(jnp.float32) - b.astype(jnp.float32)) / (k * lr)
+                     for a, b in zip(rp0, rpk)]
+            return ls.mean(), delta
+
+        losses, sends = jax.vmap(local_sgd, in_axes=(None, 0))(robust_p, batch)
+
+    if ccfg.algorithm == "dshb":
+        beta = jnp.asarray(ccfg.beta, jnp.float32)
+        sends = [beta * m + (1 - beta) * g
+                 for m, g in zip(cohort_momentum, sends)]
+        new_momentum = sends
+    else:
+        new_momentum = cohort_momentum
+    return losses, sends, new_momentum

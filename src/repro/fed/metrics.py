@@ -1,0 +1,80 @@
+"""Per-round federated diagnostics: honest loss, kappa-hat, participation.
+
+``FedHistory`` is the single record the server loop appends to; it keeps
+scalars as plain Python floats (host-side, post-``device_get``) so a
+multi-hundred-round run never pins device memory, and it exposes the
+aggregate views the scenario reports need (participation counts per
+client, per-attack-phase loss means).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+# The kappa-hat estimator (paper Eq. 26) is shared with the lockstep
+# trainer — re-exported here as the fed-facing name.
+from repro.training.trainer import _kappa_hat as kappa_hat  # noqa: F401
+
+
+@dataclasses.dataclass
+class FedHistory:
+    loss: list = dataclasses.field(default_factory=list)
+    kappa_hat: list = dataclasses.field(default_factory=list)
+    direction_norm: list = dataclasses.field(default_factory=list)
+    lr: list = dataclasses.field(default_factory=list)
+    attack: list = dataclasses.field(default_factory=list)
+    eta: list = dataclasses.field(default_factory=list)
+    cohorts: list = dataclasses.field(default_factory=list)   # np.ndarray per round
+    m_byz: list = dataclasses.field(default_factory=list)
+    f_round: list = dataclasses.field(default_factory=list)
+
+    def record(self, metrics: dict, *, cohort: np.ndarray, attack: str,
+               eta: Optional[float], m_byz: int, f_round: int) -> None:
+        self.loss.append(float(metrics["loss"]))
+        self.direction_norm.append(float(metrics["direction_norm"]))
+        self.lr.append(float(metrics["lr"]))
+        if "kappa_hat" in metrics:
+            self.kappa_hat.append(float(metrics["kappa_hat"]))
+        self.attack.append(attack)
+        self.eta.append(eta)
+        self.cohorts.append(np.asarray(cohort))
+        self.m_byz.append(m_byz)
+        self.f_round.append(f_round)
+
+    @property
+    def rounds(self) -> int:
+        return len(self.loss)
+
+    def participation_counts(self, n_clients: int) -> np.ndarray:
+        """How many rounds each client was sampled into the cohort."""
+        counts = np.zeros(n_clients, np.int64)
+        for c in self.cohorts:
+            counts[c] += 1
+        return counts
+
+    def attack_segments(self) -> list[tuple[str, int, int]]:
+        """Contiguous (attack, start_round, end_round_exclusive) segments."""
+        segs: list[tuple[str, int, int]] = []
+        for r, a in enumerate(self.attack):
+            if segs and segs[-1][0] == a:
+                segs[-1] = (a, segs[-1][1], r + 1)
+            else:
+                segs.append((a, r, r + 1))
+        return segs
+
+    def summary(self) -> dict:
+        out = {
+            "rounds": self.rounds,
+            "final_loss": self.loss[-1] if self.loss else None,
+            "mean_kappa_hat": (float(np.mean(self.kappa_hat))
+                               if self.kappa_hat else None),
+            "attacks": [f"{a}[{s}:{e}]" for a, s, e in self.attack_segments()],
+        }
+        by_attack: dict[str, list] = {}
+        for a, s, e in self.attack_segments():
+            by_attack.setdefault(a, []).extend(self.loss[s:e])
+        for a, losses in by_attack.items():
+            out[f"loss_{a}"] = float(np.mean(losses))
+        return out

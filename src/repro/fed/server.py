@@ -1,0 +1,226 @@
+"""Federated server: sample -> broadcast -> client pass -> robust aggregate.
+
+One round:
+
+  1. HOST: resolve the attack schedule, the Byzantine identity set, and the
+     cohort — ``m_byz`` Byzantine + ``m - m_byz`` honest clients sampled
+     without replacement (stratified participation keeps the cohort
+     composition static, so the round jits once per attack family and is
+     reused across rounds; eta and the sampled ids stay dynamic).
+  2. DEVICE (jitted): gather cohort momentum rows, run the vmapped client
+     pass, overwrite the trailing ``m_byz`` rows with the scheduled attack,
+     robustly aggregate with ``f`` rescaled to the cohort
+     (:func:`rescale_f` — never above the cohort's breakdown point), apply
+     the server optimizer, scatter momentum back.
+
+With full participation, ``local_steps=0``, and the fixed last-``f``
+identity set this reduces exactly to
+``repro.training.trainer.build_train_step`` (tested bit-for-bit).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import robust as robust_lib
+from repro.core.attacks import apply_attack_tree
+from repro.core.types import AggregatorSpec
+from repro.fed.clients import (
+    ClientConfig, client_updates, gather_rows, init_client_momentum,
+    scatter_rows,
+)
+from repro.fed.metrics import FedHistory
+from repro.fed.schedules import AttackSchedule, FixedByzantine
+from repro.optim import Optimizer, global_norm
+from repro.training.trainer import _kappa_hat, _split_info, merge_params
+
+Array = jax.Array
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class FedConfig:
+    """Static description of the federated system (jit cache key material)."""
+    n_clients: int
+    clients_per_round: int          # m <= n_clients
+    f: int = 0                      # Byzantine clients in the POPULATION
+    agg: AggregatorSpec = AggregatorSpec()
+    client: ClientConfig = ClientConfig()
+    track_kappa_hat: bool = True
+
+    def __post_init__(self):
+        if not 0 < self.clients_per_round <= self.n_clients:
+            raise ValueError("need 0 < clients_per_round <= n_clients")
+        if self.f >= self.n_clients / 2:
+            raise ValueError("population must be majority-honest (f < n/2)")
+
+
+def cohort_breakdown(m: int) -> int:
+    """Largest tolerable f for an m-row aggregation (f < m/2)."""
+    return (m - 1) // 2
+
+
+def rescale_f(f_total: int, n_total: int, m: int) -> int:
+    """Byzantine budget of an m-client cohort sampled from (n_total, f_total).
+
+    Stratified participation samples exactly ``ceil(f_total * m / n_total)``
+    Byzantine clients (the worst-case-leaning round-up of the expected
+    count under uniform sampling), clipped to the cohort's breakdown point
+    so the aggregator's precondition f < m/2 always holds.
+    """
+    if f_total == 0:
+        return 0
+    return min(math.ceil(f_total * m / n_total), cohort_breakdown(m))
+
+
+def sample_cohort(rng: np.random.Generator, n_clients: int, m: int,
+                  byz_ids: np.ndarray, m_byz: int) -> np.ndarray:
+    """Cohort ids, honest rows first, Byzantine rows LAST (the attack-
+    injection convention shared with the lockstep trainer)."""
+    byz_ids = np.asarray(byz_ids)
+    honest_ids = np.setdiff1d(np.arange(n_clients), byz_ids)
+    h = rng.choice(honest_ids, size=m - m_byz, replace=False)
+    b = rng.choice(byz_ids, size=m_byz, replace=False) if m_byz else \
+        np.empty((0,), np.int64)
+    return np.concatenate([np.sort(h), np.sort(b)]).astype(np.int32)
+
+
+class FedServer:
+    """Holds the model-side callables plus a per-attack-family jit cache.
+
+    The cache is keyed by the *static* round shape (attack family, cohort
+    Byzantine count, aggregator f, eta presence); everything else — cohort
+    ids, batch, eta value, PRNG key — is a dynamic argument, so a 200-round
+    run with one attack family compiles exactly once.
+    """
+
+    def __init__(self, loss_fn: Callable, optimizer: Optimizer,
+                 cfg: FedConfig, lr_schedule: Callable):
+        self.loss_fn = loss_fn
+        self.optimizer = optimizer
+        self.cfg = cfg
+        self.lr_schedule = lr_schedule
+        self._round_cache: dict[tuple, Callable] = {}
+
+    # -- state ------------------------------------------------------------
+    def init_state(self, params: PyTree) -> dict:
+        state = dict(params=params, opt_state=self.optimizer.init(params),
+                     step=jnp.zeros((), jnp.int32))
+        if self.cfg.client.algorithm == "dshb":
+            state["momentum"] = init_client_momentum(params,
+                                                     self.cfg.n_clients)
+        return state
+
+    # -- the jitted round -------------------------------------------------
+    def _build_round(self, attack: str, m_byz: int, f_round: int,
+                     use_eta: bool) -> Callable:
+        cfg, ccfg = self.cfg, self.cfg.client
+        spec = dataclasses.replace(cfg.agg, f=f_round)
+        optimizer, lr_schedule, loss_fn = \
+            self.optimizer, self.lr_schedule, self.loss_fn
+
+        def round_fn(state: dict, batch: PyTree, idx: Array, eta: Array,
+                     key: Array):
+            params = state["params"]
+            treedef, _, is_fsdp = _split_info(params, ())
+            has_momentum = "momentum" in state
+            cohort_mom = gather_rows(state["momentum"], idx) \
+                if has_momentum else []
+
+            losses, stack, new_cohort_mom = client_updates(
+                loss_fn, params, cohort_mom, batch, ccfg)
+            m = losses.shape[0]
+            m_honest = m - m_byz
+
+            agg_key, key = jax.random.split(key)
+            closure = (lambda t: robust_lib.robust_aggregate(
+                t, spec, key=agg_key)) if attack.endswith("_opt") else None
+            attacked = apply_attack_tree(
+                attack, stack, m_byz,
+                eta=eta if use_eta else None, agg_closure=closure)
+
+            robust_dir = robust_lib.robust_aggregate(attacked, spec,
+                                                     key=agg_key)
+            direction = merge_params(robust_dir, [], treedef, is_fsdp)
+
+            lr = lr_schedule(state["step"])
+            new_params, new_opt = optimizer.update(
+                direction, state["opt_state"], params, lr)
+            new_state = dict(params=new_params, opt_state=new_opt,
+                             step=state["step"] + 1)
+            if has_momentum:
+                # Byzantine cohort rows keep their honest-computed momentum
+                # (the transmitted values were attacked, not the local
+                # state) — same protocol as the lockstep trainer.
+                new_state["momentum"] = scatter_rows(
+                    state["momentum"], idx, new_cohort_mom)
+
+            metrics = {
+                "loss": losses[:m_honest].mean(),
+                "lr": lr,
+                "direction_norm": global_norm(direction),
+            }
+            if cfg.track_kappa_hat:
+                metrics["kappa_hat"] = _kappa_hat(robust_dir, attacked,
+                                                  m_honest)
+            return new_state, metrics
+
+        return jax.jit(round_fn)
+
+    def round_fn(self, attack: str, m_byz: int,
+                 f_round: Optional[int] = None) -> Callable:
+        """The compiled round for one attack family (cached)."""
+        if f_round is None:
+            f_round = rescale_f(self.cfg.f, self.cfg.n_clients,
+                                self.cfg.clients_per_round)
+        use_eta = attack in ("alie", "foe")
+        cache_key = (attack, m_byz, f_round, use_eta)
+        if cache_key not in self._round_cache:
+            self._round_cache[cache_key] = self._build_round(
+                attack, m_byz, f_round, use_eta)
+        return self._round_cache[cache_key]
+
+
+def run_rounds(server: FedServer, state: dict, batch_fn: Callable,
+               rounds: int, *,
+               schedule: AttackSchedule = AttackSchedule(),
+               byz_identity=None, seed: int = 0) -> tuple[dict, FedHistory]:
+    """The host-side round loop.
+
+    Args:
+      batch_fn: ``batch_fn(cohort_ids, n_flip, rng) -> pytree`` of numpy
+        arrays with (m, max(local_steps, 1), batch, ...) leaves;
+        ``n_flip > 0`` asks for flipped labels on the LAST n_flip cohort
+        rows (the label-flip attack acts through the data, not the vector).
+      schedule: time-varying attack schedule (family + eta per round).
+      byz_identity: object with ``.ids(round) -> np.ndarray`` (defaults to
+        the fixed last-f convention).
+    """
+    cfg = server.cfg
+    if byz_identity is None:
+        byz_identity = FixedByzantine(cfg.n_clients, cfg.f)
+    m = cfg.clients_per_round
+    m_byz = rescale_f(cfg.f, cfg.n_clients, m)
+    assert m_byz <= cohort_breakdown(m) or m_byz == 0
+    rng = np.random.default_rng(seed)
+    key = jax.random.PRNGKey(seed)
+    hist = FedHistory()
+
+    for r in range(rounds):
+        attack, eta = schedule.resolve(r)
+        cohort = sample_cohort(rng, cfg.n_clients, m,
+                               byz_identity.ids(r), m_byz)
+        n_flip = m_byz if attack == "lf" else 0
+        batch = batch_fn(cohort, n_flip, rng)
+        key, sub = jax.random.split(key)
+        step = server.round_fn(attack, m_byz)
+        eta_arg = jnp.float32(0.0 if eta is None else eta)
+        state, metrics = step(state, batch, jnp.asarray(cohort), eta_arg, sub)
+        hist.record(metrics, cohort=cohort, attack=attack, eta=eta,
+                    m_byz=m_byz, f_round=m_byz)
+    return state, hist

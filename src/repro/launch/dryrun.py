@@ -81,7 +81,8 @@ def build_train_target(model, cfg, axes, shape, n_workers, agg: AggregatorSpec,
     batch_abs, batch_specs = specslib.train_input_specs(cfg, shape, axes,
                                                         n_workers)
     key_abs = jax.ShapeDtypeStruct((2,), jnp.uint32)
-    jitted = jax.jit(step, in_shardings=(state_specs, batch_specs, P()))
+    jitted = jax.jit(step, in_shardings=meshlib.as_shardings(
+        (state_specs, batch_specs, P())))
     return jitted, (state_abs, batch_abs, key_abs)
 
 
@@ -89,7 +90,8 @@ def build_prefill_target(model, cfg, axes, shape):
     descs = model.param_descs()
     params_abs, params_specs = abstract(descs), partition_specs(descs)
     batch_abs, batch_specs = specslib.prefill_input_specs(cfg, shape, axes)
-    jitted = jax.jit(model.forward, in_shardings=(params_specs, batch_specs))
+    jitted = jax.jit(model.forward, in_shardings=meshlib.as_shardings(
+        (params_specs, batch_specs)))
     return jitted, (params_abs, batch_abs)
 
 
@@ -100,8 +102,9 @@ def build_decode_target(model, cfg, axes, shape):
     cache_abs, cache_specs = abstract(cache_descs), partition_specs(cache_descs)
     io_abs, io_specs = specslib.decode_input_specs(cfg, shape, axes)
     jitted = jax.jit(model.decode_step,
-                     in_shardings=(params_specs, cache_specs,
-                                   io_specs["tokens"], io_specs["pos"]))
+                     in_shardings=meshlib.as_shardings(
+                         (params_specs, cache_specs,
+                          io_specs["tokens"], io_specs["pos"])))
     return jitted, (params_abs, cache_abs, io_abs["tokens"], io_abs["pos"])
 
 
@@ -209,7 +212,7 @@ def dryrun_one(arch: str, shape_name: str, *, multi_pod: bool = False,
                           "pad_kv": pad_kv, "seq_par": seq_par,
                           "gqa_einsum": gqa_einsum}}
     t0 = time.time()
-    with jax.set_mesh(mesh), mesh_axes_scope(axes):
+    with meshlib.use_mesh(mesh), mesh_axes_scope(axes):
         model = build_model(cfg)
         if shape.kind == "train":
             jitted, args = build_train_target(

@@ -5,6 +5,9 @@ state (required: the dry-run sets XLA_FLAGS before any jax init).
 """
 from __future__ import annotations
 
+import contextlib
+from typing import Any, Optional
+
 import jax
 
 from repro.configs.base import ModelConfig
@@ -18,6 +21,61 @@ ICI_BW = 50e9                # bytes/s per link
 MODEL_PAR = 16
 DATA_PAR = 16
 PODS = 2
+
+
+_ACTIVE_MESH: Optional[jax.sharding.Mesh] = None
+
+
+@contextlib.contextmanager
+def use_mesh(mesh: jax.sharding.Mesh):
+    """Version-compatible mesh context.
+
+    jax renamed/moved the context-mesh API across releases: new versions
+    expose ``jax.set_mesh`` (and before that ``jax.sharding.use_mesh``);
+    older ones only have the ``Mesh`` resource-env context manager.  Code
+    should pair this with :func:`as_shardings` so ``jit(in_shardings=...)``
+    receives concrete ``NamedSharding``s, which every version accepts
+    (old jit rejects raw ``PartitionSpec``s outside ``set_mesh``).
+    """
+    global _ACTIVE_MESH
+    prev = _ACTIVE_MESH
+    _ACTIVE_MESH = mesh
+    try:
+        if hasattr(jax, "set_mesh"):
+            with jax.set_mesh(mesh):
+                yield mesh
+        elif hasattr(jax.sharding, "use_mesh"):
+            with jax.sharding.use_mesh(mesh):
+                yield mesh
+        else:
+            with mesh:
+                yield mesh
+    finally:
+        _ACTIVE_MESH = prev
+
+
+def current_mesh() -> Optional[jax.sharding.Mesh]:
+    """The mesh of the innermost active :func:`use_mesh` scope (or None)."""
+    return _ACTIVE_MESH
+
+
+def as_shardings(specs: Any, mesh: Optional[jax.sharding.Mesh] = None) -> Any:
+    """Pytree of PartitionSpec -> NamedSharding over ``mesh`` (defaults to
+    the active use_mesh scope).  Existing Sharding leaves pass through."""
+    if mesh is None:
+        mesh = _ACTIVE_MESH
+    if mesh is None:
+        raise ValueError("as_shardings needs a mesh or an active use_mesh()")
+
+    def conv(s):
+        if isinstance(s, jax.sharding.Sharding):
+            return s
+        return jax.sharding.NamedSharding(mesh, s)
+
+    return jax.tree_util.tree_map(
+        conv, specs,
+        is_leaf=lambda s: isinstance(
+            s, (jax.sharding.PartitionSpec, jax.sharding.Sharding)))
 
 
 def make_production_mesh(*, multi_pod: bool = False):

@@ -8,6 +8,11 @@ import numpy as np
 import pytest
 
 
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers", "slow: long-running integration tests (subprocess meshes)")
+
+
 @pytest.fixture(scope="session")
 def rng():
     return np.random.default_rng(0)

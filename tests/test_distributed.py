@@ -55,6 +55,7 @@ from repro.models import build_model, mesh_axes_scope, partition_specs, abstract
 from repro.models.common import MeshAxes
 from repro.optim import sgd
 from repro.optim.schedules import constant
+from repro.launch.mesh import as_shardings, use_mesh
 from repro.training import ByzantineConfig, TrainerConfig, build_train_step, init_state
 
 W, B, S = 4, 2, 16
@@ -85,8 +86,9 @@ def run(distributed):
                 params=pspecs, opt_state=(), step=P(),
                 momentum=[P(("data",)) for _ in state["momentum"]])
             batch_specs = {k: P(("data",)) for k in batch}
-            with jax.set_mesh(mesh):
-                step_j = jax.jit(step, in_shardings=(state_specs, batch_specs, P()))
+            with use_mesh(mesh):
+                step_j = jax.jit(step, in_shardings=as_shardings(
+                    (state_specs, batch_specs, P()), mesh))
                 state2, metrics = step_j(state, batch, jax.random.PRNGKey(2))
                 state2 = jax.device_get(state2)
         else:

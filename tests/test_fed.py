@@ -1,0 +1,294 @@
+"""Federated scenario engine tests.
+
+The load-bearing one is the reduction property: a full-participation,
+zero-local-steps fed round must equal a lockstep trainer step bit-for-bit
+— it proves the fed layer adds orchestration, not different math.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import AggregatorSpec
+from repro.fed import (
+    AttackSchedule, ClientConfig, FedConfig, FedServer, FixedByzantine,
+    RotatingByzantine, Scenario, cohort_breakdown, constant_attack,
+    get_scenario, list_scenarios, ramp_eta, register, rescale_f,
+    run_rounds, run_scenario, sample_cohort, switch_attack,
+)
+from repro.fed.clients import client_updates, init_client_momentum
+from repro.optim import sgd
+from repro.optim.schedules import constant
+from repro.training import (
+    ByzantineConfig, TrainerConfig, build_train_step, init_state,
+)
+
+
+def _quad_loss(centers):
+    def loss_fn(params, batch):
+        c = centers[batch["idx"][0]]
+        return 0.5 * jnp.sum((params["theta"] - c) ** 2), {}
+    return loss_fn
+
+
+def _centers(seed, n, d, spread=1.0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.normal(size=(n, d)) * spread, jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Reduction: full participation + local_steps=0 == trainer step, bit-for-bit.
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("attack,eta", [("alie", 3.0), ("sf", None),
+                                        ("none", None)])
+def test_full_participation_round_matches_trainer_step(attack, eta):
+    n, f, d, rounds = 8, 2, 6, 3
+    centers = _centers(0, n, d)
+    loss_fn = _quad_loss(centers)
+    agg = AggregatorSpec(rule="cwtm", f=f, pre="nnm")
+
+    tcfg = TrainerConfig(algorithm="dshb", beta=0.9, agg=agg,
+                         byz=ByzantineConfig(f=f, attack=attack, eta=eta))
+    optimizer = sgd(clip=1.0)
+    trainer_step = jax.jit(build_train_step(loss_fn, optimizer, tcfg,
+                                            constant(0.1)))
+
+    fcfg = FedConfig(n_clients=n, clients_per_round=n, f=f, agg=agg,
+                     client=ClientConfig(local_steps=0, algorithm="dshb",
+                                         beta=0.9))
+    server = FedServer(loss_fn, optimizer, fcfg, constant(0.1))
+    m_byz = rescale_f(f, n, n)
+    assert m_byz == f
+    fed_round = server.round_fn(attack, m_byz)
+
+    params = {"theta": jnp.zeros((d,), jnp.float32)}
+    t_state = init_state(params, optimizer, n, tcfg)
+    f_state = server.init_state(params)
+
+    t_batch = {"idx": np.tile(np.arange(n)[:, None], (1, 1))}
+    f_batch = {"idx": t_batch["idx"][:, None]}      # (n, L=1, B)
+    idx = jnp.arange(n, dtype=jnp.int32)
+    eta_arg = jnp.float32(0.0 if eta is None else eta)
+
+    key = jax.random.PRNGKey(7)
+    for _ in range(rounds):
+        key, sub = jax.random.split(key)
+        t_state, t_metrics = trainer_step(t_state, t_batch, sub)
+        f_state, f_metrics = fed_round(f_state, f_batch, idx, eta_arg, sub)
+
+        for a, b in zip(jax.tree_util.tree_leaves(t_state),
+                        jax.tree_util.tree_leaves(f_state)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        for k in ("loss", "direction_norm", "kappa_hat"):
+            np.testing.assert_array_equal(np.asarray(t_metrics[k]),
+                                          np.asarray(f_metrics[k]))
+
+
+def test_one_local_step_equals_gradient_mode():
+    """K=1 pseudo-gradient (p0 - p1)/lr is exactly the gradient at p0, so
+    local-SGD mode with one step must transmit the same stack as gradient
+    mode on the same data."""
+    n, d = 6, 5
+    centers = _centers(1, n, d)
+    loss_fn = _quad_loss(centers)
+    params = {"theta": jnp.asarray(np.random.default_rng(0)
+                                   .normal(size=d), jnp.float32)}
+    mom = init_client_momentum(params, n)
+    batch = {"idx": np.arange(n)[:, None, None]}    # (n, L=1, B=1)
+
+    out = {}
+    for k in (0, 1):
+        ccfg = ClientConfig(local_steps=k, local_lr=0.05, algorithm="dshb")
+        losses, sends, _ = client_updates(loss_fn, params, mom, batch, ccfg)
+        out[k] = (np.asarray(losses), [np.asarray(s) for s in sends])
+    np.testing.assert_allclose(out[0][0], out[1][0], rtol=1e-6)
+    for a, b in zip(out[0][1], out[1][1]):
+        np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-6)
+
+
+def test_local_steps_reduce_loss_without_adversary():
+    out = run_scenario("iid_baseline", rounds=8, seed=3)
+    assert out["history"].loss[-1] < out["history"].loss[0]
+    assert np.isfinite(out["accuracy"])
+
+
+# ---------------------------------------------------------------------------
+# Attack schedules.
+# ---------------------------------------------------------------------------
+
+def test_schedule_resolution_and_ramp():
+    sched = switch_attack((0, "none"), (5, "alie", 8.0), (10, "foe", 20.0))
+    assert sched.resolve(0) == ("none", None)
+    assert sched.resolve(4) == ("none", None)
+    assert sched.resolve(5) == ("alie", 8.0)
+    assert sched.resolve(9) == ("alie", 8.0)
+    assert sched.resolve(100) == ("foe", 20.0)
+
+    ramp = ramp_eta("foe", 1.0, 5.0, 4)
+    etas = [ramp.resolve(r)[1] for r in range(6)]
+    np.testing.assert_allclose(etas, [1.0, 2.0, 3.0, 4.0, 5.0, 5.0])
+
+
+def test_schedule_validation():
+    from repro.fed.schedules import AttackPhase
+    with pytest.raises(ValueError):
+        AttackSchedule((AttackPhase("alie", 3),))   # must start at 0
+    with pytest.raises(ValueError):
+        AttackPhase("not_an_attack", 0)
+    with pytest.raises(ValueError):
+        AttackPhase("alie", 0, 1.0, eta_end=2.0)    # ramp needs rounds
+    with pytest.raises(ValueError):
+        AttackPhase("foe", 0, None, eta_end=2.0, ramp_rounds=5)  # needs eta0
+
+
+def test_history_summary_merges_repeated_attack_segments():
+    from repro.fed import FedHistory
+    hist = FedHistory()
+    for r, (a, l) in enumerate([("none", 1.0), ("alie", 5.0), ("none", 3.0)]):
+        hist.record({"loss": l, "direction_norm": 0.0, "lr": 0.1},
+                    cohort=np.arange(4), attack=a, eta=None,
+                    m_byz=0, f_round=0)
+    s = hist.summary()
+    assert s["loss_none"] == pytest.approx(2.0)     # mean over BOTH segments
+    assert s["loss_alie"] == pytest.approx(5.0)
+
+
+def test_attack_switch_fires_at_configured_round():
+    """Same PRNG stream, same data: trajectories must agree exactly up to
+    the switch round and diverge at it."""
+    n, d, switch_round, rounds = 8, 5, 3, 6
+    centers = _centers(2, n, d)
+    loss_fn = _quad_loss(centers)
+    # average/no-pre so the attack passes straight into the direction.
+    fcfg = FedConfig(n_clients=n, clients_per_round=n, f=2,
+                     agg=AggregatorSpec(rule="average", f=2, pre=None),
+                     client=ClientConfig(algorithm="dgd"))
+    batch = {"idx": np.arange(n)[:, None, None]}
+
+    def batch_fn(cohort, n_flip, rng):
+        return {"idx": batch["idx"][cohort]}
+
+    norms = {}
+    for name, sched in (
+            ("const", constant_attack("none")),
+            ("switch", switch_attack((0, "none"), (switch_round, "sf")))):
+        server = FedServer(loss_fn, sgd(), fcfg, constant(0.1))
+        state = server.init_state({"theta": jnp.zeros((d,), jnp.float32)})
+        _, hist = run_rounds(server, state, batch_fn, rounds,
+                             schedule=sched, seed=11)
+        norms[name] = hist.direction_norm
+        if name == "switch":
+            assert hist.attack == ["none"] * switch_round + \
+                ["sf"] * (rounds - switch_round)
+    np.testing.assert_array_equal(norms["const"][:switch_round],
+                                  norms["switch"][:switch_round])
+    assert norms["const"][switch_round] != norms["switch"][switch_round]
+
+
+def test_rotating_byzantine_identity():
+    rot = RotatingByzantine(n_clients=10, f=3, period=2)
+    np.testing.assert_array_equal(rot.ids(0), [7, 8, 9])
+    np.testing.assert_array_equal(rot.ids(1), [7, 8, 9])
+    np.testing.assert_array_equal(rot.ids(2), [0, 1, 2])   # wrapped
+    np.testing.assert_array_equal(rot.ids(4), [3, 4, 5])
+    assert all(len(rot.ids(r)) == 3 for r in range(20))
+    np.testing.assert_array_equal(FixedByzantine(10, 3).ids(5), [7, 8, 9])
+
+
+# ---------------------------------------------------------------------------
+# Partial participation: f rescaling and cohort sampling.
+# ---------------------------------------------------------------------------
+
+def test_rescale_f_never_exceeds_cohort_breakdown():
+    for n in range(3, 40):
+        for f in range(0, (n - 1) // 2 + 1):
+            for m in range(1, n + 1):
+                fr = rescale_f(f, n, m)
+                assert fr <= cohort_breakdown(m) or fr == 0
+                assert fr < max(m / 2, 1)
+                if m == n:
+                    assert fr == f        # full participation: no rescale
+                if f > 0 and m > 2:
+                    assert fr >= 1        # adversary never vanishes
+
+
+def test_sample_cohort_orders_byzantine_last():
+    rng = np.random.default_rng(0)
+    byz = np.array([2, 5, 7])
+    for _ in range(20):
+        cohort = sample_cohort(rng, 10, 6, byz, m_byz=2)
+        assert len(cohort) == 6 and len(set(cohort.tolist())) == 6
+        assert all(c in byz for c in cohort[-2:])
+        assert all(c not in byz for c in cohort[:-2])
+
+
+def test_partial_participation_momentum_scatter():
+    """Unsampled clients keep stale momentum; sampled ones update."""
+    n, m, d = 8, 4, 3
+    centers = _centers(4, n, d)
+    fcfg = FedConfig(n_clients=n, clients_per_round=m, f=0,
+                     agg=AggregatorSpec(rule="average", f=0, pre=None),
+                     client=ClientConfig(algorithm="dshb", beta=0.5))
+    server = FedServer(_quad_loss(centers), sgd(), fcfg, constant(0.1))
+    state = server.init_state({"theta": jnp.zeros((d,), jnp.float32)})
+
+    def batch_fn(cohort, n_flip, rng):
+        return {"idx": np.asarray(cohort)[:, None, None]}
+
+    state, hist = run_rounds(server, state, batch_fn, 1, seed=5)
+    mom = np.asarray(state["momentum"][0])
+    sampled = hist.cohorts[0]
+    unsampled = np.setdiff1d(np.arange(n), sampled)
+    assert np.abs(mom[sampled]).sum() > 0
+    np.testing.assert_array_equal(mom[unsampled], 0.0)
+    np.testing.assert_array_equal(hist.participation_counts(n)[sampled], 1)
+
+
+# ---------------------------------------------------------------------------
+# Registry.
+# ---------------------------------------------------------------------------
+
+def test_registry_contents_and_errors():
+    names = list_scenarios()
+    for required in ("labelskew_alie_partial", "mimic_rotating",
+                     "dirichlet_localsgd"):
+        assert required in names
+    sc = get_scenario("labelskew_alie_partial")
+    assert sc.clients_per_round < sc.n_clients
+    with pytest.raises(KeyError):
+        get_scenario("nope")
+    with pytest.raises(ValueError):
+        register(sc)                      # duplicate name
+
+
+def test_scenario_fed_config_round_trip():
+    sc = get_scenario("dirichlet_localsgd")
+    fcfg = sc.fed_config()
+    assert fcfg.client.local_steps == 4
+    assert fcfg.agg.rule == sc.rule and fcfg.agg.pre == sc.pre
+    assert isinstance(sc.byz_identity(), FixedByzantine)
+    assert isinstance(get_scenario("mimic_rotating").byz_identity(),
+                      RotatingByzantine)
+
+
+def test_fed_config_validation():
+    with pytest.raises(ValueError):
+        FedConfig(n_clients=10, clients_per_round=11)
+    with pytest.raises(ValueError):
+        FedConfig(n_clients=10, clients_per_round=5, f=5)
+
+
+def test_run_scenario_end_to_end_smoke():
+    out = run_scenario("labelskew_alie_partial", rounds=4, seed=0)
+    hist = out["history"]
+    assert hist.rounds == 4
+    assert all(a == "alie" for a in hist.attack)
+    assert all(len(c) == 12 for c in hist.cohorts)
+    assert np.isfinite(out["accuracy"])
+    # one attack family => exactly one compiled round function
+    # (the jit-once contract the benchmark relies on)
+    counts = hist.participation_counts(20)
+    assert counts.sum() == 4 * 12

@@ -4,6 +4,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")  # optional dev dep; skip cleanly when absent
 from hypothesis import given, settings, strategies as st
 
 from repro.kernels.gram import gram, gram_ref

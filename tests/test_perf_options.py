@@ -86,6 +86,7 @@ import sys; sys.path.insert(0, %r)
 import jax, jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 from repro.configs import reduced_config
+from repro.launch.mesh import use_mesh
 from repro.models import build_model, mesh_axes_scope, partition_specs
 from repro.models.common import MeshAxes
 cfg = reduced_config("minitron-8b")
@@ -94,7 +95,7 @@ axes = MeshAxes(data=("data",), model="model", model_par=2,
                 shard_kv=True, pad_kv_to_mesh=True)
 key = jax.random.PRNGKey(0)
 tokens = jax.random.randint(key, (2, 16), 0, cfg.vocab_size)
-with jax.set_mesh(mesh), mesh_axes_scope(axes):
+with use_mesh(mesh), mesh_axes_scope(axes):
     model = build_model(cfg)
     params = model.init(key)
     logits = model.forward(params, {"tokens": tokens})
