@@ -1,0 +1,209 @@
+"""Fleet engine throughput: aggregate rounds/sec, lane-batched vs the
+sequential per-job loops, plus the one-compile-per-shape-bucket assertion.
+
+Two sequential baselines bracket the fleet:
+
+* ``engine`` — the PR-1 status quo: a Python loop over jobs, each driven
+  by the single-scenario engine (`FedServer` + `run_rounds`).  This is the
+  loop the fleet replaces and the >=3x acceptance bar is measured against.
+* ``lanes1`` — the SAME dynamic compiled round stepped one job at a time
+  (`FleetRunner(max_lanes=1)`); the strictest possible baseline, isolating
+  pure lane-batching (one device dispatch per round instead of one per
+  job-round + per-round metric syncs).
+
+Workloads: ``fleet_quad`` (lightweight quadratic clients, negligible host
+batch building — the number the CI perf gate tracks) and ``fleet_mlp``
+(registry-style MLP scenarios with real Dirichlet cohort batches, the
+end-to-end figure).
+
+All paths run once to pay compiles, then the median of 3 timed runs
+counts; the bench asserts the fleet traced exactly once per shape bucket.
+
+  PYTHONPATH=src python benchmarks/bench_fleet.py [--full] [--check]
+                                                  [--json-out PATH]
+"""
+import argparse
+import json
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core import AggregatorSpec
+from repro.fed import ClientConfig, FedConfig, FedServer, constant_attack, \
+    ramp_eta, run_rounds, switch_attack
+from repro.fleet import FleetJob, FleetRunner, ScenarioSpec
+from repro.optim import sgd
+from repro.optim.schedules import constant
+
+LANES = 8
+
+_OPT = sgd(clip=1.0)
+
+
+def _quad_jobs(b: int, rounds: int, *, n: int = 12, m: int = 8,
+               d: int = 16) -> list:
+    rng = np.random.default_rng(0)
+    centers = jnp.asarray(rng.normal(size=(n, d)), jnp.float32)
+
+    def loss_fn(params, batch):
+        c = centers[batch["idx"][0]]
+        return 0.5 * jnp.sum((params["theta"] - c) ** 2), {}
+
+    def batch_fn(cohort, n_flip, rng):
+        return {"idx": np.asarray(cohort)[:, None, None]}
+
+    schedules = [constant_attack("alie", 3.0), constant_attack("sf"),
+                 constant_attack("none"), ramp_eta("foe", 1.0, 8.0, rounds),
+                 switch_attack((0, "none"), (rounds // 2, "mimic"))]
+    jobs = []
+    for k in range(b):
+        f = (k % 3) + 1
+        cfg = FedConfig(n_clients=n, clients_per_round=m, f=f,
+                        agg=AggregatorSpec(rule="cwtm", f=f, pre="nnm"),
+                        client=ClientConfig(algorithm="dshb", beta=0.9))
+        jobs.append(FleetJob(
+            label=f"quad{k}", cfg=cfg, loss_fn=loss_fn, optimizer=_OPT,
+            params={"theta": jnp.zeros((d,), jnp.float32)},
+            batch_fn=batch_fn, rounds=rounds, seed=k,
+            schedule=schedules[k % len(schedules)], lr_fn=lambda r: 0.1))
+    return jobs
+
+
+def _median(xs: list) -> float:
+    return sorted(xs)[len(xs) // 2]
+
+
+def _timed_interleaved(fns: list, reps: int = 5) -> list[list[float]]:
+    """Steady-state wall seconds, INTERLEAVED across the candidates.
+
+    Each rep times every candidate back-to-back, so machine-load drift
+    (noisy shared CPU) lands on all of them instead of biasing whichever
+    ran last; callers gate on medians of per-rep numbers.  Compiles are
+    paid by one warmup sweep first.
+    """
+    for fn in fns:
+        fn()                        # warm every jit cache involved
+    times: list[list[float]] = [[] for _ in fns]
+    for _ in range(reps):
+        for slot, fn in zip(times, fns):
+            t0 = time.perf_counter()
+            fn()
+            slot.append(time.perf_counter() - t0)
+    return times
+
+
+def _engine_loop(jobs: list):
+    """The PR-1 sequential loop: one `run_rounds` per job, reusing each
+    job's `FedServer` (and thus its per-attack-family jit cache)."""
+    servers = [FedServer(j.loss_fn, j.optimizer, j.cfg,
+                         constant(float(j.lr_fn(0)))) for j in jobs]
+
+    def run_all():
+        for job, server in zip(jobs, servers):
+            state = server.init_state(job.params)
+            run_rounds(server, state, job.batch_fn, job.rounds,
+                       schedule=job.schedule,
+                       byz_identity=job.byz_identity, seed=job.seed)
+    return run_all
+
+
+def bench_quad(rounds: int) -> dict:
+    jobs = _quad_jobs(LANES, rounds)
+    fleet = FleetRunner(jobs)
+    lanes1 = FleetRunner(jobs, max_lanes=1)
+
+    fleet_t, engine_t, lanes1_t = _timed_interleaved(
+        [fleet.run, _engine_loop(jobs), lanes1.run])
+    fleet_s, engine_s, lanes1_s = map(_median, (fleet_t, engine_t, lanes1_t))
+    assert fleet.n_buckets == 1, "quad jobs must share one shape bucket"
+    assert fleet.trace_count == 1, \
+        f"fleet must compile once per shape bucket, traced {fleet.trace_count}"
+    assert lanes1.trace_count == 1, \
+        f"sequential chunks must share the compile, traced {lanes1.trace_count}"
+
+    total = LANES * rounds
+    out = {
+        "lanes": LANES,
+        "rounds": rounds,
+        "fleet_rounds_per_s": total / fleet_s,
+        "engine_rounds_per_s": total / engine_s,
+        "lanes1_rounds_per_s": total / lanes1_s,
+        # Medians of PER-REP ratios: immune to drift between candidates.
+        "speedup": _median([e / f for e, f in zip(engine_t, fleet_t)]),
+        "speedup_vs_lanes1": _median([s / f
+                                      for s, f in zip(lanes1_t, fleet_t)]),
+        "compile_count_fleet": fleet.trace_count,
+        "compile_count_sequential": lanes1.trace_count,
+    }
+    emit(f"fleet_quad_B{LANES}_fleet", fleet_s / total * 1e6,
+         f"agg_rounds_per_s={out['fleet_rounds_per_s']:.1f}")
+    emit(f"fleet_quad_B{LANES}_engine_loop", engine_s / total * 1e6,
+         f"agg_rounds_per_s={out['engine_rounds_per_s']:.1f}")
+    emit(f"fleet_quad_B{LANES}_lanes1", lanes1_s / total * 1e6,
+         f"agg_rounds_per_s={out['lanes1_rounds_per_s']:.1f}")
+    emit(f"fleet_quad_B{LANES}_speedup", 0.0,
+         f"x{out['speedup']:.2f}_vs_engine,"
+         f"x{out['speedup_vs_lanes1']:.2f}_vs_lanes1,"
+         f"compiles={fleet.trace_count}")
+    return out
+
+
+def bench_mlp(rounds: int) -> dict:
+    from repro.fleet import job_from_spec
+    jobs = [job_from_spec(ScenarioSpec("labelskew_alie_partial", seed=s,
+                                       rounds=rounds, label=f"mlp{s}"))
+            for s in range(LANES)]
+    fleet = FleetRunner(jobs)
+    fleet_t, engine_t = _timed_interleaved([fleet.run, _engine_loop(jobs)],
+                                           reps=3)
+    fleet_s, engine_s = map(_median, (fleet_t, engine_t))
+    assert fleet.trace_count == 1
+
+    total = LANES * rounds
+    out = {
+        "mlp_fleet_rounds_per_s": total / fleet_s,
+        "mlp_engine_rounds_per_s": total / engine_s,
+        "mlp_speedup": _median([e / f for e, f in zip(engine_t, fleet_t)]),
+    }
+    emit(f"fleet_mlp_B{LANES}_fleet", fleet_s / total * 1e6,
+         f"agg_rounds_per_s={out['mlp_fleet_rounds_per_s']:.1f}")
+    emit(f"fleet_mlp_B{LANES}_engine_loop", engine_s / total * 1e6,
+         f"agg_rounds_per_s={out['mlp_engine_rounds_per_s']:.1f}")
+    emit(f"fleet_mlp_B{LANES}_speedup", 0.0, f"x{out['mlp_speedup']:.2f}")
+    return out
+
+
+def main(fast: bool = True, *, check: bool = False,
+         json_out: str | None = None, with_mlp: bool | None = None) -> dict:
+    rounds = 30 if fast else 100
+    results = bench_quad(rounds)
+    if with_mlp if with_mlp is not None else not fast:
+        results.update(bench_mlp(max(rounds // 3, 10)))
+    if check:
+        assert results["speedup"] >= 3.0, \
+            (f"lane batching must be >=3x the sequential loop at B={LANES}, "
+             f"got x{results['speedup']:.2f}")
+    if json_out:
+        with open(json_out, "w") as fh:
+            json.dump(results, fh, indent=2, sort_keys=True)
+        print(f"wrote {json_out}")
+    return results
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--check", action="store_true",
+                    help="assert the >=3x speedup acceptance bar")
+    ap.add_argument("--json-out", default=None)
+    ap.add_argument("--mlp", action="store_true",
+                    help="also run the end-to-end MLP scenario figure")
+    args = ap.parse_args()
+    main(fast=not args.full, check=args.check, json_out=args.json_out,
+         with_mlp=args.mlp or None)

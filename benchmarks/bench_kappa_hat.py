@@ -10,7 +10,7 @@ from repro.data import build_heterogeneous, make_classification, worker_batches
 from repro.optim import sgd
 from repro.optim.schedules import constant
 from repro.training import ByzantineConfig, TrainerConfig, train_loop
-from benchmarks.bench_accuracy_grid import _loss, _mlp_init
+from repro.fed.scenarios import _mlp_init, _mlp_loss as _loss
 
 
 def main(fast: bool = True):

@@ -1,26 +1,42 @@
 """Benchmark harness entry point: one module per paper table/figure.
 
 Prints ``name,us_per_call,derived`` CSV rows.  ``--full`` runs the paper-
-scale grids (much slower); default is the fast CI-sized pass.
+scale grids (much slower); default is the fast CI-sized pass.  ``--smoke``
+runs ONLY the fleet throughput bench and writes its JSON summary (consumed
+by ``scripts/perf_gate.py`` in CI).
 """
 import argparse
+import os
 import sys
 import time
+
+# Allow `python benchmarks/run.py` from the repo root without PYTHONPATH=.
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
+    ap.add_argument("--smoke", action="store_true",
+                    help="fleet perf smoke only; writes --json-out")
+    ap.add_argument("--json-out", default="BENCH_fleet.json",
+                    help="summary path for --smoke (default: %(default)s)")
     ap.add_argument("--only", default=None,
                     help="comma-separated subset: kappa,grid,kappahat,cost,"
-                         "convergence,roofline")
+                         "convergence,roofline,fed,fleet")
     args = ap.parse_args()
     fast = not args.full
     only = set(args.only.split(",")) if args.only else None
 
+    if args.smoke:
+        from benchmarks import bench_fleet
+        bench_fleet.main(fast=True, json_out=args.json_out)
+        return
+
     from benchmarks import (bench_accuracy_grid, bench_agg_cost,
-                            bench_convergence, bench_kappa_hat,
-                            bench_kappa_table1, bench_roofline)
+                            bench_convergence, bench_fed_rounds, bench_fleet,
+                            bench_kappa_hat, bench_kappa_table1,
+                            bench_roofline)
 
     suites = [
         ("kappa", bench_kappa_table1.main),
@@ -28,6 +44,8 @@ def main() -> None:
         ("cost", bench_agg_cost.main),
         ("kappahat", bench_kappa_hat.main),
         ("grid", bench_accuracy_grid.main),
+        ("fed", bench_fed_rounds.main),
+        ("fleet", bench_fleet.main),
         ("roofline", bench_roofline.main),
     ]
     print("name,us_per_call,derived")

@@ -2,11 +2,20 @@
 under extreme heterogeneity (alpha = 0.1), n = 17, f = 4 — the paper's
 exact distributed setting, on the synthetic stand-in task.
 
+All cells of a (rule, pre) pair run as ONE fleet lane bucket (see
+repro.fleet): the whole grid costs one compile per pair, and every attack
+lane trains concurrently in the same jitted round.
+
   PYTHONPATH=src python examples/byzantine_classification.py [--full]
 """
 import argparse
+import os
+import sys
 
-from benchmarks.bench_accuracy_grid import _make_task, run_cell
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+from benchmarks.bench_accuracy_grid import _grid_jobs, _make_task
+from repro.fleet import FleetRunner
 
 
 def main():
@@ -18,17 +27,29 @@ def main():
     rules = ("cwtm", "gm", "krum", "cwmed") if args.full else ("cwtm", "gm")
     attacks = ("alie", "foe", "sf", "lf", "mimic") if args.full \
         else ("alie", "foe", "lf")
+    pres = (None, "bucketing", "nnm")
 
     train, test = _make_task()
-    base = run_cell(train, test, rule="average", pre=None, attack="none",
-                    alpha=args.alpha, steps=steps)
-    print(f"baseline D-SHB (f=0): {base:.3f}\n")
-    header = f"{'rule':8s} {'pre':10s} " + "  ".join(f"{a:>6s}" for a in attacks) + "   worst"
+    cell = _grid_jobs(train, test, alpha=args.alpha, steps=steps)
+
+    jobs = [cell("baseline", "average", None, "none", 0)]
+    for rule in rules:
+        for pre in pres:
+            for attack in attacks:
+                jobs.append(cell(f"{rule}|{pre}|{attack}", rule, pre,
+                                 attack, 4))
+    runner = FleetRunner(jobs)
+    results = {r.label: r.best_eval for r in runner.run()}
+
+    print(f"baseline D-SHB (f=0): {results['baseline']:.3f}   "
+          f"[{runner.n_buckets} shape buckets, "
+          f"{runner.trace_count} compiles]\n")
+    header = f"{'rule':8s} {'pre':10s} " + \
+        "  ".join(f"{a:>6s}" for a in attacks) + "   worst"
     print(header)
     for rule in rules:
-        for pre in (None, "bucketing", "nnm"):
-            accs = [run_cell(train, test, rule=rule, pre=pre, attack=a,
-                             alpha=args.alpha, steps=steps) for a in attacks]
+        for pre in pres:
+            accs = [results[f"{rule}|{pre}|{a}"] for a in attacks]
             print(f"{rule:8s} {str(pre):10s} " +
                   "  ".join(f"{a:6.3f}" for a in accs) +
                   f"  {min(accs):6.3f}")

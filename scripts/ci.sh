@@ -1,7 +1,14 @@
 #!/usr/bin/env bash
 # One-line reproducible tier-1 suite (ROADMAP.md "Tier-1 verify").
-# Usage: scripts/ci.sh [extra pytest args...]
+# Usage: scripts/ci.sh [--no-x] [extra pytest args...]
+#   --no-x  drop fail-fast: run the FULL suite and report every failure
+#           (what the CI matrix uses so one red test doesn't hide others).
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
-exec python -m pytest -x -q "$@"
+FAIL_FAST=(-x)
+if [[ "${1:-}" == "--no-x" ]]; then
+  FAIL_FAST=()
+  shift
+fi
+exec python -m pytest ${FAIL_FAST[@]+"${FAIL_FAST[@]}"} -q "$@"

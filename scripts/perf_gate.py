@@ -1,0 +1,87 @@
+#!/usr/bin/env python
+"""CI perf gate: fail on fleet-throughput regression vs the checked-in
+baseline.
+
+    PYTHONPATH=src python benchmarks/run.py --smoke --json-out BENCH_fleet.json
+    python scripts/perf_gate.py BENCH_fleet.json \
+        [--baseline benchmarks/baselines/BENCH_fleet.json] \
+        [--tolerance 0.30] [--strict]
+
+Hard gates (each must hold or the script exits 1):
+
+* ``speedup``             >= (1 - tolerance) * baseline — fleet vs the
+  sequential per-job engine loop, measured as the median of interleaved
+  per-rep ratios.  Machine-normalized: a uniformly slower/faster runner
+  moves both sides, so only genuine lane-batching regressions trip it;
+* ``compile_count_fleet`` <= baseline — the one-compile-per-shape-bucket
+  contract is a hard equality, never tolerance-scaled.
+
+Informational (gated only with ``--strict``, for perf work on the same
+host class as the baseline):
+
+* ``fleet_rounds_per_s``  — ABSOLUTE aggregate throughput.  Baselines are
+  host-dependent, so on shared/foreign runners this is reported but does
+  not fail the build.
+
+To refresh the baseline after an intentional change, re-run the smoke
+bench on a quiet machine and copy the JSON over the baseline file (see
+docs/ci.md).
+"""
+import argparse
+import json
+import sys
+
+RATIO_GATES = ("speedup",)
+EXACT_GATES = ("compile_count_fleet",)
+STRICT_GATES = ("fleet_rounds_per_s",)
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("current", help="JSON from benchmarks/run.py --smoke")
+    ap.add_argument("--baseline",
+                    default="benchmarks/baselines/BENCH_fleet.json")
+    ap.add_argument("--tolerance", type=float, default=0.30,
+                    help="allowed fractional regression (default 30%%)")
+    ap.add_argument("--strict", action="store_true",
+                    help="also gate absolute throughput (same-host runs)")
+    args = ap.parse_args()
+
+    with open(args.current) as fh:
+        cur = json.load(fh)
+    with open(args.baseline) as fh:
+        base = json.load(fh)
+
+    failures = []
+
+    def check_floor(key, gated):
+        floor = base[key] * (1.0 - args.tolerance)
+        ok = cur[key] >= floor
+        tag = ("OK" if ok else "FAIL") if gated else \
+            ("ok" if ok else "info: below baseline floor")
+        print(f"[{tag}] {key}: {cur[key]:.2f} "
+              f"(baseline {base[key]:.2f}, floor {floor:.2f})")
+        if gated and not ok:
+            failures.append(key)
+
+    for key in RATIO_GATES:
+        check_floor(key, gated=True)
+    for key in STRICT_GATES:
+        check_floor(key, gated=args.strict)
+    for key in EXACT_GATES:
+        ok = cur[key] <= base[key]
+        print(f"[{'OK' if ok else 'FAIL'}] {key}: {cur[key]} "
+              f"(baseline {base[key]}, exact)")
+        if not ok:
+            failures.append(key)
+
+    if failures:
+        print(f"perf gate FAILED: {', '.join(failures)} regressed beyond "
+              f"{args.tolerance:.0%} of {args.baseline}", file=sys.stderr)
+        return 1
+    print("perf gate passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -11,13 +11,11 @@ and run their internal arithmetic in fp32.
 """
 from __future__ import annotations
 
-from functools import partial
-
 import jax
 import jax.numpy as jnp
 
 from repro.core import gram as gramlib
-from repro.core.types import AggregatorSpec, COORDINATE_RULES, GRAM_RULES
+from repro.core.types import AggregatorSpec
 
 Array = jax.Array
 

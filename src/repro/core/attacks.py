@@ -17,7 +17,6 @@ gradients on labels 9 - l).  `lf` here is a passthrough marker.
 """
 from __future__ import annotations
 
-from functools import partial
 from typing import Callable, Optional
 
 import jax
@@ -65,8 +64,11 @@ def mimic(honest: Array, f: int, *, target: Optional[Array] = None, **_) -> Arra
     h = honest.astype(jnp.float32)
     if target is None:
         centered = h - h.mean(axis=0, keepdims=True)
-        # one power-iteration step: v ~ top eigvec of centered^T centered
-        v = centered.sum(axis=0)
+        # One power-iteration step: v ~ top eigvec of centered^T centered.
+        # Seed with the per-coordinate energy diag(C^T C): the all-ones /
+        # row-sum seed lies in the centered stack's null space, leaving the
+        # iteration to amplify rounding noise.
+        v = (centered ** 2).sum(axis=0)
         v = centered.T @ (centered @ v)
         norm = jnp.linalg.norm(v) + 1e-12
         scores = centered @ (v / norm)
@@ -114,6 +116,16 @@ ATTACKS: dict[str, Callable] = {
 }
 
 
+def _require_agg_closure(name: str, agg_closure) -> None:
+    """Optimized attacks grid-search eta against the DEPLOYED aggregator;
+    without the closure there is nothing to optimize against."""
+    if name.endswith("_opt") and agg_closure is None:
+        raise ValueError(
+            f"optimized attack {name!r} requires agg_closure= (the deployed "
+            "aggregation rule as a stack -> aggregate callable); pass it or "
+            f"use the non-adaptive {name.removesuffix('_opt')!r}")
+
+
 def apply_attack(name: str, honest: Array, f: int, **kw) -> Array:
     """Attacked full stack (n, d): honest rows followed by f Byzantine rows.
 
@@ -126,6 +138,7 @@ def apply_attack(name: str, honest: Array, f: int, **kw) -> Array:
         return honest
     if name not in ATTACKS:
         raise ValueError(f"unknown attack {name!r}; known: {sorted(ATTACKS)}")
+    _require_agg_closure(name, kw.get("agg_closure"))
     byz = ATTACKS[name](honest, f, **kw)
     return jnp.concatenate([honest.astype(jnp.float32), byz], axis=0)
 
@@ -167,7 +180,7 @@ def apply_attack_tree(name: str, tree, f: int, *, eta: float | None = None,
     if name in ("alie", "foe", "sf", "alie_opt", "foe_opt"):
         base = name.split("_")[0]
         if name.endswith("_opt"):
-            assert agg_closure is not None, "optimized attacks need agg_closure"
+            _require_agg_closure(name, agg_closure)
             best_eta = _tree_eta_search(base, tree, nh, f, agg_closure, eta_grid)
         else:
             best_eta = eta if eta is not None else (1.0 if base == "alie" else 2.0)
@@ -184,14 +197,135 @@ def apply_attack_tree(name: str, tree, f: int, *, eta: float | None = None,
         g = robust_lib.tree_gram(honest)
         # Gram of the centered stack: C = (I - 11^T/n) G (I - 11^T/n)
         c = g - g.mean(0, keepdims=True) - g.mean(1, keepdims=True) + g.mean()
-        # one power-iteration in coefficient space
-        v = c @ jnp.ones((nh,), jnp.float32)
-        v = c @ (c @ v)
+        # One power iteration in coefficient space, seeded with diag(c)
+        # (centered row energies) — the ones vector is in c's null space.
+        v = c @ (c @ jnp.diagonal(c))
         scores = jnp.abs(v)
         target = jnp.argmax(scores)
         return leafwise(lambda h: h[target])
 
     raise ValueError(f"unknown attack {name!r}")
+
+
+# ---------------------------------------------------------------------------
+# Lane-dynamic attacks (fleet engine).
+#
+# The attack FAMILY becomes a traced int32 selecting a `lax.switch` branch,
+# and the Byzantine count and eta become traced scalars, so one compiled
+# round serves lanes running different adversaries.  Honest statistics are
+# computed with row masks (row < n - f) instead of static slices.  The
+# optimized (_opt) variants are excluded: their eta line search re-runs the
+# deployed aggregator per grid point, which under vmap+switch would execute
+# for EVERY lane every round — schedule them through the static per-family
+# path instead.
+# ---------------------------------------------------------------------------
+
+#: switch branch order of :func:`apply_attack_dyn`; "lf" and "none" share
+#: the passthrough branch (LF acts through the data pipeline).
+DYN_ATTACK_FAMILIES = ("none", "alie", "foe", "sf", "mimic")
+
+
+def dyn_attack_id(name: str) -> int:
+    """Map an attack name to its `apply_attack_dyn` branch index."""
+    if name == "lf":
+        return 0
+    if name in ("alie_opt", "foe_opt"):
+        raise ValueError(
+            f"{name!r} is not lane-dynamic (its eta search re-runs the "
+            "aggregator per grid point); run it through the static path")
+    if name not in DYN_ATTACK_FAMILIES:
+        raise ValueError(f"unknown attack {name!r}; lane-dynamic families: "
+                         f"{DYN_ATTACK_FAMILIES} (+ 'lf')")
+    return DYN_ATTACK_FAMILIES.index(name)
+
+
+def _masked_moments(tree, w, nh: Array):
+    """Per-leaf (mean, std) over the first n-f rows, traced nh = n - f."""
+    stats = []
+    for leaf in jax.tree_util.tree_leaves(tree):
+        h = leaf.astype(jnp.float32)
+        wl = w.reshape((-1,) + (1,) * (h.ndim - 1))
+        cnt = jnp.maximum(nh.astype(jnp.float32), 1.0)
+        mean = (h * wl).sum(0) / cnt
+        var = (wl * (h - mean) ** 2).sum(0) / cnt
+        stats.append((mean, jnp.sqrt(var)))
+    return stats
+
+
+def apply_attack_dyn(attack_id: Array, tree, f: Array, *, eta: Array):
+    """Attacked worker-stacked pytree with TRACED (family, f, eta).
+
+    ``attack_id`` indexes :data:`DYN_ATTACK_FAMILIES`; rows >= n - f of
+    every leaf are overwritten by the selected family's Byzantine vector.
+    f == 0 (or the passthrough branch) leaves the stack untouched.  All
+    branch outputs share the stack's structure/shapes, as `lax.switch`
+    requires; under vmap every branch executes and the result is selected
+    per lane — the branches are O(n d) / one O(n^2 d) gram (mimic), cheap
+    next to the client pass.
+    """
+    leaves = jax.tree_util.tree_leaves(tree)
+    n = leaves[0].shape[0]
+    nh = (n - f).astype(jnp.int32)
+    row = jnp.arange(n)
+    w = (row < nh).astype(jnp.float32)
+    stats = _masked_moments(tree, w, nh)
+    treedef = jax.tree_util.tree_structure(tree)
+
+    def from_byz(byz_values):
+        """Broadcast per-leaf Byzantine vectors over the full stack shape."""
+        out = []
+        for leaf, byz in zip(leaves, byz_values):
+            out.append(jnp.broadcast_to(byz, leaf.shape).astype(jnp.float32))
+        return out
+
+    def br_passthrough():
+        return [leaf.astype(jnp.float32) for leaf in leaves]
+
+    def br_alie():
+        return from_byz([m + eta * s for m, s in stats])
+
+    def br_foe():
+        return from_byz([(1.0 - eta) * m for m, _ in stats])
+
+    def br_sf():
+        return from_byz([-m for m, _ in stats])
+
+    def br_mimic():
+        # Target = honest row most aligned with the honest stack's top
+        # principal direction, via one power iteration in coefficient space
+        # (same scheme as the static path, with byz rows masked out).
+        from repro.core import robust as robust_lib
+        centered = []
+        for leaf, (mean, _) in zip(leaves, stats):
+            h = leaf.astype(jnp.float32)
+            wl = w.reshape((-1,) + (1,) * (h.ndim - 1))
+            centered.append((h - mean) * wl)
+        c = robust_lib.tree_gram(jax.tree_util.tree_unflatten(treedef, centered))
+        # Same diag(c) power-iteration seed as the static path (byz rows of
+        # the masked centered gram are zero, so their scores stay zero).
+        v = c @ (c @ jnp.diagonal(c))
+        scores = jnp.abs(v) * w
+        target = jnp.argmax(scores)
+        return from_byz([leaf.astype(jnp.float32)[target] for leaf in leaves])
+
+    byz = jax.lax.switch(attack_id,
+                         (br_passthrough, br_alie, br_foe, br_sf, br_mimic))
+    byz_rows = row >= nh
+
+    out_leaves = []
+    for leaf, b in zip(leaves, byz):
+        mask = byz_rows.reshape((-1,) + (1,) * (leaf.ndim - 1))
+        out_leaves.append(
+            jnp.where(mask, b, leaf.astype(jnp.float32)).astype(leaf.dtype))
+    return jax.tree_util.tree_unflatten(treedef, out_leaves)
+
+
+def apply_attack_batched(attack_ids: Array, tree, fs: Array, *, etas: Array):
+    """Lane-batched stack attack: leaves carry a leading LANE axis, and
+    (family, f, eta) are per-lane vectors — `vmap` of `apply_attack_dyn`."""
+    return jax.vmap(
+        lambda aid, t, f, eta: apply_attack_dyn(aid, t, f, eta=eta),
+        in_axes=(0, 0, 0, 0))(attack_ids, tree, fs, etas)
 
 
 def _tree_eta_search(base: str, tree, nh: int, f: int, agg_closure, eta_grid):

@@ -12,7 +12,6 @@ All functions are jit-safe and operate on fp32 n x n matrices.
 from __future__ import annotations
 
 import itertools
-from functools import partial
 
 import jax
 import jax.numpy as jnp
@@ -169,4 +168,76 @@ def coeff_for_rule(rule: str, g: Array, f: int, *, gm_iters: int = 8,
         return gm_coeff(g, f, iters=gm_iters, eps=gm_eps)
     if rule == "mda":
         return mda_coeff(d2, f)
+    raise ValueError(f"{rule!r} is not a gram-space rule")
+
+
+# ---------------------------------------------------------------------------
+# Dynamic-f variants (fleet engine): f is a TRACED int32 scalar, so one
+# compiled round serves lanes with different Byzantine budgets.  Shapes stay
+# static; selection happens through rank masks instead of top_k slices.
+# ---------------------------------------------------------------------------
+
+def _row_ranks(d2: Array) -> Array:
+    """rank[i, j] = position of j in ascending order of row i (0 = nearest)."""
+    order = jnp.argsort(d2, axis=1)
+    return jnp.argsort(order, axis=1)
+
+
+def nnm_matrix_dyn(d2: Array, f: Array) -> Array:
+    """`nnm_matrix` with a traced Byzantine count.
+
+    Row i averages the n-f nearest neighbors of x_i, selected by a rank
+    mask (rank < n-f) instead of a static top_k, so f may differ per jit
+    invocation / per vmapped lane without recompiling.
+    """
+    n = d2.shape[0]
+    k = (n - f).astype(jnp.float32)
+    mask = (_row_ranks(d2) < (n - f)).astype(jnp.float32)
+    return mask / k
+
+
+def _krum_scores_dyn(d2: Array, f: Array) -> Array:
+    """Sum of the n-f smallest distances per candidate row, traced f."""
+    n = d2.shape[0]
+    srt = jnp.sort(d2, axis=1)
+    keep = (jnp.arange(n)[None, :] < (n - f)).astype(jnp.float32)
+    return (srt * keep).sum(axis=1)
+
+
+def krum_coeff_dyn(d2: Array, f: Array) -> Array:
+    """`krum_coeff` with traced f (same argmin selection, masked scoring)."""
+    n = d2.shape[0]
+    scores = _krum_scores_dyn(d2, f)
+    return jax.nn.one_hot(jnp.argmin(scores), n, dtype=jnp.float32)
+
+
+def multikrum_coeff_dyn(d2: Array, f: Array) -> Array:
+    """`multikrum_coeff` with traced f: average the n-f best-scoring rows."""
+    n = d2.shape[0]
+    scores = _krum_scores_dyn(d2, f)
+    rank = jnp.argsort(jnp.argsort(scores))
+    sel = (rank < (n - f)).astype(jnp.float32)
+    return sel / (n - f).astype(jnp.float32)
+
+
+def coeff_for_rule_dyn(rule: str, g: Array, f: Array, *, gm_iters: int = 8,
+                       gm_eps: float = 1e-8) -> Array:
+    """`coeff_for_rule` with a traced f (rule itself stays static).
+
+    MDA is excluded: its exact form enumerates (n-f)-subsets, whose count is
+    shape-level and cannot be traced.
+    """
+    n = g.shape[0]
+    if rule == "average":
+        return jnp.full((n,), 1.0 / n, dtype=jnp.float32)
+    if rule == "gm":
+        return gm_coeff(g, 0, iters=gm_iters, eps=gm_eps)
+    d2 = pdist_sq_from_gram(g)
+    if rule == "krum":
+        return krum_coeff_dyn(d2, f)
+    if rule == "multikrum":
+        return multikrum_coeff_dyn(d2, f)
+    if rule == "mda":
+        raise ValueError("mda has no dynamic-f form (subset enumeration is "
+                         "shape-level); use the static path or another rule")
     raise ValueError(f"{rule!r} is not a gram-space rule")

@@ -23,7 +23,6 @@ Both paths do ranking-sensitive arithmetic in fp32.
 """
 from __future__ import annotations
 
-from functools import partial
 from typing import Any, Optional
 
 import jax
@@ -210,6 +209,133 @@ def robust_aggregate(tree: PyTree, spec: AggregatorSpec, *,
         return out
 
     raise ValueError(f"unknown rule {spec.rule!r}")
+
+
+# ---------------------------------------------------------------------------
+# Dynamic-f pipeline (fleet engine): `f` is a TRACED int32 scalar so one
+# compiled aggregation serves lanes with different Byzantine budgets.  The
+# rule / pre-aggregation / bucket size stay static (shape-bucket key
+# material); trimming and neighbor selection go through rank masks instead
+# of static slices.  `batched_robust_aggregate` vmaps this over a leading
+# lane axis.
+# ---------------------------------------------------------------------------
+
+def _tree_coordinate_rule_dyn(tree: PyTree, rule: str, f: Array) -> PyTree:
+    """Coordinate-wise rules with a traced trim count."""
+    def apply(leaf):
+        n = leaf.shape[0]
+        x = leaf.astype(jnp.float32)
+        if rule == "cwmed":
+            return jnp.median(x, axis=0)
+        i = jnp.arange(n).reshape((-1,) + (1,) * (leaf.ndim - 1))
+        if rule == "cwtm":
+            xs = jnp.sort(x, axis=0)
+            keep = ((i >= f) & (i < n - f)).astype(jnp.float32)
+            return (xs * keep).sum(axis=0) / jnp.maximum(
+                (n - 2 * f).astype(jnp.float32), 1.0)
+        if rule == "meamed":
+            med = jnp.median(x, axis=0, keepdims=True)
+            order = jnp.argsort(jnp.abs(x - med), axis=0)
+            xs = jnp.take_along_axis(x, order, axis=0)
+            keep = (i < n - f).astype(jnp.float32)
+            return (xs * keep).sum(axis=0) / jnp.maximum(
+                (n - f).astype(jnp.float32), 1.0)
+        raise ValueError(rule)
+    return jax.tree_util.tree_map(apply, tree)
+
+
+def _tree_bucket_dyn(tree: PyTree, f: Array, key: Array,
+                     bucket_size: int) -> tuple[PyTree, Array]:
+    """`_tree_bucket` with a traced f.
+
+    The bucket size must be given explicitly: the paper default
+    floor(n / 2f) is shape-level and cannot depend on a traced f.
+    """
+    leaves = jax.tree_util.tree_leaves(tree)
+    n = leaves[0].shape[0]
+    s = max(1, min(int(bucket_size), n))
+    perm = jax.random.permutation(key, n)
+    n_buckets = -(-n // s)
+    pad = n_buckets * s - n
+    counts = jnp.minimum(jnp.full((n_buckets,), s),
+                         n - jnp.arange(n_buckets) * s).astype(jnp.float32)
+
+    def bucket(leaf):
+        x = leaf[perm].astype(jnp.float32)
+        if pad:
+            x = jnp.concatenate(
+                [x, jnp.zeros((pad,) + leaf.shape[1:], jnp.float32)])
+        sums = x.reshape((n_buckets, s) + leaf.shape[1:]).sum(axis=1)
+        return sums / counts.reshape((n_buckets,) + (1,) * (leaf.ndim - 1))
+
+    cap = max(0, (n_buckets - 1) // 2)
+    f_adj = jnp.minimum(f, cap).astype(jnp.int32)
+    return jax.tree_util.tree_map(bucket, tree), f_adj
+
+
+def robust_aggregate_dyn(tree: PyTree, spec: AggregatorSpec, f: Array, *,
+                         key: Optional[Array] = None) -> PyTree:
+    """`robust_aggregate` with a TRACED Byzantine count.
+
+    ``spec.f`` is ignored; ``f`` (an int32 scalar, possibly a vmap tracer)
+    takes its place.  ``spec.pre == "bucketing"`` requires an explicit
+    ``spec.bucket_size``.  MDA has no dynamic form (see
+    :func:`repro.core.gram.coeff_for_rule_dyn`).
+    """
+    f = jnp.asarray(f, jnp.int32)
+    work = tree
+    mix_matrix = None
+
+    if spec.pre == "bucketing":
+        if key is None:
+            raise ValueError("bucketing requires a PRNG key")
+        if spec.bucket_size is None:
+            raise ValueError(
+                "dynamic-f bucketing needs an explicit bucket_size (the "
+                "floor(n/2f) default is shape-level); set "
+                "AggregatorSpec.bucket_size")
+        work, f = _tree_bucket_dyn(work, f, key, spec.bucket_size)
+
+    if spec.transport_dtype == "bf16":
+        work = jax.tree_util.tree_map(
+            lambda l: l.astype(jnp.bfloat16), work)
+
+    if spec.sketch_dim and key is not None:
+        g = tree_sketch_gram(work, spec.sketch_dim, key)
+    else:
+        g = tree_gram(work)
+
+    if spec.pre == "nnm":
+        d2 = gramlib.pdist_sq_from_gram(g)
+        mix_matrix = gramlib.nnm_matrix_dyn(d2, f)
+        g = gramlib.mixed_gram(g, mix_matrix)
+
+    if spec.rule in GRAM_RULES:
+        coeff = gramlib.coeff_for_rule_dyn(spec.rule, g, f,
+                                           gm_iters=spec.gm_iters,
+                                           gm_eps=spec.gm_eps)
+        if mix_matrix is not None:
+            coeff = coeff @ mix_matrix
+        return tree_combine(work, coeff)
+
+    if spec.rule in COORDINATE_RULES:
+        if mix_matrix is not None:
+            work = tree_mix(work, mix_matrix)
+        return _tree_coordinate_rule_dyn(work, spec.rule, f)
+
+    raise ValueError(f"unknown rule {spec.rule!r}")
+
+
+def batched_robust_aggregate(tree: PyTree, spec: AggregatorSpec, fs: Array,
+                             *, keys: Optional[Array] = None) -> PyTree:
+    """Lane-batched aggregation: every leaf carries a leading lane axis and
+    ``fs`` is the per-lane Byzantine count — `vmap` of the dynamic path."""
+    if keys is None:
+        return jax.vmap(lambda t, f: robust_aggregate_dyn(t, spec, f),
+                        in_axes=(0, 0))(tree, fs)
+    return jax.vmap(
+        lambda t, f, k: robust_aggregate_dyn(t, spec, f, key=k),
+        in_axes=(0, 0, 0))(tree, fs, keys)
 
 
 def flatten_stack(tree: PyTree) -> Array:

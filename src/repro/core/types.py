@@ -10,7 +10,6 @@ import dataclasses
 from typing import Callable, Optional
 
 import jax
-import jax.numpy as jnp
 
 Array = jax.Array
 # An aggregation rule maps (n, d) -> (d,).

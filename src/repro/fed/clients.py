@@ -70,7 +70,10 @@ def scatter_rows(momentum: list[Array], idx: Array,
 
 def client_updates(loss_fn: Callable, params: PyTree,
                    cohort_momentum: list[Array], batch: PyTree,
-                   ccfg: ClientConfig) -> tuple[Array, list[Array], list[Array]]:
+                   ccfg: ClientConfig, *,
+                   beta: Array | float | None = None,
+                   local_lr: Array | float | None = None
+                   ) -> tuple[Array, list[Array], list[Array]]:
     """The vmapped cohort pass.
 
     Args:
@@ -80,6 +83,9 @@ def client_updates(loss_fn: Callable, params: PyTree,
       cohort_momentum: gathered momentum rows, list of (m, ...).
       batch: pytree with (m, L, batch, ...) leaves, L = max(local_steps, 1).
       ccfg: static client config.
+      beta / local_lr: optional TRACED overrides of the corresponding
+        ``ccfg`` constants — the fleet engine passes per-lane scalars here
+        so lanes with different client hyperparameters share one compile.
 
     Returns ``(losses (m,), transmitted stack, new cohort momentum)``; the
     transmitted stack is the flattened-leaf list with a leading cohort axis,
@@ -105,7 +111,7 @@ def client_updates(loss_fn: Callable, params: PyTree,
         sends = [g.astype(jnp.float32) for g in grads]
     else:
         k = ccfg.local_steps
-        lr = ccfg.local_lr
+        lr = ccfg.local_lr if local_lr is None else local_lr
 
         def local_sgd(rp0, cbatch):
             def body(rp, wb):
@@ -123,8 +129,8 @@ def client_updates(loss_fn: Callable, params: PyTree,
         losses, sends = jax.vmap(local_sgd, in_axes=(None, 0))(robust_p, batch)
 
     if ccfg.algorithm == "dshb":
-        beta = jnp.asarray(ccfg.beta, jnp.float32)
-        sends = [beta * m + (1 - beta) * g
+        b = jnp.asarray(ccfg.beta if beta is None else beta, jnp.float32)
+        sends = [b * m + (1 - b) * g
                  for m, g in zip(cohort_momentum, sends)]
         new_momentum = sends
     else:

@@ -119,6 +119,16 @@ def _mlp_loss(p, b):
                                 1).mean(), {}
 
 
+def _mlp_eval(xt, yt) -> Callable:
+    """Jitted test-accuracy closure for the shared MLP head (the one
+    eval every scenario/grid consumer uses — keep it in one place)."""
+    @jax.jit
+    def acc(p):
+        h = jax.nn.relu(xt @ p["w1"] + p["b1"])
+        return (jnp.argmax(h @ p["w2"] + p["b2"], -1) == yt).mean()
+    return acc
+
+
 def cohort_batch_fn(ds: WorkerDataset, batch_size: int, local_steps: int,
                     labels_key: str = "y") -> Callable:
     """``batch_fn(cohort_ids, n_flip, rng)`` over a sharded dataset.
@@ -159,13 +169,7 @@ def build_scenario(scenario: Scenario, *, seed: int = 0, dim: int = 48,
     params = _mlp_init(jax.random.PRNGKey(seed), dim)
     state = server.init_state(params)
     batch_fn = cohort_batch_fn(ds, scenario.batch_size, scenario.local_steps)
-
-    @jax.jit
-    def eval_fn(p):
-        h = jax.nn.relu(xt @ p["w1"] + p["b1"])
-        return (jnp.argmax(h @ p["w2"] + p["b2"], -1) == yt).mean()
-
-    return server, state, batch_fn, eval_fn
+    return server, state, batch_fn, _mlp_eval(xt, yt)
 
 
 def run_scenario(name: str, *, rounds: Optional[int] = None, seed: int = 0,

@@ -1,0 +1,31 @@
+"""Multi-tenant fleet engine: B federated scenarios per jitted round.
+
+Division of labor with the rest of the repo:
+
+* ``repro.fed`` — ONE scenario per process; the reference orchestration
+  (its full-participation round is bit-for-bit a trainer step).
+* ``repro.fleet`` — MANY scenarios per device: jobs are packed into shape
+  buckets, their states stacked along a leading lane axis, and a single
+  vmapped round steps the whole bucket.  Per-lane (f, attack family, eta,
+  beta, local_lr, server lr) are traced operands — one compile per shape
+  bucket, not per job — via the dynamic-f entry points in
+  ``repro.core.robust`` / ``repro.core.attacks``.
+
+A B=1 fleet is the sequential per-job loop; a lane inside a B-lane bucket
+produces bit-for-bit the same trajectory (tested), so batching is purely a
+throughput lever — `benchmarks/bench_fleet.py` measures it.
+"""
+from repro.fleet.lanes import (
+    LANE_OP_FIELDS, build_fleet_round, build_lane_round,
+)
+from repro.fleet.runner import (
+    FleetJob, FleetResult, FleetRunner, LaneBucket, SCENARIO_OPTIMIZER,
+    ScenarioSpec, bucket_key, job_from_spec, run_fleet,
+)
+
+__all__ = [
+    "LANE_OP_FIELDS", "build_fleet_round", "build_lane_round",
+    "FleetJob", "FleetResult", "FleetRunner", "LaneBucket",
+    "SCENARIO_OPTIMIZER", "ScenarioSpec", "bucket_key", "job_from_spec",
+    "run_fleet",
+]

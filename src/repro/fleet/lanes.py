@@ -1,0 +1,130 @@
+"""Lane-axis-polymorphic federated rounds: B scenarios in one jitted call.
+
+``repro.fed.server`` runs ONE scenario per process, compiling one round per
+attack family.  The fleet engine instead stacks B independent scenario jobs
+("lanes") along a leading axis and vmaps a fully *dynamic* round over it:
+
+* per-lane model params, optimizer state, client momentum stacks, and PRNG
+  keys all live in one stacked state pytree;
+* the attack FAMILY is a traced ``lax.switch`` index
+  (:func:`repro.core.attacks.apply_attack_dyn`), eta / beta / local_lr /
+  server lr are traced scalars, and the Byzantine counts go through the
+  dynamic-f aggregation path
+  (:func:`repro.core.robust.robust_aggregate_dyn`);
+* lanes whose job has finished are frozen by an ``active`` operand
+  (``where(active, new, old)``) so shorter jobs ride along unchanged.
+
+The result: a whole fleet costs ONE compile per *shape bucket* — the static
+skeleton (cohort size, model arch, rule/pre, local-step count) — instead of
+one compile per job x attack family.  What stays static is exactly the
+bucket key material assembled in :mod:`repro.fleet.runner`.
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import robust as robust_lib
+from repro.core.attacks import apply_attack_dyn
+from repro.fed.clients import client_updates, gather_rows, scatter_rows
+from repro.fed.server import FedConfig
+from repro.optim import Optimizer, global_norm
+from repro.training.trainer import _split_info, kappa_hat_masked, merge_params
+
+Array = jax.Array
+
+#: Per-round, per-lane traced operands (each a scalar inside the vmap):
+#:   attack_id  int32  — apply_attack_dyn branch index
+#:   m_byz      int32  — Byzantine rows in the cohort stack
+#:   f_agg      int32  — aggregator Byzantine budget (== m_byz)
+#:   eta        float32 — attack strength
+#:   beta       float32 — client momentum coefficient
+#:   local_lr   float32 — client local-SGD step size
+#:   lr         float32 — server learning rate this round
+#:   active     bool   — False freezes the lane's state this round
+LANE_OP_FIELDS = ("attack_id", "m_byz", "f_agg", "eta", "beta", "local_lr",
+                  "lr", "active")
+
+
+def build_lane_round(loss_fn: Callable, optimizer: Optimizer,
+                     cfg: FedConfig) -> Callable:
+    """One lane's fully-dynamic round: ``(state, batch, idx, ops) ->
+    (state, metrics)`` with every per-job quantity traced.
+
+    ``cfg`` contributes only static skeleton (cohort size, local steps,
+    algorithm, aggregation rule/pre); its ``f`` and the client beta /
+    local_lr are ignored in favor of the traced ``ops`` values.
+    """
+    ccfg = cfg.client
+    spec = cfg.agg
+
+    def lane_round(state: dict, batch, idx: Array, ops: dict):
+        params = state["params"]
+        treedef, _, is_fsdp = _split_info(params, ())
+        has_momentum = "momentum" in state
+        key, agg_key = jax.random.split(state["key"])
+        cohort_mom = gather_rows(state["momentum"], idx) \
+            if has_momentum else []
+
+        losses, stack, new_cohort_mom = client_updates(
+            loss_fn, params, cohort_mom, batch, ccfg,
+            beta=ops["beta"], local_lr=ops["local_lr"])
+        m = losses.shape[0]
+        m_honest = (m - ops["m_byz"]).astype(jnp.int32)
+
+        attacked = apply_attack_dyn(ops["attack_id"], stack, ops["m_byz"],
+                                    eta=ops["eta"])
+        robust_dir = robust_lib.robust_aggregate_dyn(attacked, spec,
+                                                     ops["f_agg"],
+                                                     key=agg_key)
+        direction = merge_params(robust_dir, [], treedef, is_fsdp)
+
+        lr = ops["lr"]
+        new_params, new_opt = optimizer.update(
+            direction, state["opt_state"], params, lr)
+        new_state = dict(params=new_params, opt_state=new_opt,
+                         step=state["step"] + 1, key=key)
+        if has_momentum:
+            new_state["momentum"] = scatter_rows(
+                state["momentum"], idx, new_cohort_mom)
+
+        w = (jnp.arange(m) < m_honest).astype(jnp.float32)
+        metrics = {
+            "loss": (losses * w).sum() / jnp.maximum(
+                m_honest.astype(jnp.float32), 1.0),
+            "lr": lr,
+            "direction_norm": global_norm(direction),
+        }
+        if cfg.track_kappa_hat:
+            metrics["kappa_hat"] = kappa_hat_masked(robust_dir, attacked,
+                                                    m_honest)
+
+        # Finished lanes ride along bit-identically frozen.
+        frozen = jax.tree_util.tree_map(
+            lambda new, old: jnp.where(ops["active"], new, old),
+            new_state, state)
+        return frozen, metrics
+
+    return lane_round
+
+
+def build_fleet_round(loss_fn: Callable, optimizer: Optimizer,
+                      cfg: FedConfig, *,
+                      on_trace: Optional[Callable[[], None]] = None
+                      ) -> Callable:
+    """The jitted B-lane round: vmap of :func:`build_lane_round` over a
+    leading lane axis on state / batch / cohort ids / ops.
+
+    ``on_trace`` fires at TRACE time (not per call) — the runner uses it to
+    assert the one-compile-per-shape-bucket contract.
+    """
+    lane = build_lane_round(loss_fn, optimizer, cfg)
+
+    def fleet_round(state: dict, batch, idx: Array, ops: dict):
+        if on_trace is not None:
+            on_trace()
+        return jax.vmap(lane)(state, batch, idx, ops)
+
+    return jax.jit(fleet_round)

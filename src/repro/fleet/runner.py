@@ -1,0 +1,384 @@
+"""Fleet runner: pack scenario jobs into shape buckets, step them in
+lockstep, demux per-lane histories.
+
+The host-side half of the fleet engine (:mod:`repro.fleet.lanes` is the
+device half).  A :class:`FleetJob` is a fully-materialized federated run —
+config, loss, initial params, batch function, schedules; a
+:class:`ScenarioSpec` names a registry scenario + seed and materializes to
+a job.  The runner groups jobs whose *static skeleton* matches into lane
+buckets (one compile each), stacks their states, and drives every bucket
+round-by-round with per-lane traced operands — per-round host work is the
+same cohort sampling / batch building the single-scenario loop does, but
+the device sees ONE dispatch per bucket per round instead of one per job.
+
+``max_lanes=1`` degrades to the sequential per-job loop over the identical
+compiled round — the baseline `benchmarks/bench_fleet.py` measures against
+(compiles are shared across equal-shape buckets, so it stays one compile).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional, Sequence, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.attacks import dyn_attack_id
+from repro.core.bucketing import default_bucket_size
+from repro.data import build_heterogeneous, make_classification
+from repro.fed.clients import init_client_momentum
+from repro.fed.metrics import FedHistory
+from repro.fed.schedules import AttackSchedule, FixedByzantine
+from repro.fed.scenarios import (
+    Scenario, _mlp_eval, _mlp_init, _mlp_loss, cohort_batch_fn, get_scenario,
+)
+from repro.fed.server import FedConfig, rescale_f, sample_cohort
+from repro.fleet.lanes import build_fleet_round
+from repro.optim import Optimizer, sgd
+
+PyTree = Any
+
+#: Attack eta defaults mirrored from the static path
+#: (`apply_attack_tree`): used when a schedule phase leaves eta unset.
+_ETA_DEFAULTS = {"alie": 1.0, "foe": 2.0}
+
+#: Shared server optimizer for scenario-derived jobs.  One OBJECT, not one
+#: per job: the optimizer is bucket-key material (lanes sharing a compiled
+#: round must share its update closure).
+SCENARIO_OPTIMIZER = sgd(clip=2.0)
+
+
+@dataclasses.dataclass(frozen=True)
+class ScenarioSpec:
+    """A registry scenario + the per-job knobs: one fleet lane, declaratively.
+
+    ``scenario`` is a registry name or an inline :class:`Scenario`;
+    ``rounds`` overrides the scenario's round count (lanes of different
+    lengths share a bucket — shorter ones freeze when done).
+    """
+    scenario: Union[str, Scenario]
+    seed: int = 0
+    rounds: Optional[int] = None
+    label: Optional[str] = None
+
+
+@dataclasses.dataclass
+class FleetJob:
+    """A fully-materialized federated run, ready to be packed into a lane.
+
+    Jobs grouped into one bucket MUST share ``loss_fn`` and ``optimizer``
+    *objects* (they become part of the compiled round); everything that can
+    differ per lane — f, attack schedule, identity schedule, seed, rounds,
+    beta, local_lr, server lr — is carried as traced operands.
+    """
+    label: str
+    cfg: FedConfig
+    loss_fn: Callable
+    optimizer: Optimizer
+    params: PyTree
+    batch_fn: Callable
+    rounds: int
+    seed: int = 0
+    schedule: AttackSchedule = dataclasses.field(
+        default_factory=AttackSchedule)
+    byz_identity: Any = None
+    lr_fn: Callable[[int], float] = lambda r: 0.1
+    eval_fn: Optional[Callable] = None
+    eval_every: int = 0
+
+    def __post_init__(self):
+        if self.byz_identity is None:
+            self.byz_identity = FixedByzantine(self.cfg.n_clients, self.cfg.f)
+        if self.cfg.agg.rule == "mda":
+            raise ValueError(
+                "mda has no dynamic-f form; fleet lanes cannot run it "
+                "(use the single-scenario engine instead)")
+        for phase in self.schedule.phases:
+            dyn_attack_id(phase.attack)   # raises for _opt / unknown
+        if (self.cfg.agg.pre == "bucketing"
+                and self.cfg.agg.bucket_size is None):
+            raise ValueError(
+                "fleet lanes with pre='bucketing' need an explicit "
+                "bucket_size (resolve it host-side, e.g. "
+                "default_bucket_size(m, f_round))")
+
+    @property
+    def m_byz(self) -> int:
+        cfg = self.cfg
+        return rescale_f(cfg.f, cfg.n_clients, cfg.clients_per_round)
+
+
+def job_from_spec(spec: ScenarioSpec, *, dim: int = 48,
+                  n_samples: int = 9000, noise: float = 1.6) -> FleetJob:
+    """Materialize a registry scenario into a :class:`FleetJob`.
+
+    Mirrors ``repro.fed.scenarios.build_scenario`` (same synthetic task,
+    same Dirichlet shards) but routes through the fleet's shared optimizer
+    object and resolves the bucketing bucket size host-side.
+    """
+    sc = get_scenario(spec.scenario) if isinstance(spec.scenario, str) \
+        else spec.scenario
+    seed = spec.seed
+    x, y = make_classification(n_samples, 10, dim, noise=noise, seed=seed)
+    split = (n_samples * 2) // 3
+    ds = build_heterogeneous({"x": x[:split], "y": y[:split]}, "y",
+                             sc.n_clients, alpha=sc.alpha, seed=seed)
+    xt, yt = x[split:], y[split:]
+
+    cfg = sc.fed_config()
+    if cfg.agg.pre == "bucketing" and cfg.agg.bucket_size is None:
+        m = cfg.clients_per_round
+        bs = default_bucket_size(m, rescale_f(cfg.f, cfg.n_clients, m))
+        cfg = dataclasses.replace(
+            cfg, agg=dataclasses.replace(cfg.agg, bucket_size=bs))
+
+    server_lr = sc.server_lr
+    return FleetJob(
+        label=spec.label or f"{sc.name}:s{seed}",
+        cfg=cfg,
+        loss_fn=_mlp_loss,
+        optimizer=SCENARIO_OPTIMIZER,
+        params=_mlp_init(jax.random.PRNGKey(seed), dim),
+        batch_fn=cohort_batch_fn(ds, sc.batch_size, sc.local_steps),
+        rounds=spec.rounds if spec.rounds is not None else sc.rounds,
+        seed=seed,
+        schedule=sc.attack,
+        byz_identity=sc.byz_identity(),
+        lr_fn=lambda r: server_lr,
+        eval_fn=_mlp_eval(xt, yt))
+
+
+# ---------------------------------------------------------------------------
+# Shape bucketing + compile cache.
+# ---------------------------------------------------------------------------
+
+def _tree_sig(tree: PyTree) -> tuple:
+    """Hashable structure+shape+dtype signature of a pytree."""
+    flat, treedef = jax.tree_util.tree_flatten(tree)
+    return (str(treedef),) + tuple(
+        (tuple(np.shape(leaf)),
+         str(getattr(leaf, "dtype", None) or np.asarray(leaf).dtype))
+        for leaf in flat)
+
+
+def bucket_key(job: FleetJob) -> tuple:
+    """The static skeleton a compiled fleet round is specialized on.
+
+    Everything NOT here — f, attack family, eta, beta, local_lr, lr, seed,
+    round count — is a traced per-lane operand.
+    """
+    c = job.cfg
+    probe = job.batch_fn(
+        np.arange(c.clients_per_round, dtype=np.int32), 0,
+        np.random.default_rng(0))
+    return (c.n_clients, c.clients_per_round,
+            c.client.local_steps, c.client.algorithm,
+            c.agg.rule, c.agg.pre, c.agg.bucket_size,
+            c.agg.gm_iters, c.agg.gm_eps,
+            c.agg.transport_dtype, c.agg.sketch_dim,
+            c.track_kappa_hat,
+            job.loss_fn, job.optimizer,
+            _tree_sig(job.params), _tree_sig(probe))
+
+
+@dataclasses.dataclass
+class LaneBucket:
+    key: tuple
+    jobs: list[FleetJob]
+    indices: list[int]          # positions in the submitted job list
+
+
+@dataclasses.dataclass
+class FleetResult:
+    """One lane's demuxed outcome."""
+    label: str
+    job: FleetJob
+    state: dict                 # final (unstacked) lane state
+    history: FedHistory
+    evals: list[tuple[int, float]] = dataclasses.field(default_factory=list)
+    best_eval: Optional[float] = None
+
+
+class FleetRunner:
+    """Packs jobs into shape buckets and runs each bucket in lockstep.
+
+    The compile cache is keyed on (bucket static key, lane count): re-running
+    the same runner, or many max_lanes-sized chunks of one bucket, reuses the
+    compiled round.  ``trace_count`` counts actual tracings — the
+    one-compile-per-shape-bucket contract benchmarks assert on.
+    """
+
+    def __init__(self, jobs: Sequence[Union[FleetJob, ScenarioSpec]], *,
+                 max_lanes: Optional[int] = None,
+                 compile_cache: Optional[dict] = None):
+        self.jobs = [job_from_spec(j) if isinstance(j, ScenarioSpec) else j
+                     for j in jobs]
+        if not self.jobs:
+            raise ValueError("empty fleet")
+        self.max_lanes = max_lanes
+        # ``compile_cache`` may be shared across runners (FleetService
+        # passes one per service) so later fleets reuse earlier compiles;
+        # ``trace_count`` still counts only THIS runner's new tracings.
+        self._compiled: dict[tuple, Callable] = \
+            compile_cache if compile_cache is not None else {}
+        self.trace_count = 0
+        self._buckets = self._pack()
+
+    # -- packing ----------------------------------------------------------
+    def _pack(self) -> list[LaneBucket]:
+        groups: dict[tuple, LaneBucket] = {}
+        for i, job in enumerate(self.jobs):
+            key = bucket_key(job)
+            if key not in groups:
+                groups[key] = LaneBucket(key, [], [])
+            groups[key].jobs.append(job)
+            groups[key].indices.append(i)
+        buckets: list[LaneBucket] = []
+        for g in groups.values():
+            cap = self.max_lanes or len(g.jobs)
+            for s in range(0, len(g.jobs), cap):
+                buckets.append(LaneBucket(g.key, g.jobs[s:s + cap],
+                                          g.indices[s:s + cap]))
+        return buckets
+
+    @property
+    def n_buckets(self) -> int:
+        """Distinct shape buckets (not max_lanes chunks)."""
+        return len({b.key for b in self._buckets})
+
+    def _round_fn(self, bucket: LaneBucket) -> Callable:
+        cache_key = (bucket.key, len(bucket.jobs))
+        if cache_key not in self._compiled:
+            job0 = bucket.jobs[0]
+
+            def bump():
+                self.trace_count += 1
+
+            self._compiled[cache_key] = build_fleet_round(
+                job0.loss_fn, job0.optimizer, job0.cfg, on_trace=bump)
+        return self._compiled[cache_key]
+
+    # -- execution --------------------------------------------------------
+    def run(self) -> list[FleetResult]:
+        """Run every job to completion; results in submission order."""
+        results: list[Optional[FleetResult]] = [None] * len(self.jobs)
+        for bucket in self._buckets:
+            for idx, res in zip(bucket.indices, self._run_bucket(bucket)):
+                results[idx] = res
+        return results  # type: ignore[return-value]
+
+    def _run_bucket(self, bucket: LaneBucket) -> list[FleetResult]:
+        jobs = bucket.jobs
+        cfg0 = jobs[0].cfg
+        m = cfg0.clients_per_round
+        fleet_round = self._round_fn(bucket)
+
+        lane_states = []
+        for job in jobs:
+            st = dict(params=job.params,
+                      opt_state=job.optimizer.init(job.params),
+                      step=jnp.zeros((), jnp.int32),
+                      key=jax.random.PRNGKey(job.seed))
+            if cfg0.client.algorithm == "dshb":
+                st["momentum"] = init_client_momentum(job.params,
+                                                      cfg0.n_clients)
+            lane_states.append(st)
+        state = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs),
+                                       *lane_states)
+
+        rngs = [np.random.default_rng(job.seed) for job in jobs]
+        m_byzs = [job.m_byz for job in jobs]
+        hists = [FedHistory() for _ in jobs]
+        evals: list[list[tuple[int, float]]] = [[] for _ in jobs]
+        max_rounds = max(job.rounds for job in jobs)
+        # Device metrics stay on device until the end of the run: fetching
+        # them every round would serialize the host loop on a device sync
+        # per round (measured; the demux below is one transfer per run).
+        round_meta: list[tuple[list, list, list]] = []
+        round_metrics: list[dict] = []
+
+        for r in range(max_rounds):
+            attacks, etas_raw, cohorts, batches = [], [], [], []
+            ops = {k: [] for k in ("attack_id", "m_byz", "f_agg", "eta",
+                                   "beta", "local_lr", "lr", "active")}
+            for k, job in enumerate(jobs):
+                attack, eta = job.schedule.resolve(r)
+                cohort = sample_cohort(rngs[k], cfg0.n_clients, m,
+                                       job.byz_identity.ids(r), m_byzs[k])
+                n_flip = m_byzs[k] if attack == "lf" else 0
+                batches.append(job.batch_fn(cohort, n_flip, rngs[k]))
+                attacks.append(attack)
+                etas_raw.append(eta)
+                cohorts.append(cohort)
+                ops["attack_id"].append(dyn_attack_id(attack))
+                ops["m_byz"].append(m_byzs[k])
+                ops["f_agg"].append(m_byzs[k])
+                ops["eta"].append(eta if eta is not None
+                                  else _ETA_DEFAULTS.get(attack, 0.0))
+                ops["beta"].append(job.cfg.client.beta)
+                ops["local_lr"].append(job.cfg.client.local_lr)
+                ops["lr"].append(float(job.lr_fn(r)))
+                ops["active"].append(r < job.rounds)
+
+            batch = jax.tree_util.tree_map(lambda *xs: np.stack(xs),
+                                           *batches)
+            idx = np.stack(cohorts).astype(np.int32)
+            ops_arr = {
+                "attack_id": np.asarray(ops["attack_id"], np.int32),
+                "m_byz": np.asarray(ops["m_byz"], np.int32),
+                "f_agg": np.asarray(ops["f_agg"], np.int32),
+                "eta": np.asarray(ops["eta"], np.float32),
+                "beta": np.asarray(ops["beta"], np.float32),
+                "local_lr": np.asarray(ops["local_lr"], np.float32),
+                "lr": np.asarray(ops["lr"], np.float32),
+                "active": np.asarray(ops["active"], bool),
+            }
+            state, metrics = fleet_round(state, batch, idx, ops_arr)
+            round_meta.append((attacks, etas_raw, cohorts))
+            round_metrics.append(metrics)
+
+            for k, job in enumerate(jobs):
+                if (job.eval_fn is not None and job.eval_every
+                        and r < job.rounds
+                        and (r + 1) % job.eval_every == 0):
+                    lane_params = jax.tree_util.tree_map(
+                        lambda leaf, kk=k: leaf[kk], state["params"])
+                    # Keep the device scalar: float() here would sync the
+                    # dispatch pipeline per eval (same reason the round
+                    # metrics stay on device until the demux below).
+                    evals[k].append((r + 1, job.eval_fn(lane_params)))
+
+        # Demux: one host transfer for the whole run's metrics + evals.
+        fetched = jax.device_get(round_metrics)
+        evals = [[(r, float(v)) for r, v in lane] for lane in evals]
+        for r, ((attacks, etas_raw, cohorts), metrics_np) in enumerate(
+                zip(round_meta, fetched)):
+            for k, job in enumerate(jobs):
+                if r >= job.rounds:
+                    continue
+                lane_metrics = {"loss": metrics_np["loss"][k],
+                                "lr": metrics_np["lr"][k],
+                                "direction_norm":
+                                    metrics_np["direction_norm"][k]}
+                if "kappa_hat" in metrics_np:
+                    lane_metrics["kappa_hat"] = metrics_np["kappa_hat"][k]
+                hists[k].record(lane_metrics, cohort=cohorts[k],
+                                attack=attacks[k], eta=etas_raw[k],
+                                m_byz=m_byzs[k], f_round=m_byzs[k])
+
+        out = []
+        for k, job in enumerate(jobs):
+            lane_state = jax.tree_util.tree_map(
+                lambda leaf, kk=k: leaf[kk], state)
+            best = max((a for _, a in evals[k]), default=None)
+            out.append(FleetResult(label=job.label, job=job,
+                                   state=lane_state, history=hists[k],
+                                   evals=evals[k], best_eval=best))
+        return out
+
+
+def run_fleet(jobs: Sequence[Union[FleetJob, ScenarioSpec]], *,
+              max_lanes: Optional[int] = None) -> list[FleetResult]:
+    """One-shot convenience: pack, run, return per-lane results."""
+    return FleetRunner(jobs, max_lanes=max_lanes).run()

@@ -19,7 +19,6 @@ import argparse
 import json
 import time
 import traceback
-from functools import partial
 
 import jax
 import jax.numpy as jnp

@@ -1,10 +1,8 @@
 """Launch-time config resolution: shape-dependent overrides + skips."""
 from __future__ import annotations
 
-import dataclasses
-
 from repro.configs import get_config
-from repro.configs.base import InputShape, ModelConfig, SHAPES
+from repro.configs.base import ModelConfig, SHAPES
 
 #: expert-table size (params) above which experts go FSDP + selective
 #: robustness (DESIGN.md §3: per-worker state is Theta(n|theta|)).

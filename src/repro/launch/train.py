@@ -16,10 +16,9 @@ import argparse
 import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.checkpoint import load_checkpoint, save_checkpoint
+from repro.checkpoint import save_checkpoint
 from repro.configs import ARCH_IDS, get_config, reduced_config
 from repro.core.types import AggregatorSpec
 from repro.data import build_heterogeneous, make_lm_corpus, worker_batches

@@ -6,7 +6,7 @@ ParamDesc trees as the single source of truth for shapes + sharding.
 """
 from __future__ import annotations
 
-from typing import Any, Optional
+from typing import Any
 
 import jax
 import jax.numpy as jnp

@@ -1,7 +1,6 @@
 """Minimal optimizer library: (init, update) pairs over pytrees."""
 from __future__ import annotations
 
-import dataclasses
 from typing import Any, Callable, NamedTuple
 
 import jax

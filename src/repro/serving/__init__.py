@@ -1,3 +1,5 @@
-from repro.serving.engine import ServeEngine, greedy_decode
+from repro.serving.engine import (
+    FleetService, FleetTicket, ServeEngine, greedy_decode,
+)
 
-__all__ = ["ServeEngine", "greedy_decode"]
+__all__ = ["FleetService", "FleetTicket", "ServeEngine", "greedy_decode"]

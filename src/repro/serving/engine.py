@@ -1,14 +1,18 @@
-"""Batched serving: prefill + greedy decode over the model zoo's cache API.
+"""Batched serving: decode engine + fleet scenario service.
 
-Static-batch continuous-ish serving: requests are grouped into a fixed
-batch; each slot tracks its own position and completion.  The decode step
-is a single jitted function (one token for the whole batch per call) — the
-function the decode_32k / long_500k dry-run shapes lower.
+Two request planes share this module:
+
+* :class:`ServeEngine` — static-batch prefill + greedy decode over the
+  model zoo's cache API (the decode_32k / long_500k dry-run function).
+* :class:`FleetService` — submit/poll over the lane-batched scenario
+  executor (:mod:`repro.fleet`): callers enqueue scenario jobs one at a
+  time; ``drain()`` packs everything queued into shape buckets and runs
+  them as one fleet, amortizing compiles and dispatches across tenants.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Optional
+from typing import Any, Optional, Union
 
 import jax
 import jax.numpy as jnp
@@ -63,3 +67,88 @@ def greedy_decode(model, params, prompts: Array, max_new: int = 32,
     eng = ServeEngine(model, params, batch_size=prompts.shape[0],
                       max_seq=max_seq or (prompts.shape[1] + max_new))
     return eng.generate(prompts, max_new=max_new)
+
+
+# ---------------------------------------------------------------------------
+# Fleet scenario service: multi-tenant submit/poll over the lane executor.
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class FleetTicket:
+    """One submitted job's lifecycle record."""
+    job_id: int
+    label: str
+    status: str = "queued"              # queued | done
+    result: Any = None                  # FleetResult once done
+
+
+class FleetService:
+    """Submit/poll API over :class:`repro.fleet.FleetRunner`.
+
+    The service is the multi-tenant front door the ROADMAP's "heavy
+    traffic" goal implies: tenants submit scenario jobs independently;
+    the service batches whatever is queued into lane buckets and steps
+    them together.  Execution is synchronous and explicit — ``drain()``
+    runs the queue to completion (a deliberate design: the caller owns
+    the device, so there is no background thread fighting jit).
+
+    ``submit`` accepts a ``repro.fleet.ScenarioSpec`` or a materialized
+    ``repro.fleet.FleetJob``; ``poll`` never blocks.
+    """
+
+    def __init__(self, *, max_lanes: Optional[int] = None):
+        self.max_lanes = max_lanes
+        self._tickets: dict[int, FleetTicket] = {}
+        self._queue: list[int] = []
+        self._next_id = 0
+        # Shared across drains: a tenant resubmitting the same scenario
+        # shape later must NOT pay the XLA compile again.
+        self._compile_cache: dict = {}
+        self.drains = 0
+        self.last_trace_count = 0
+
+    def submit(self, job: Union["ScenarioSpec", "FleetJob"]) -> int:  # noqa: F821
+        """Enqueue a job; returns its job_id immediately."""
+        from repro.fleet import FleetJob, ScenarioSpec, job_from_spec
+        if isinstance(job, ScenarioSpec):
+            job = job_from_spec(job)
+        elif not isinstance(job, FleetJob):
+            raise TypeError(f"submit wants ScenarioSpec | FleetJob, "
+                            f"got {type(job).__name__}")
+        job_id = self._next_id
+        self._next_id += 1
+        self._tickets[job_id] = FleetTicket(job_id, job.label)
+        self._tickets[job_id].result = job      # stash until drain
+        self._queue.append(job_id)
+        return job_id
+
+    @property
+    def pending(self) -> int:
+        return len(self._queue)
+
+    def poll(self, job_id: int) -> dict:
+        """Non-blocking status: {'status', 'label', 'result'?}."""
+        if job_id not in self._tickets:
+            raise KeyError(f"unknown job_id {job_id}")
+        t = self._tickets[job_id]
+        out = {"job_id": t.job_id, "status": t.status, "label": t.label}
+        if t.status == "done":
+            out["result"] = t.result
+        return out
+
+    def drain(self) -> list[int]:
+        """Run everything queued as ONE fleet; returns the finished ids."""
+        from repro.fleet import FleetRunner
+        if not self._queue:
+            return []
+        ids = self._queue
+        self._queue = []
+        jobs = [self._tickets[i].result for i in ids]
+        runner = FleetRunner(jobs, max_lanes=self.max_lanes,
+                             compile_cache=self._compile_cache)
+        for i, res in zip(ids, runner.run()):
+            self._tickets[i].status = "done"
+            self._tickets[i].result = res
+        self.drains += 1
+        self.last_trace_count = runner.trace_count
+        return ids

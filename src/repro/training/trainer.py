@@ -17,7 +17,6 @@ Structure of one step (DESIGN.md §3):
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 from typing import Any, Callable, Optional
 
 import jax
@@ -103,6 +102,26 @@ def _kappa_hat(agg: PyTree, stack: PyTree, n_honest: int) -> Array:
         mbar = h.mean(axis=0)
         num += jnp.sum((a.astype(jnp.float32) - mbar) ** 2)
         den += jnp.mean(jnp.sum((h - mbar).reshape(n_honest, -1) ** 2, axis=1))
+    return jnp.sqrt(num / (den + 1e-20))
+
+
+def kappa_hat_masked(agg: PyTree, stack: PyTree, n_honest: Array) -> Array:
+    """Eq. (26) with a TRACED honest count (fleet engine): the honest rows
+    are selected by mask (row < n_honest) so per-lane Byzantine budgets can
+    differ inside one compiled round."""
+    num = jnp.zeros((), jnp.float32)
+    den = jnp.zeros((), jnp.float32)
+    cnt = jnp.maximum(n_honest.astype(jnp.float32), 1.0)
+    for a, s in zip(jax.tree_util.tree_leaves(agg),
+                    jax.tree_util.tree_leaves(stack)):
+        x = s.astype(jnp.float32)
+        n = x.shape[0]
+        w = (jnp.arange(n) < n_honest).astype(jnp.float32)
+        wl = w.reshape((-1,) + (1,) * (x.ndim - 1))
+        mbar = (x * wl).sum(axis=0) / cnt
+        num += jnp.sum((a.astype(jnp.float32) - mbar) ** 2)
+        sq = jnp.sum(((x - mbar) ** 2).reshape(n, -1), axis=1)
+        den += (sq * w).sum() / cnt
     return jnp.sqrt(num / (den + 1e-20))
 
 

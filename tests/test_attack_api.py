@@ -1,0 +1,51 @@
+"""Attack API contracts that need no hypothesis: consistent errors for the
+optimized attacks, and the lane-dynamic attack id mapping."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.attacks import (
+    apply_attack, apply_attack_tree, dyn_attack_id,
+)
+
+
+def _honest(n, d, seed=0):
+    return jax.random.normal(jax.random.PRNGKey(seed), (n, d))
+
+
+@pytest.mark.parametrize("name", ["alie_opt", "foe_opt"])
+def test_optimized_attack_without_closure_raises_value_error(name):
+    """A missing agg_closure must be a clear ValueError, not a bare
+    TypeError from the underlying callable."""
+    h = _honest(8, 5)
+    with pytest.raises(ValueError, match="agg_closure"):
+        apply_attack(name, h, 2)
+    with pytest.raises(ValueError, match="agg_closure"):
+        apply_attack_tree(name, {"a": h}, 2)
+
+
+@pytest.mark.parametrize("name", ["alie_opt", "foe_opt"])
+def test_optimized_attack_with_closure_works(name):
+    h = _honest(8, 5)
+    closure = lambda t: jnp.mean(t, axis=0)
+    full = apply_attack(name, h, 2, agg_closure=closure)
+    assert full.shape == (10, 5)
+    assert np.isfinite(np.asarray(full)).all()
+
+
+def test_unknown_attack_raises():
+    h = _honest(6, 4)
+    with pytest.raises(ValueError, match="unknown attack"):
+        apply_attack("gaussian_noise", h, 2)
+
+
+def test_dyn_attack_id_mapping():
+    assert dyn_attack_id("none") == 0
+    assert dyn_attack_id("lf") == 0         # LF acts through the data
+    assert dyn_attack_id("alie") == 1
+    for bad in ("alie_opt", "foe_opt"):
+        with pytest.raises(ValueError, match="static path"):
+            dyn_attack_id(bad)
+    with pytest.raises(ValueError, match="unknown attack"):
+        dyn_attack_id("nope")

@@ -1,0 +1,90 @@
+"""`repro.fed.schedules` edge cases: degenerate ramps, period-1 rotation,
+switches exactly on round boundaries."""
+import numpy as np
+import pytest
+
+from repro.fed.schedules import (
+    AttackPhase, AttackSchedule, FixedByzantine, RotatingByzantine,
+    ramp_eta, switch_attack,
+)
+
+
+# ---------------------------------------------------------------------------
+# Zero-length eta ramps.
+# ---------------------------------------------------------------------------
+
+def test_zero_length_ramp_rejected():
+    with pytest.raises(ValueError, match="ramp_rounds"):
+        ramp_eta("foe", 1.0, 5.0, 0)
+    with pytest.raises(ValueError, match="ramp_rounds"):
+        AttackPhase("foe", 0, 1.0, eta_end=5.0, ramp_rounds=-3)
+
+
+def test_degenerate_ramp_is_a_constant():
+    """eta_end == eta over one round: legal, holds at the target forever."""
+    sched = ramp_eta("alie", 4.0, 4.0, 1)
+    assert [sched.resolve(r)[1] for r in range(4)] == [4.0] * 4
+
+
+def test_single_round_ramp_hits_target_immediately_after():
+    sched = ramp_eta("foe", 1.0, 9.0, 1)
+    assert sched.resolve(0)[1] == 1.0
+    assert sched.resolve(1)[1] == 9.0
+    assert sched.resolve(100)[1] == 9.0
+
+
+# ---------------------------------------------------------------------------
+# Rotation period of 1.
+# ---------------------------------------------------------------------------
+
+def test_rotation_period_one_shifts_every_round():
+    rot = RotatingByzantine(n_clients=10, f=3, period=1)
+    seen = [tuple(rot.ids(r)) for r in range(12)]
+    # Shifts EVERY round, always exactly f in-range unique ids.
+    for r, ids in enumerate(seen):
+        assert len(ids) == 3 and len(set(ids)) == 3
+        assert all(0 <= i < 10 for i in ids)
+        if r:
+            assert ids != seen[r - 1]
+    # Round 0 starts at the fixed last-f convention.
+    np.testing.assert_array_equal(rot.ids(0), FixedByzantine(10, 3).ids(0))
+    # stride defaults to f, so the pattern wraps with period n/gcd(n, f).
+    np.testing.assert_array_equal(rot.ids(10), rot.ids(0))
+
+
+def test_rotation_period_one_custom_stride():
+    rot = RotatingByzantine(n_clients=7, f=2, period=1, stride=1)
+    np.testing.assert_array_equal(rot.ids(0), [5, 6])
+    np.testing.assert_array_equal(rot.ids(1), [0, 6])   # wrapped + sorted
+    np.testing.assert_array_equal(rot.ids(2), [0, 1])
+
+
+# ---------------------------------------------------------------------------
+# Switches exactly on round boundaries.
+# ---------------------------------------------------------------------------
+
+def test_switch_exactly_on_boundary_is_inclusive():
+    sched = switch_attack((0, "none"), (5, "alie", 8.0), (10, "foe", 2.0))
+    assert sched.resolve(4) == ("none", None)
+    assert sched.resolve(5) == ("alie", 8.0)     # boundary round: new phase
+    assert sched.resolve(9) == ("alie", 8.0)
+    assert sched.resolve(10) == ("foe", 2.0)
+
+
+def test_back_to_back_boundaries_each_last_one_round():
+    sched = switch_attack((0, "none"), (1, "sf"), (2, "mimic"))
+    assert [sched.resolve(r)[0] for r in range(4)] == \
+        ["none", "sf", "mimic", "mimic"]
+
+
+def test_ramp_phase_starting_mid_schedule_anchors_at_its_boundary():
+    """A ramp's clock starts at ITS phase boundary, not at round 0."""
+    sched = AttackSchedule((
+        AttackPhase("none", 0),
+        AttackPhase("foe", 10, eta=1.0, eta_end=5.0, ramp_rounds=4),
+    ))
+    assert sched.resolve(9) == ("none", None)
+    assert sched.resolve(10) == ("foe", 1.0)     # ramp starts AT the switch
+    assert sched.resolve(12) == ("foe", 3.0)
+    assert sched.resolve(14) == ("foe", 5.0)
+    assert sched.resolve(50) == ("foe", 5.0)
