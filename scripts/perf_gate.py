@@ -1,13 +1,15 @@
 #!/usr/bin/env python
-"""CI perf gate: fail on fleet-throughput regression vs the checked-in
-baseline.
+"""CI perf gate: fail on fleet-throughput or kernel-fusion regression vs
+the checked-in baselines.
 
     PYTHONPATH=src python benchmarks/run.py --smoke --json-out BENCH_fleet.json
     python scripts/perf_gate.py BENCH_fleet.json \
         [--baseline benchmarks/baselines/BENCH_fleet.json] \
-        [--tolerance 0.30] [--strict]
+        [--tolerance 0.30] [--strict] \
+        [--agg-cost BENCH_agg_cost.json] \
+        [--agg-cost-baseline benchmarks/baselines/BENCH_agg_cost.json]
 
-Hard gates (each must hold or the script exits 1):
+Fleet hard gates (each must hold or the script exits 1):
 
 * ``speedup``             >= (1 - tolerance) * baseline — fleet vs the
   sequential per-job engine loop, measured as the median of interleaved
@@ -16,6 +18,21 @@ Hard gates (each must hold or the script exits 1):
 * ``compile_count_fleet`` <= baseline — the one-compile-per-shape-bucket
   contract is a hard equality, never tolerance-scaled.
 
+Aggregation-cost hard gates (``--agg-cost``; machine-independent jaxpr
+facts from ``benchmarks/bench_agg_cost.py``):
+
+* ``mixed_stack_wide_ops_pallas`` <= baseline (0) — the fused mixtrim
+  path must keep the materialized (n, d) mixed stack eliminated;
+* ``mixed_stack_wide_ops_xla``    >= 1 — the check itself stays honest
+  (the XLA pipeline it contrasts against still materializes);
+* ``mixtrim_fallbacks_pow2``      <= baseline (0) — a pow2-n pallas run
+  must actually run the kernels.
+
+Interpret-mode quarantine: Pallas timings measured off-TPU live under the
+JSON's ``"interpret"`` key and CANNOT be gated — any gated key found only
+there is a hard configuration error, so interpreter numbers can never
+masquerade as hardware numbers.
+
 Informational (gated only with ``--strict``, for perf work on the same
 host class as the baseline):
 
@@ -23,9 +40,8 @@ host class as the baseline):
   host-dependent, so on shared/foreign runners this is reported but does
   not fail the build.
 
-To refresh the baseline after an intentional change, re-run the smoke
-bench on a quiet machine and copy the JSON over the baseline file (see
-docs/ci.md).
+To refresh a baseline after an intentional change, re-run the bench on a
+quiet machine and copy the JSON over the baseline file (see docs/ci.md).
 """
 import argparse
 import json
@@ -35,25 +51,26 @@ RATIO_GATES = ("speedup",)
 EXACT_GATES = ("compile_count_fleet",)
 STRICT_GATES = ("fleet_rounds_per_s",)
 
+#: agg-cost gates: (key, direction).  "max" = current must be <= baseline,
+#: "min_1" = current must be >= 1 regardless of baseline.
+AGG_GATES = (("mixed_stack_wide_ops_pallas", "max"),
+             ("mixtrim_fallbacks_pow2", "max"),
+             ("mixed_stack_wide_ops_xla", "min_1"))
 
-def main() -> int:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("current", help="JSON from benchmarks/run.py --smoke")
-    ap.add_argument("--baseline",
-                    default="benchmarks/baselines/BENCH_fleet.json")
-    ap.add_argument("--tolerance", type=float, default=0.30,
-                    help="allowed fractional regression (default 30%%)")
-    ap.add_argument("--strict", action="store_true",
-                    help="also gate absolute throughput (same-host runs)")
-    args = ap.parse_args()
 
-    with open(args.current) as fh:
-        cur = json.load(fh)
-    with open(args.baseline) as fh:
-        base = json.load(fh)
+def _gated_value(doc: dict, key: str, path: str):
+    """Fetch a gated key, refusing interpret-quarantined rows."""
+    if key in doc:
+        return doc[key]
+    if key in doc.get("interpret", {}):
+        raise SystemExit(
+            f"perf gate MISCONFIGURED: {key!r} in {path} is an "
+            f"interpret-mode row — Pallas-interpreter timings are not "
+            f"hardware numbers and can never be gated")
+    raise SystemExit(f"perf gate: {key!r} missing from {path}")
 
-    failures = []
 
+def check_fleet(cur: dict, base: dict, args, failures: list) -> None:
     def check_floor(key, gated):
         floor = base[key] * (1.0 - args.tolerance)
         ok = cur[key] >= floor
@@ -75,9 +92,62 @@ def main() -> int:
         if not ok:
             failures.append(key)
 
+
+def check_agg_cost(cur: dict, base: dict, cur_path: str,
+                   failures: list) -> None:
+    for key, direction in AGG_GATES:
+        val = _gated_value(cur, key, cur_path)
+        if direction == "max":
+            ref = _gated_value(base, key, "baseline")
+            ok = val <= ref
+            detail = f"(baseline {ref}, exact)"
+        else:  # min_1
+            ok = val >= 1
+            detail = "(must stay >= 1)"
+        print(f"[{'OK' if ok else 'FAIL'}] {key}: {val} {detail}")
+        if not ok:
+            failures.append(key)
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("current", nargs="?", default=None,
+                    help="JSON from benchmarks/run.py --smoke")
+    ap.add_argument("--baseline",
+                    default="benchmarks/baselines/BENCH_fleet.json")
+    ap.add_argument("--tolerance", type=float, default=0.30,
+                    help="allowed fractional regression (default 30%%)")
+    ap.add_argument("--strict", action="store_true",
+                    help="also gate absolute throughput (same-host runs)")
+    ap.add_argument("--agg-cost", default=None,
+                    help="JSON from bench_agg_cost.py --json-out")
+    ap.add_argument("--agg-cost-baseline",
+                    default="benchmarks/baselines/BENCH_agg_cost.json")
+    args = ap.parse_args()
+
+    if args.current is None and args.agg_cost is None:
+        print("perf gate: nothing to check (pass a fleet JSON and/or "
+              "--agg-cost)", file=sys.stderr)
+        return 2
+
+    failures: list = []
+    if args.current is not None:
+        with open(args.current) as fh:
+            cur = json.load(fh)
+        with open(args.baseline) as fh:
+            base = json.load(fh)
+        check_fleet(cur, base, args, failures)
+
+    if args.agg_cost is not None:
+        with open(args.agg_cost) as fh:
+            agg_cur = json.load(fh)
+        with open(args.agg_cost_baseline) as fh:
+            agg_base = json.load(fh)
+        check_agg_cost(agg_cur, agg_base, args.agg_cost, failures)
+
     if failures:
-        print(f"perf gate FAILED: {', '.join(failures)} regressed beyond "
-              f"{args.tolerance:.0%} of {args.baseline}", file=sys.stderr)
+        print(f"perf gate FAILED: {', '.join(failures)} regressed",
+              file=sys.stderr)
         return 1
     print("perf gate passed")
     return 0

@@ -15,9 +15,15 @@ Two execution strategies (DESIGN.md §3):
   leaf-by-leaf.  Peak memory: n x (largest leaf shard).
 * **coordinate path** (cwtm / cwmed / meamed): optionally mix leaves with
   the NNM matrix (itself from the gram pass) then sort/trim along the
-  worker axis, leaf-by-leaf.  On TPU the fused Pallas `mixtrim` kernel
-  implements mix+trim per VMEM block; here we emit the jnp form that XLA
-  fuses similarly.
+  worker axis, leaf-by-leaf.
+
+Execution is backend-routed (``AggregatorSpec.backend`` through
+:mod:`repro.kernels.dispatch`): the "xla" backend emits the leaf-streamed
+jnp forms below (what the GSPMD distributed path lowers); the "pallas"
+backend flattens the worker stack into ONE contiguous (n, D) buffer and
+runs the blocked ``gram``, streamed ``combine`` and fused ``mixtrim``
+kernels, so the NNM-mixed stack ``Y = M @ X`` never materializes in HBM
+("auto" = pallas on TPU, xla elsewhere; see docs/perf.md).
 
 Both paths do ranking-sensitive arithmetic in fp32.
 """
@@ -31,6 +37,7 @@ import jax.numpy as jnp
 from repro.core.bucketing import default_bucket_size as _default_bucket_size
 from repro.core import gram as gramlib
 from repro.core.types import AggregatorSpec, COORDINATE_RULES, GRAM_RULES
+from repro.kernels import dispatch as kdispatch
 
 Array = jax.Array
 PyTree = Any
@@ -156,6 +163,79 @@ def _tree_bucket(tree: PyTree, f: int, key: Array,
     return jax.tree_util.tree_map(bucket, tree), f_adj
 
 
+def _aggregate_flat(work: PyTree, spec: AggregatorSpec, f, *,
+                    key: Optional[Array], return_coeff: bool,
+                    dyn: bool) -> PyTree:
+    """Pallas-backend pipeline: pre-aggregated stack -> one contiguous
+    (n, D) buffer -> blocked gram -> coeff -> streamed combine / fused
+    mixtrim -> aggregated pytree.
+
+    ``f`` is a python int when ``dyn=False`` and a traced int32 scalar when
+    ``dyn=True`` (the fleet path; rank-mask kernels keep one compile per
+    shape bucket).  Decisions land on ``kdispatch.last_dispatch()``.
+    """
+    flat, layout = kdispatch.flatten_worker_stack(work)
+
+    mix_matrix = None
+    g = None
+    if spec.rule in GRAM_RULES or spec.pre == "nnm":
+        if spec.sketch_dim and key is not None:
+            # The sketch gram folds per-chunk signs per LEAF index — a
+            # contract shared with the xla backend — so it stays on the
+            # leaf-streamed path; only exact grams use the blocked kernel.
+            kdispatch.record_decision(
+                "gram", "pallas", "xla",
+                "sketch_dim gram runs the leaf-streamed signed sketch")
+            g = tree_sketch_gram(work, spec.sketch_dim, key)
+        else:
+            g = kdispatch.dispatch_gram(flat, backend="pallas")
+
+    if spec.pre == "nnm":
+        d2 = gramlib.pdist_sq_from_gram(g)
+        mix_matrix = gramlib.nnm_matrix_dyn(d2, f) if dyn \
+            else gramlib.nnm_matrix(d2, f)
+        g = gramlib.mixed_gram(g, mix_matrix)
+
+    if spec.rule in GRAM_RULES:
+        if dyn:
+            coeff = gramlib.coeff_for_rule_dyn(
+                spec.rule, g, f, gm_iters=spec.gm_iters, gm_eps=spec.gm_eps)
+        else:
+            coeff = gramlib.coeff_for_rule(
+                spec.rule, g, f, gm_iters=spec.gm_iters, gm_eps=spec.gm_eps)
+        if mix_matrix is not None:
+            coeff = coeff @ mix_matrix   # R = c^T (M X) = (c^T M) X
+        vec = kdispatch.dispatch_combine(flat, coeff, backend="pallas")
+        out = kdispatch.unflatten_aggregate(vec, layout)
+        return (out, coeff) if return_coeff else out
+
+    if spec.rule in COORDINATE_RULES:
+        if spec.rule == "meamed":
+            # No fused kernel: mix (if any) + mean-around-median in jnp on
+            # the flat buffer.  Recorded so "pallas" callers can see it.
+            kdispatch.record_decision("mixtrim", "pallas", "xla",
+                                      "meamed has no fused kernel")
+            mixed = flat if mix_matrix is None else jnp.einsum(
+                "mn,nd->md", mix_matrix.astype(flat.dtype), flat,
+                preferred_element_type=jnp.float32)
+            sub = {"x": mixed}
+            vec = (_tree_coordinate_rule_dyn(sub, "meamed", f) if dyn
+                   else _tree_coordinate_rule(sub, "meamed", f))["x"]
+        else:
+            mode = "med" if spec.rule == "cwmed" else "trim"
+            # No NNM -> m=None: the kernel elides the mix dot instead of
+            # paying an identity matmul per tile.  With NNM, M is cast to
+            # the stack dtype first — the same rounding tree_mix applies —
+            # so bf16-transport runs agree across backends.
+            m = None if mix_matrix is None else mix_matrix.astype(flat.dtype)
+            vec = kdispatch.dispatch_mixtrim(flat, m, f, mode=mode,
+                                             backend="pallas", dyn=dyn)
+        out = kdispatch.unflatten_aggregate(vec, layout)
+        return (out, None) if return_coeff else out
+
+    raise ValueError(f"unknown rule {spec.rule!r}")
+
+
 def robust_aggregate(tree: PyTree, spec: AggregatorSpec, *,
                      key: Optional[Array] = None,
                      return_coeff: bool = False) -> PyTree:
@@ -165,6 +245,9 @@ def robust_aggregate(tree: PyTree, spec: AggregatorSpec, *,
     With ``return_coeff=True`` additionally returns the effective linear
     coefficient vector when one exists (gram rules), else None — used by the
     kappa-hat diagnostics.
+
+    Execution routes through the kernel backend layer per
+    ``spec.backend`` (see :mod:`repro.kernels.dispatch`).
     """
     f = spec.f
     work = tree
@@ -180,6 +263,15 @@ def robust_aggregate(tree: PyTree, spec: AggregatorSpec, *,
         # stays fp32 (EXPERIMENTS.md §Perf).
         work = jax.tree_util.tree_map(
             lambda l: l.astype(jnp.bfloat16), work)
+
+    backend = kdispatch.resolve_backend(spec.backend)
+    kdispatch.open_record(requested=spec.backend, backend=backend,
+                          rule=spec.rule, pre=spec.pre, dyn=False)
+    if backend == "pallas":
+        return _aggregate_flat(work, spec, f, key=key,
+                               return_coeff=return_coeff, dyn=False)
+    kdispatch.record_decision("pipeline", "xla", "xla",
+                              "leaf-streamed jnp path (GSPMD-friendly)")
 
     if spec.sketch_dim and key is not None:
         g = tree_sketch_gram(work, spec.sketch_dim, key)
@@ -299,6 +391,15 @@ def robust_aggregate_dyn(tree: PyTree, spec: AggregatorSpec, f: Array, *,
     if spec.transport_dtype == "bf16":
         work = jax.tree_util.tree_map(
             lambda l: l.astype(jnp.bfloat16), work)
+
+    backend = kdispatch.resolve_backend(spec.backend)
+    kdispatch.open_record(requested=spec.backend, backend=backend,
+                          rule=spec.rule, pre=spec.pre, dyn=True)
+    if backend == "pallas":
+        return _aggregate_flat(work, spec, f, key=key, return_coeff=False,
+                               dyn=True)
+    kdispatch.record_decision("pipeline", "xla", "xla",
+                              "leaf-streamed jnp path (GSPMD-friendly)")
 
     if spec.sketch_dim and key is not None:
         g = tree_sketch_gram(work, spec.sketch_dim, key)

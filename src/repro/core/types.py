@@ -28,6 +28,14 @@ class AggregatorSpec:
       bucket_size: Bucketing bucket size s (defaults to floor(n / 2f)).
       gm_iters: Weiszfeld iteration count for GM.
       gm_eps: Weiszfeld smoothing epsilon.
+      backend: kernel backend for the aggregation hot path.  "xla" is the
+        leaf-streamed jnp pipeline (GSPMD-friendly); "pallas" flattens the
+        worker stack to one (n, D) buffer and runs the blocked gram /
+        streamed combine / fused mix+trim kernels (interpret mode off-TPU);
+        "auto" picks "pallas" on a single-device TPU and "xla" elsewhere
+        (multi-device meshes stay on the GSPMD leaf-streamed path).
+        Routing decisions, including oracle fallbacks, are queryable via
+        ``repro.kernels.dispatch.last_dispatch()``.
     """
 
     rule: str = "cwtm"
@@ -36,6 +44,7 @@ class AggregatorSpec:
     bucket_size: Optional[int] = None
     gm_iters: int = 8
     gm_eps: float = 1e-8
+    backend: str = "auto"
     # --- beyond-paper performance options (EXPERIMENTS.md §Perf) ---
     # Transport dtype for the worker-axis all-gathers.  Distance ranks and
     # all gram/coefficient math stay fp32; bf16 transport halves the

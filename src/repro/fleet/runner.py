@@ -177,6 +177,7 @@ def bucket_key(job: FleetJob) -> tuple:
             c.agg.rule, c.agg.pre, c.agg.bucket_size,
             c.agg.gm_iters, c.agg.gm_eps,
             c.agg.transport_dtype, c.agg.sketch_dim,
+            c.agg.backend,
             c.track_kappa_hat,
             job.loss_fn, job.optimizer,
             _tree_sig(job.params), _tree_sig(probe))

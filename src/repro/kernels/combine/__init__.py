@@ -1,0 +1,4 @@
+from repro.kernels.combine.ops import combine
+from repro.kernels.combine.ref import combine_ref
+
+__all__ = ["combine", "combine_ref"]

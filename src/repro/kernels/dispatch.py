@@ -1,0 +1,317 @@
+"""Kernel backend layer: route the aggregation hot path to Pallas or XLA.
+
+``repro.core.robust`` is backend-polymorphic: every aggregation pipeline
+declares ``AggregatorSpec.backend`` ("xla" | "pallas" | "auto") and this
+module turns that request into concrete kernel calls over ONE contiguous
+``(n, D)`` view of the worker-stacked pytree:
+
+* **flatten** — :func:`flatten_worker_stack` concatenates every leaf's
+  ``(n, ...)`` stack into a single ``(n, D)`` buffer plus static
+  leaf-segment metadata, so the kernels stream one buffer instead of
+  dispatching per leaf;
+* **gram** — the blocked Pallas kernel (``kernels/gram``), one (n, BLK_D)
+  tile per grid step accumulating the tiny (n, n) Gram matrix;
+* **combine** — the streamed coefficient kernel (``kernels/combine``)
+  applying the gram-rule weights without re-materializing anything;
+* **mixtrim** — the fused NNM-mix + coordinate trim/median kernel
+  (``kernels/mixtrim``), static-f or the dynamic-f rank-mask variant, so
+  the mixed stack ``Y = M @ X`` never exists in HBM.
+
+Every dispatch decision — including silent jnp-oracle fallbacks such as
+"n is not a power of two" — is recorded on a :class:`DispatchRecord`
+queryable via :func:`last_dispatch`, so a "pallas" run that quietly ran
+XLA is detectable.
+
+Decisions are **static** per (spec, shapes): they are taken while tracing,
+so under ``jax.jit`` the record reflects the most recent TRACE, not the
+most recent execution (a jit cache hit re-runs the compiled kernel without
+re-recording).  That is the faithful semantics: the backend choice is
+baked into the compiled executable.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+try:        # jaxpr types moved out of jax.core on newer jax releases
+    from jax.extend import core as _jaxpr_core
+    _ = (_jaxpr_core.ClosedJaxpr, _jaxpr_core.Jaxpr)
+except (ImportError, AttributeError):       # pragma: no cover - old jax
+    from jax import core as _jaxpr_core
+
+from repro.kernels.combine import combine as _combine_op
+from repro.kernels.gram import gram as _gram_op
+from repro.kernels.gram import gram_batched as _gram_batched_op
+from repro.kernels.mixtrim import mixtrim as _mixtrim_op
+from repro.kernels.mixtrim import mixtrim_dyn as _mixtrim_dyn_op
+
+Array = jax.Array
+PyTree = Any
+
+BACKENDS = ("xla", "pallas", "auto")
+
+#: Default VMEM tile-width cap (lane-dim multiple of 128, MXU-sized).
+DEFAULT_BLOCK_D = 512
+
+
+def resolve_backend(requested: str) -> str:
+    """Resolve "auto" to a concrete backend.
+
+    "auto" picks Pallas only on a SINGLE-device TPU (the fleet/serving
+    deployment shape).  Multi-device runs resolve to "xla": the flattened
+    (n, D) pallas pipeline is not GSPMD-partitioned, while the xla
+    leaf-streamed path keeps the documented n x largest-leaf-shard memory
+    bound under ``vmap(spmd_axis_name=...)`` meshes.  An explicit "pallas"
+    is always honored (off-TPU via interpret mode — structurally
+    identical, CPU speed — which is what the exactness tests exercise).
+    """
+    if requested not in BACKENDS:
+        raise ValueError(
+            f"unknown backend {requested!r}; expected one of {BACKENDS}")
+    if requested == "auto":
+        if jax.default_backend() == "tpu" and jax.device_count() == 1:
+            return "pallas"
+        return "xla"
+    return requested
+
+
+def pick_block_d(d: int, cap: int = DEFAULT_BLOCK_D) -> int:
+    """VMEM tile width for a D-wide stream: a multiple of 128 (lane/MXU
+    tiling), the smallest covering d for narrow stacks, capped for wide
+    ones so the (n, BLK_D) tile stays comfortably inside VMEM."""
+    if d >= cap:
+        return cap
+    return max(128, -(-d // 128) * 128)
+
+
+# ---------------------------------------------------------------------------
+# Decision record.
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class KernelDecision:
+    """One primitive-level routing decision."""
+    primitive: str          # "gram" | "combine" | "mixtrim" | "pipeline"
+    requested: str          # backend asked for at this call site
+    used: str               # "pallas" | "pallas-interpret" | "xla"
+    reason: str = ""        # why `used` differs from the pallas kernel path
+
+    @property
+    def fell_back(self) -> bool:
+        return self.requested == "pallas" and self.used == "xla"
+
+
+@dataclasses.dataclass
+class DispatchRecord:
+    """The decision trail of one ``robust_aggregate`` dispatch."""
+    requested: str          # AggregatorSpec.backend as given ("auto" kept)
+    backend: str            # resolved backend
+    rule: str
+    pre: Optional[str]
+    dyn: bool = False
+    decisions: list = dataclasses.field(default_factory=list)
+
+    @property
+    def fallbacks(self) -> list:
+        """Decisions where a requested Pallas kernel silently ran as XLA."""
+        return [d for d in self.decisions if d.fell_back]
+
+    def describe(self) -> str:
+        parts = [f"{self.requested}->{self.backend} rule={self.rule} "
+                 f"pre={self.pre or 'none'} dyn={self.dyn}"]
+        for d in self.decisions:
+            why = f" ({d.reason})" if d.reason else ""
+            parts.append(f"  {d.primitive}: {d.used}{why}")
+        return "\n".join(parts)
+
+
+_LAST: Optional[DispatchRecord] = None
+
+
+def last_dispatch() -> Optional[DispatchRecord]:
+    """The most recently OPENED dispatch record (trace-time semantics — see
+    module docstring).  None until the first backend-routed aggregation."""
+    return _LAST
+
+
+def open_record(*, requested: str, backend: str, rule: str,
+                pre: Optional[str], dyn: bool = False) -> DispatchRecord:
+    """Start a fresh decision record; subsequent primitive dispatches in
+    this trace append to it."""
+    global _LAST
+    _LAST = DispatchRecord(requested=requested, backend=backend, rule=rule,
+                           pre=pre, dyn=dyn)
+    return _LAST
+
+
+def record_decision(primitive: str, requested: str, used: str,
+                    reason: str = "") -> None:
+    if _LAST is not None:
+        _LAST.decisions.append(KernelDecision(primitive, requested, used,
+                                              reason))
+
+
+def _pallas_used(interpret: bool) -> tuple[str, str]:
+    if interpret:
+        return "pallas-interpret", "no TPU: kernel body runs interpreted"
+    return "pallas", ""
+
+
+# ---------------------------------------------------------------------------
+# Flatten / unflatten: one contiguous (n, D) view of the worker stack.
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class StackLayout:
+    """Static leaf-segment metadata of a flattened worker stack."""
+    treedef: Any
+    segments: tuple         # of (offset, size, trailing_shape)
+    n: int                  # worker count
+    width: int              # total feature width D
+
+
+def flatten_worker_stack(tree: PyTree) -> tuple[Array, StackLayout]:
+    """Concatenate a worker-stacked pytree into one contiguous (n, D) view.
+
+    Every leaf carries a leading worker axis n; the result is a single
+    buffer the kernels can stream without per-leaf dispatch.  Mixed leaf
+    dtypes promote under concatenation (uniform fp32 / bf16 stacks — the
+    only cases the pipeline produces — keep their dtype)."""
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    n = leaves[0].shape[0]
+    segs, flats, off = [], [], 0
+    for leaf in leaves:
+        flat = jnp.reshape(leaf, (n, -1))
+        segs.append((off, flat.shape[1], tuple(leaf.shape[1:])))
+        flats.append(flat)
+        off += flat.shape[1]
+    buf = flats[0] if len(flats) == 1 else jnp.concatenate(flats, axis=1)
+    return buf, StackLayout(treedef, tuple(segs), n, off)
+
+
+def unflatten_aggregate(vec: Array, layout: StackLayout) -> PyTree:
+    """Rebuild the aggregated pytree (worker axis removed) from a (D,)
+    combined vector."""
+    leaves = [jax.lax.slice_in_dim(vec, off, off + size, axis=0).reshape(shape)
+              for off, size, shape in layout.segments]
+    return jax.tree_util.tree_unflatten(layout.treedef, leaves)
+
+
+# ---------------------------------------------------------------------------
+# Primitive dispatchers.
+# ---------------------------------------------------------------------------
+
+def count_wide_ops(fn, *example_args, n: int, width: int) -> int:
+    """Structural fusion check: count dot_general / sort equations anywhere
+    in ``fn``'s jaxpr producing a full-width (n, width) value.
+
+    That shape signature is exactly the materialized NNM-mixed stack (the
+    ``Y = M @ X`` dot and the full-width sort): the XLA coordinate path has
+    them, the fused mixtrim path must not — its Pallas kernel jaxpr only
+    ever holds (n, BLK_D) tiles.  Used by ``benchmarks/bench_agg_cost.py``
+    and the perf gate to keep the elimination from regressing.
+    """
+    closed = jax.make_jaxpr(fn)(*example_args)
+
+    def sub_jaxprs(params):
+        for v in params.values():
+            vs = v if isinstance(v, (tuple, list)) else (v,)
+            for u in vs:
+                if isinstance(u, _jaxpr_core.ClosedJaxpr):
+                    yield u.jaxpr
+                elif isinstance(u, _jaxpr_core.Jaxpr):
+                    yield u
+
+    def count(jaxpr) -> int:
+        c = 0
+        for eqn in jaxpr.eqns:
+            if eqn.primitive.name in ("dot_general", "sort"):
+                for var in eqn.outvars:
+                    if tuple(getattr(var.aval, "shape", ())) == (n, width):
+                        c += 1
+            for sub in sub_jaxprs(eqn.params):
+                c += count(sub)
+        return c
+
+    return count(closed.jaxpr)
+
+
+def dispatch_gram(x: Array, *, backend: str,
+                  block_d: Optional[int] = None) -> Array:
+    """(n, D) -> (n, n) fp32 Gram matrix through the chosen backend."""
+    if backend == "pallas":
+        interpret = jax.default_backend() != "tpu"
+        used, why = _pallas_used(interpret)
+        record_decision("gram", "pallas", used, why)
+        bd = block_d if block_d is not None else pick_block_d(x.shape[1])
+        return _gram_op(x, block_d=bd, interpret=interpret)
+    record_decision("gram", backend, "xla")
+    return _gram_op(x, use_pallas=False)
+
+
+def dispatch_gram_batched(x: Array, *, backend: str,
+                          block_d: Optional[int] = None) -> Array:
+    """(B, n, D) -> (B, n, n): the lane-batched Gram pass, one launch for a
+    whole fleet shape bucket (grid = lanes x d-blocks)."""
+    if backend == "pallas":
+        interpret = jax.default_backend() != "tpu"
+        used, why = _pallas_used(interpret)
+        record_decision("gram_batched", "pallas", used, why)
+        bd = block_d if block_d is not None else pick_block_d(x.shape[2])
+        return _gram_batched_op(x, block_d=bd, interpret=interpret)
+    record_decision("gram_batched", backend, "xla")
+    return _gram_batched_op(x, use_pallas=False)
+
+
+def dispatch_combine(x: Array, coeff: Array, *, backend: str,
+                     block_d: Optional[int] = None) -> Array:
+    """(n, D), (n,) -> (D,): streamed linear combination."""
+    if backend == "pallas":
+        interpret = jax.default_backend() != "tpu"
+        used, why = _pallas_used(interpret)
+        record_decision("combine", "pallas", used, why)
+        bd = block_d if block_d is not None else pick_block_d(x.shape[1])
+        return _combine_op(x, coeff, block_d=bd, interpret=interpret)
+    record_decision("combine", backend, "xla")
+    return _combine_op(x, coeff, use_pallas=False)
+
+
+def dispatch_mixtrim(x: Array, m: Optional[Array], f, *, mode: str,
+                     backend: str, dyn: bool = False,
+                     block_d: Optional[int] = None) -> Array:
+    """(n, D) -> (D,): fused mix + coordinate trim/median.
+
+    ``m=None`` elides the mix dot (plain CWTM/CWMed).  ``dyn=True`` takes
+    a TRACED f through the rank-mask kernel variant (one compile per fleet
+    shape bucket).  When n is not a power of two the bitonic sort network
+    cannot run and the jnp oracle takes over — the fallback is RECORDED,
+    never silent (satellite: detectability).
+    """
+    n = x.shape[0]
+    if backend == "pallas":
+        if n & (n - 1) != 0:
+            record_decision("mixtrim", "pallas", "xla",
+                    f"n={n} is not a power of two (bitonic sort network)")
+            return _mixtrim_dyn_op(x, m, f, mode=mode, use_pallas=False) \
+                if dyn and mode == "trim" else \
+                _mixtrim_op(x, m, f=(0 if mode == "med" else int(f)),
+                            mode=mode, use_pallas=False)
+        interpret = jax.default_backend() != "tpu"
+        used, why = _pallas_used(interpret)
+        record_decision("mixtrim", "pallas", used, why)
+        bd = block_d if block_d is not None else pick_block_d(x.shape[1])
+        if dyn and mode == "trim":
+            return _mixtrim_dyn_op(x, m, f, mode=mode, block_d=bd,
+                                   interpret=interpret)
+        # mode="med" ignores f entirely, so the dynamic path can share the
+        # static kernel (f participates only in the trim mask).
+        return _mixtrim_op(x, m, f=(0 if mode == "med" else int(f)),
+                           mode=mode, block_d=bd, interpret=interpret)
+    record_decision("mixtrim", backend, "xla")
+    if dyn and mode == "trim":
+        return _mixtrim_dyn_op(x, m, f, mode=mode, use_pallas=False)
+    return _mixtrim_op(x, m, f=(0 if mode == "med" else int(f)), mode=mode,
+                       use_pallas=False)

@@ -1,4 +1,4 @@
-from repro.kernels.gram.ops import gram
-from repro.kernels.gram.ref import gram_ref
+from repro.kernels.gram.ops import gram, gram_batched
+from repro.kernels.gram.ref import gram_batched_ref, gram_ref
 
-__all__ = ["gram", "gram_ref"]
+__all__ = ["gram", "gram_batched", "gram_batched_ref", "gram_ref"]

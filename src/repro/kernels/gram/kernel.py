@@ -33,6 +33,19 @@ def _gram_kernel(x_ref, o_ref):
     )
 
 
+def _gram_batched_kernel(x_ref, o_ref):
+    # d-block index is the LAST grid dim (innermost on TPU), so for a fixed
+    # lane the (1, n, n) accumulator block is revisited across d steps.
+    @pl.when(pl.program_id(1) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x = x_ref[0].astype(jnp.float32)
+    o_ref[0] += jax.lax.dot_general(
+        x, x, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )
+
+
 @functools.partial(jax.jit, static_argnames=("block_d", "interpret"))
 def gram_pallas(x: jax.Array, *, block_d: int = 512, interpret: bool = False
                 ) -> jax.Array:
@@ -52,5 +65,28 @@ def gram_pallas(x: jax.Array, *, block_d: int = 512, interpret: bool = False
         in_specs=[pl.BlockSpec((n, block_d), lambda i: (0, i))],
         out_specs=pl.BlockSpec((n, n), lambda i: (0, 0)),
         out_shape=jax.ShapeDtypeStruct((n, n), jnp.float32),
+        interpret=interpret,
+    )(x)
+
+
+@functools.partial(jax.jit, static_argnames=("block_d", "interpret"))
+def gram_batched_pallas(x: jax.Array, *, block_d: int = 512,
+                        interpret: bool = False) -> jax.Array:
+    """Lane-batched Gram: (B, n, d) -> (B, n, n) in ONE kernel launch.
+
+    Grid = lanes x d-blocks; each lane accumulates its own (n, n) output
+    block over the d sweep.  One compile serves every lane of a fleet shape
+    bucket — the standalone analogue of what the vmap batching rule does to
+    :func:`gram_pallas` inside the lane-vmapped round.
+    """
+    b, n, d = x.shape
+    assert d % block_d == 0, (d, block_d)
+    grid = (b, d // block_d)
+    return pl.pallas_call(
+        _gram_batched_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((1, n, block_d), lambda l, i: (l, 0, i))],
+        out_specs=pl.BlockSpec((1, n, n), lambda l, i: (l, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, n, n), jnp.float32),
         interpret=interpret,
     )(x)

@@ -6,8 +6,8 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.gram.kernel import gram_pallas
-from repro.kernels.gram.ref import gram_ref
+from repro.kernels.gram.kernel import gram_batched_pallas, gram_pallas
+from repro.kernels.gram.ref import gram_batched_ref, gram_ref
 
 
 @functools.partial(jax.jit, static_argnames=("block_d", "use_pallas", "interpret"))
@@ -29,3 +29,22 @@ def gram(x: jax.Array, *, block_d: int = 512, use_pallas: bool = True,
     if pad:
         x = jnp.pad(x, ((0, 0), (0, pad)))
     return gram_pallas(x, block_d=block_d, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("block_d", "use_pallas", "interpret"))
+def gram_batched(x: jax.Array, *, block_d: int = 512, use_pallas: bool = True,
+                 interpret: bool | None = None) -> jax.Array:
+    """Per-lane Gram matrices of a (B, n, d) lane-batched stack.
+
+    Same padding contract as :func:`gram`; the whole fleet bucket runs as
+    one kernel launch with grid = lanes x d-blocks.
+    """
+    if not use_pallas:
+        return gram_batched_ref(x)
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    _, _, d = x.shape
+    pad = (-d) % block_d
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, 0), (0, pad)))
+    return gram_batched_pallas(x, block_d=block_d, interpret=interpret)

@@ -48,18 +48,69 @@ def _bitonic_sort(y: jax.Array) -> jax.Array:
     return y
 
 
-def _make_kernel(f: int, mode: str):
-    def kernel(m_ref, x_ref, o_ref):
+def _make_kernel(f: int, mode: str, mix: bool):
+    """Kernel body; ``mix=False`` drops the M operand and the MXU dot
+    entirely (plain CWTM/CWMed — no identity-matmul waste)."""
+    def kernel(*refs):
+        if mix:
+            m_ref, x_ref, o_ref = refs
+        else:
+            x_ref, o_ref = refs
         x = x_ref[...].astype(jnp.float32)
-        m = m_ref[...].astype(jnp.float32)
-        y = jax.lax.dot_general(
-            m, x, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
-        )
+        if mix:
+            m = m_ref[...].astype(jnp.float32)
+            y = jax.lax.dot_general(
+                m, x, (((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32)
+        else:
+            y = x
         n = y.shape[0]
         ys = _bitonic_sort(y)
         if mode == "trim":
             kept = ys[f: n - f] if f else ys
             o_ref[...] = kept.mean(axis=0, keepdims=True)
+        elif mode == "med":
+            if n % 2 == 1:
+                o_ref[...] = ys[n // 2][None]
+            else:
+                o_ref[...] = (0.5 * (ys[n // 2 - 1] + ys[n // 2]))[None]
+        else:
+            raise ValueError(mode)
+    return kernel
+
+
+def _make_dyn_kernel(mode: str, mix: bool):
+    """Kernel body with f as a RUNTIME (1, 1) int32 operand.
+
+    Trimming selects through a rank mask over the bitonically sorted stack
+    instead of the static ``ys[f : n - f]`` slice, mirroring
+    ``repro.core.robust._tree_coordinate_rule_dyn`` — so one compile serves
+    every Byzantine budget of a fleet shape bucket.  ``mode="med"`` ignores
+    f (kept in the signature for call-site uniformity); ``mix=False``
+    drops the M operand and the MXU dot entirely.
+    """
+    def kernel(*refs):
+        if mix:
+            f_ref, m_ref, x_ref, o_ref = refs
+        else:
+            f_ref, x_ref, o_ref = refs
+        f = f_ref[0, 0]
+        x = x_ref[...].astype(jnp.float32)
+        if mix:
+            m = m_ref[...].astype(jnp.float32)
+            y = jax.lax.dot_general(
+                m, x, (((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32)
+        else:
+            y = x
+        n = y.shape[0]
+        ys = _bitonic_sort(y)
+        if mode == "trim":
+            # >=2-D iota: 1-D iota does not lower on TPU.
+            i = jax.lax.broadcasted_iota(jnp.int32, (n, 1), 0)
+            keep = ((i >= f) & (i < n - f)).astype(jnp.float32)
+            denom = jnp.maximum((n - 2 * f).astype(jnp.float32), 1.0)
+            o_ref[...] = ((ys * keep).sum(axis=0) / denom)[None]
         elif mode == "med":
             if n % 2 == 1:
                 o_ref[...] = ys[n // 2][None]
@@ -78,7 +129,8 @@ def mixtrim_pallas(x: jax.Array, m: jax.Array, *, f: int, mode: str = "trim",
 
     Args:
       x: (n, d) worker stack, n a power of two, d a multiple of block_d.
-      m: (n, n) mixing matrix (identity = plain CWTM/CWMed).
+      m: (n, n) mixing matrix, or None for plain CWTM/CWMed (the mix dot
+        is elided entirely — no identity matmul).
       f: trim count (ignored for mode="med").
       mode: "trim" or "med".
     Returns: (d,) fp32 aggregate.
@@ -87,15 +139,53 @@ def mixtrim_pallas(x: jax.Array, m: jax.Array, *, f: int, mode: str = "trim",
     assert d % block_d == 0, (d, block_d)
     assert n & (n - 1) == 0, f"bitonic network needs power-of-two n, got {n}"
     grid = (d // block_d,)
+    mix = m is not None
+    in_specs = [pl.BlockSpec((n, block_d), lambda i: (0, i))]
+    operands = (x,)
+    if mix:
+        in_specs.insert(0, pl.BlockSpec((n, n), lambda i: (0, 0)))
+        operands = (m, x)
     out = pl.pallas_call(
-        _make_kernel(f, mode),
+        _make_kernel(f, mode, mix),
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((n, n), lambda i: (0, 0)),
-            pl.BlockSpec((n, block_d), lambda i: (0, i)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, block_d), lambda i: (0, i)),
         out_shape=jax.ShapeDtypeStruct((1, d), jnp.float32),
         interpret=interpret,
-    )(m, x)
+    )(*operands)
+    return out[0]
+
+
+@functools.partial(jax.jit, static_argnames=("mode", "block_d", "interpret"))
+def mixtrim_dyn_pallas(x: jax.Array, m: jax.Array, f: jax.Array, *,
+                       mode: str = "trim", block_d: int = 512,
+                       interpret: bool = False) -> jax.Array:
+    """Fused mix+trim with a TRACED Byzantine count.
+
+    Same tiling as :func:`mixtrim_pallas`; ``f`` rides along as a tiny
+    (1, 1) int32 operand broadcast to every grid step, and trimming goes
+    through a rank mask.  Under ``jax.vmap`` (the fleet's lane axis) the
+    pallas batching rule prepends a lane grid dimension, so a whole shape
+    bucket still costs one compile.
+    """
+    n, d = x.shape
+    assert d % block_d == 0, (d, block_d)
+    assert n & (n - 1) == 0, f"bitonic network needs power-of-two n, got {n}"
+    f = jnp.asarray(f, jnp.int32).reshape(1, 1)
+    grid = (d // block_d,)
+    mix = m is not None
+    in_specs = [pl.BlockSpec((1, 1), lambda i: (0, 0)),
+                pl.BlockSpec((n, block_d), lambda i: (0, i))]
+    operands = (f, x)
+    if mix:
+        in_specs.insert(1, pl.BlockSpec((n, n), lambda i: (0, 0)))
+        operands = (f, m, x)
+    out = pl.pallas_call(
+        _make_dyn_kernel(mode, mix),
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, block_d), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((1, d), jnp.float32),
+        interpret=interpret,
+    )(*operands)
     return out[0]

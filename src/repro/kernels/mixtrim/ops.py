@@ -6,8 +6,8 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.mixtrim.kernel import mixtrim_pallas
-from repro.kernels.mixtrim.ref import mixtrim_ref
+from repro.kernels.mixtrim.kernel import mixtrim_dyn_pallas, mixtrim_pallas
+from repro.kernels.mixtrim.ref import mixtrim_dyn_ref, mixtrim_ref
 
 
 @functools.partial(jax.jit, static_argnames=("f", "mode", "block_d",
@@ -17,9 +17,10 @@ def mixtrim(x: jax.Array, m: jax.Array, *, f: int, mode: str = "trim",
             interpret: bool | None = None) -> jax.Array:
     """Fused NNM-mix + coordinate-wise trim/median of a (n, d) stack.
 
-    Pads d to a multiple of ``block_d`` (zero columns mix/sort/trim to an
-    exact zero tail which is sliced off).  Falls back to the jnp oracle when
-    n is not a power of two (the bitonic network requirement) or when
+    ``m=None`` elides the mix dot entirely (plain CWTM/CWMed).  Pads d to
+    a multiple of ``block_d`` (zero columns mix/sort/trim to an exact zero
+    tail which is sliced off).  Falls back to the jnp oracle when n is not
+    a power of two (the bitonic network requirement) or when
     ``use_pallas=False``.
     """
     n, d = x.shape
@@ -32,4 +33,30 @@ def mixtrim(x: jax.Array, m: jax.Array, *, f: int, mode: str = "trim",
         x = jnp.pad(x, ((0, 0), (0, pad)))
     out = mixtrim_pallas(x, m, f=f, mode=mode, block_d=block_d,
                          interpret=interpret)
+    return out[:d]
+
+
+@functools.partial(jax.jit, static_argnames=("mode", "block_d", "use_pallas",
+                                             "interpret"))
+def mixtrim_dyn(x: jax.Array, m: jax.Array, f: jax.Array, *,
+                mode: str = "trim", block_d: int = 512,
+                use_pallas: bool = True,
+                interpret: bool | None = None) -> jax.Array:
+    """Fused mix+trim with a TRACED trim count (fleet dynamic-f path).
+
+    One compile serves every f of a shape bucket: ``f`` is an int32 scalar
+    operand (possibly a vmap lane tracer), trimming is a rank mask over the
+    sorted stack.  Same ``m=None`` / padding / power-of-two-n fallback
+    contract as :func:`mixtrim`.
+    """
+    n, d = x.shape
+    if not use_pallas or n & (n - 1) != 0:
+        return mixtrim_dyn_ref(x, m, f, mode)
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    pad = (-d) % block_d
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad)))
+    out = mixtrim_dyn_pallas(x, m, f, mode=mode, block_d=block_d,
+                             interpret=interpret)
     return out[:d]

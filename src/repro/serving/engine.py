@@ -106,6 +106,10 @@ class FleetService:
         self._compile_cache: dict = {}
         self.drains = 0
         self.last_trace_count = 0
+        #: Kernel-backend decision record of the latest drain's aggregation
+        #: trace (None when the drain hit the compile cache — dispatch is
+        #: decided at trace time; see repro.kernels.dispatch).
+        self.last_dispatch = None
 
     def submit(self, job: Union["ScenarioSpec", "FleetJob"]) -> int:  # noqa: F821
         """Enqueue a job; returns its job_id immediately."""
@@ -139,6 +143,7 @@ class FleetService:
     def drain(self) -> list[int]:
         """Run everything queued as ONE fleet; returns the finished ids."""
         from repro.fleet import FleetRunner
+        from repro.kernels import dispatch as kdispatch
         if not self._queue:
             return []
         ids = self._queue
@@ -146,9 +151,12 @@ class FleetService:
         jobs = [self._tickets[i].result for i in ids]
         runner = FleetRunner(jobs, max_lanes=self.max_lanes,
                              compile_cache=self._compile_cache)
+        before = kdispatch.last_dispatch()
         for i, res in zip(ids, runner.run()):
             self._tickets[i].status = "done"
             self._tickets[i].result = res
         self.drains += 1
         self.last_trace_count = runner.trace_count
+        after = kdispatch.last_dispatch()
+        self.last_dispatch = after if after is not before else None
         return ids

@@ -1,0 +1,281 @@
+"""Kernel backend layer: routing, parity, fallback detectability.
+
+The load-bearing acceptance tests:
+
+* ``backend="pallas"`` (interpret mode on CPU) matches ``backend="xla"``
+  on ``robust_aggregate`` outputs for every rule x pre combination;
+* the dynamic-f pipeline holds the same parity with f traced, and one
+  compile serves every f (the fleet shape-bucket contract);
+* a requested-pallas run that silently fell back to the jnp oracle is
+  DETECTABLE through ``last_dispatch()``;
+* the fused mixtrim path structurally eliminates the materialized
+  (n, D) mixed stack (no full-width dot_general/sort in the jaxpr).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import AggregatorSpec
+from repro.core import robust as robust_lib
+from repro.kernels import dispatch as kdispatch
+
+ALL_RULES = ("average", "krum", "multikrum", "gm", "mda",
+             "cwtm", "cwmed", "meamed")
+DYN_RULES = tuple(r for r in ALL_RULES if r != "mda")
+PRES = (None, "nnm", "bucketing")
+
+
+def _tree(seed=0, n=16):
+    rng = np.random.default_rng(seed)
+    return {"w": jnp.asarray(rng.normal(size=(n, 37)), jnp.float32),
+            "b": jnp.asarray(rng.normal(size=(n, 3, 5)), jnp.float32),
+            "s": jnp.asarray(rng.normal(size=(n,)), jnp.float32)}
+
+
+def _assert_trees_close(a, b, **kw):
+    for la, lb in zip(jax.tree_util.tree_leaves(a),
+                      jax.tree_util.tree_leaves(b)):
+        np.testing.assert_allclose(np.asarray(la), np.asarray(lb), **kw)
+
+
+# ---------------------------------------------------------------------------
+# Acceptance: pallas == xla for every rule x pre, static and dynamic f.
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("rule", ALL_RULES)
+@pytest.mark.parametrize("pre", PRES)
+def test_backend_parity_static(rule, pre):
+    tree, key = _tree(3), jax.random.PRNGKey(5)
+    for f in (0, 3):
+        def spec(backend):
+            return AggregatorSpec(rule=rule, f=f, pre=pre, bucket_size=2,
+                                  backend=backend)
+        ref = robust_lib.robust_aggregate(tree, spec("xla"), key=key)
+        got = robust_lib.robust_aggregate(tree, spec("pallas"), key=key)
+        _assert_trees_close(got, ref, rtol=1e-5, atol=1e-5,
+                            err_msg=f"{rule}/{pre}/f={f}")
+
+
+@pytest.mark.parametrize("rule", DYN_RULES)
+@pytest.mark.parametrize("pre", PRES)
+def test_backend_parity_dyn(rule, pre):
+    tree, key = _tree(4), jax.random.PRNGKey(6)
+    for f in (0, 2, 3):
+        def spec(backend):
+            return AggregatorSpec(rule=rule, f=f, pre=pre, bucket_size=2,
+                                  backend=backend)
+        ref = robust_lib.robust_aggregate_dyn(tree, spec("xla"),
+                                              jnp.int32(f), key=key)
+        got = robust_lib.robust_aggregate_dyn(tree, spec("pallas"),
+                                              jnp.int32(f), key=key)
+        _assert_trees_close(got, ref, rtol=1e-5, atol=1e-5,
+                            err_msg=f"{rule}/{pre}/f={f}")
+
+
+def test_batched_pallas_matches_per_lane_dyn():
+    tree = _tree(7)
+    fs = jnp.asarray([0, 2, 3], jnp.int32)
+    bt = jax.tree_util.tree_map(
+        lambda leaf: jnp.stack([leaf, 2 * leaf, leaf + 1]), tree)
+    spec = AggregatorSpec(rule="cwtm", f=0, pre="nnm", backend="pallas")
+    out = robust_lib.batched_robust_aggregate(bt, spec, fs)
+    for lane, f in enumerate((0, 2, 3)):
+        single = robust_lib.robust_aggregate_dyn(
+            jax.tree_util.tree_map(lambda leaf, k=lane: leaf[k], bt),
+            spec, jnp.int32(f))
+        _assert_trees_close(
+            jax.tree_util.tree_map(lambda leaf, k=lane: leaf[k], out),
+            single, rtol=1e-5, atol=1e-6)
+
+
+def test_backend_parity_bf16_transport():
+    """bf16 transport stacks flow through the kernels as bf16 bytes and
+    keep parity with the leaf-streamed xla pipeline.  Tight tolerance:
+    the NNM matrix is cast to the stack dtype on BOTH paths (identical
+    rounding of the mixing weights), leaving only fp32 sum-order noise."""
+    tree, key = _tree(8), jax.random.PRNGKey(9)
+    for rule in ("cwtm", "cwmed", "krum", "gm", "meamed"):
+        def spec(backend):
+            return AggregatorSpec(rule=rule, f=3, pre="nnm",
+                                  transport_dtype="bf16", backend=backend)
+        ref = robust_lib.robust_aggregate(tree, spec("xla"), key=key)
+        got = robust_lib.robust_aggregate(tree, spec("pallas"), key=key)
+        _assert_trees_close(got, ref, rtol=1e-3, atol=1e-3, err_msg=rule)
+
+
+def test_return_coeff_through_pallas_backend():
+    tree = _tree(10)
+    spec = AggregatorSpec(rule="multikrum", f=3, pre="nnm", backend="pallas")
+    out, coeff = robust_lib.robust_aggregate(tree, spec, return_coeff=True)
+    ref, ref_coeff = robust_lib.robust_aggregate(
+        tree, AggregatorSpec(rule="multikrum", f=3, pre="nnm",
+                             backend="xla"), return_coeff=True)
+    np.testing.assert_allclose(np.asarray(coeff), np.asarray(ref_coeff),
+                               rtol=1e-5, atol=1e-6)
+    _assert_trees_close(out, ref, rtol=1e-5, atol=1e-5)
+    _, coeff2 = robust_lib.robust_aggregate(
+        tree, AggregatorSpec(rule="cwtm", f=3, pre="nnm", backend="pallas"),
+        return_coeff=True)
+    assert coeff2 is None   # coordinate rules have no coefficient vector
+
+
+# ---------------------------------------------------------------------------
+# One compile serves every f of a shape bucket (dynamic-f contract).
+# ---------------------------------------------------------------------------
+
+def test_dyn_pallas_one_compile_across_f():
+    tree = _tree(11)
+    spec = AggregatorSpec(rule="cwtm", f=0, pre="nnm", backend="pallas")
+    traces = []
+
+    @jax.jit
+    def agg(t, f):
+        traces.append(1)
+        return robust_lib.robust_aggregate_dyn(t, spec, f)
+
+    for f in (0, 1, 2, 3, 5, 7):
+        got = agg(tree, jnp.int32(f))
+        ref = robust_lib.robust_aggregate_dyn(
+            tree, AggregatorSpec(rule="cwtm", f=0, pre="nnm",
+                                 backend="xla"), jnp.int32(f))
+        _assert_trees_close(got, ref, rtol=1e-5, atol=1e-5,
+                            err_msg=f"f={f}")
+    assert len(traces) == 1, f"expected one trace, got {len(traces)}"
+
+
+# ---------------------------------------------------------------------------
+# Dispatch record: silent fallbacks are detectable.
+# ---------------------------------------------------------------------------
+
+def test_nonpow2_mixtrim_fallback_is_recorded():
+    """n=17 (paper scale) on backend="pallas": the mixtrim kernel cannot
+    run (bitonic network) — the oracle result must still be exact AND the
+    fallback must be visible in the decision record."""
+    tree = _tree(12, n=17)
+    spec = AggregatorSpec(rule="cwtm", f=4, pre="nnm", backend="pallas")
+    got = robust_lib.robust_aggregate(tree, spec)
+    rec = kdispatch.last_dispatch()
+    assert rec is not None and rec.backend == "pallas"
+    assert any(d.primitive == "mixtrim" and d.fell_back
+               for d in rec.decisions), rec.describe()
+    assert any("power of two" in d.reason for d in rec.fallbacks)
+    # gram itself has no power-of-two constraint: it must NOT fall back
+    assert not any(d.primitive == "gram" and d.fell_back
+                   for d in rec.decisions)
+    ref = robust_lib.robust_aggregate(
+        tree, AggregatorSpec(rule="cwtm", f=4, pre="nnm", backend="xla"))
+    _assert_trees_close(got, ref, rtol=1e-5, atol=1e-5)
+
+
+def test_pow2_run_records_no_fallback():
+    tree = _tree(13, n=16)
+    spec = AggregatorSpec(rule="cwtm", f=3, pre="nnm", backend="pallas")
+    robust_lib.robust_aggregate(tree, spec)
+    rec = kdispatch.last_dispatch()
+    assert rec.fallbacks == [], rec.describe()
+    used = {d.primitive: d.used for d in rec.decisions}
+    # off-TPU the kernels run interpreted — recorded as pallas-interpret,
+    # which is NOT a fallback (the kernel body executed)
+    expected = "pallas" if jax.default_backend() == "tpu" \
+        else "pallas-interpret"
+    assert used["gram"] == expected and used["mixtrim"] == expected
+
+
+def test_meamed_fallback_is_recorded():
+    tree = _tree(14)
+    robust_lib.robust_aggregate(
+        tree, AggregatorSpec(rule="meamed", f=3, pre="nnm",
+                             backend="pallas"))
+    rec = kdispatch.last_dispatch()
+    assert any("meamed" in d.reason for d in rec.fallbacks), rec.describe()
+
+
+def test_xla_backend_records_xla_pipeline():
+    tree = _tree(15)
+    robust_lib.robust_aggregate(
+        tree, AggregatorSpec(rule="cwtm", f=3, pre="nnm", backend="xla"))
+    rec = kdispatch.last_dispatch()
+    assert rec.backend == "xla" and rec.fallbacks == []
+
+
+def test_resolve_backend():
+    assert kdispatch.resolve_backend("xla") == "xla"
+    assert kdispatch.resolve_backend("pallas") == "pallas"
+    # auto: pallas only on a SINGLE-device TPU; multi-device meshes stay
+    # on the GSPMD leaf-streamed xla path
+    auto = kdispatch.resolve_backend("auto")
+    single_tpu = (jax.default_backend() == "tpu"
+                  and jax.device_count() == 1)
+    assert auto == ("pallas" if single_tpu else "xla")
+    with pytest.raises(ValueError, match="backend"):
+        kdispatch.resolve_backend("cuda")
+    with pytest.raises(ValueError, match="backend"):
+        robust_lib.robust_aggregate(
+            _tree(16), AggregatorSpec(rule="cwtm", f=3, backend="cuda"))
+
+
+def test_dispatch_gram_batched_direct_entry():
+    """The direct (B, n, d) gram entry: kernel result per lane equals the
+    solo dispatch, and the decision is recorded."""
+    x = jnp.asarray(np.random.default_rng(21).normal(size=(3, 16, 200)),
+                    jnp.float32)
+    kdispatch.open_record(requested="pallas", backend="pallas",
+                          rule="gram", pre=None)
+    got = kdispatch.dispatch_gram_batched(x, backend="pallas")
+    rec = kdispatch.last_dispatch()
+    assert any(d.primitive == "gram_batched" and not d.fell_back
+               for d in rec.decisions)
+    for k in range(3):
+        np.testing.assert_array_equal(
+            np.asarray(got[k]),
+            np.asarray(kdispatch.dispatch_gram(x[k], backend="pallas")))
+    ref = kdispatch.dispatch_gram_batched(x, backend="xla")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=1e-4, atol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# Flatten / unflatten and block_d selection.
+# ---------------------------------------------------------------------------
+
+def test_flatten_roundtrip_preserves_layout():
+    tree = _tree(17)
+    flat, layout = kdispatch.flatten_worker_stack(tree)
+    assert flat.shape == (16, layout.width)
+    assert layout.n == 16 and layout.width == 37 + 15 + 1
+    # combining with a one-hot coefficient reproduces that worker's row
+    onehot = jnp.zeros((16,)).at[4].set(1.0)
+    picked = kdispatch.unflatten_aggregate(flat.T @ onehot, layout)
+    _assert_trees_close(
+        picked, jax.tree_util.tree_map(lambda leaf: leaf[4], tree),
+        rtol=1e-6, atol=1e-6)
+
+
+def test_pick_block_d():
+    assert kdispatch.pick_block_d(8192) == 512      # wide: capped
+    assert kdispatch.pick_block_d(512) == 512
+    assert kdispatch.pick_block_d(100) == 128       # narrow: one 128 tile
+    assert kdispatch.pick_block_d(300) == 384       # round up to 128x
+    assert kdispatch.pick_block_d(1) == 128
+
+
+# ---------------------------------------------------------------------------
+# Structural: the fused path removes the materialized mixed stack.
+# ---------------------------------------------------------------------------
+
+def test_fused_mixtrim_eliminates_mixed_stack():
+    """XLA's nnm+cwtm materializes two full-width (n, D) intermediates
+    (the Y = M @ X dot and the sort); the fused kernel path has ZERO —
+    its jaxpr only ever holds (n, BLK_D) tiles."""
+    n, d = 16, 8192
+    tree = {"x": jnp.zeros((n, d), jnp.float32)}
+
+    def counts(backend):
+        spec = AggregatorSpec(rule="cwtm", f=3, pre="nnm", backend=backend)
+        return kdispatch.count_wide_ops(
+            lambda t: robust_lib.robust_aggregate(t, spec), tree,
+            n=n, width=d)
+
+    assert counts("xla") >= 2
+    assert counts("pallas") == 0

@@ -52,9 +52,10 @@ _OPT = sgd(clip=1.0)
 
 def _job(label, *, f=2, schedule=None, seed=0, rounds=5, rule="cwtm",
          pre="nnm", algorithm="dshb", beta=0.9, local_steps=0,
-         n=_N, m=_M, lr=0.1):
+         n=_N, m=_M, lr=0.1, backend="auto"):
     cfg = FedConfig(n_clients=n, clients_per_round=m, f=f,
-                    agg=AggregatorSpec(rule=rule, f=f, pre=pre),
+                    agg=AggregatorSpec(rule=rule, f=f, pre=pre,
+                                       backend=backend),
                     client=ClientConfig(local_steps=local_steps,
                                         local_lr=0.05, algorithm=algorithm,
                                         beta=beta))
@@ -98,6 +99,51 @@ def test_b8_fleet_bitwise_equals_eight_single_runs():
             np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
         for ca, cb in zip(solo.history.cohorts, res.history.cohorts):
             np.testing.assert_array_equal(ca, cb)
+
+
+def test_b8_pallas_backend_one_compile_matches_solo():
+    """Acceptance: a B=8 bucket on the pallas backend (interpret mode off-
+    TPU) still compiles once per shape bucket, per-lane results equal the
+    solo pallas run, and the kernel dispatch is visible + fallback-free
+    (cohort m=8 is a power of two, so the fused mixtrim kernel runs)."""
+    from repro.kernels import dispatch as kdispatch
+    scheds = [constant_attack("alie", 3.0), constant_attack("sf"),
+              constant_attack("none"), ramp_eta("foe", 1.0, 6.0, 4)]
+    jobs = [_job(f"p{i}", f=(i % 3) + 1, seed=i, n=12, m=8,
+                 schedule=scheds[i % len(scheds)], backend="pallas")
+            for i in range(8)]
+    runner = FleetRunner(jobs)
+    fleet = runner.run()
+    assert runner.n_buckets == 1 and runner.trace_count == 1
+    rec = kdispatch.last_dispatch()
+    assert rec is not None and rec.backend == "pallas" and rec.dyn
+    assert rec.fallbacks == [], rec.describe()
+
+    for job, res in zip(jobs, fleet):
+        solo = FleetRunner([job]).run()[0]
+        np.testing.assert_allclose(res.history.loss, solo.history.loss,
+                                   rtol=1e-6, atol=1e-7)
+        np.testing.assert_allclose(res.history.direction_norm,
+                                   solo.history.direction_norm,
+                                   rtol=1e-6, atol=1e-7)
+        for a, b in zip(jax.tree_util.tree_leaves(solo.state),
+                        jax.tree_util.tree_leaves(res.state)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=1e-6, atol=1e-7)
+
+
+def test_pallas_backend_is_own_shape_bucket():
+    """backend is compiled-round key material: mixing backends must split
+    the bucket (different kernels inside the round), not silently share."""
+    jobs = [_job("x", seed=0, n=12, m=8, backend="xla"),
+            _job("p", seed=0, n=12, m=8, backend="pallas")]
+    assert bucket_key(jobs[0]) != bucket_key(jobs[1])
+    runner = FleetRunner(jobs)
+    res = runner.run()
+    assert runner.n_buckets == 2 and runner.trace_count == 2
+    # same math, different kernels: trajectories agree to float tolerance
+    np.testing.assert_allclose(res[0].history.loss, res[1].history.loss,
+                               rtol=1e-5, atol=1e-6)
 
 
 def test_fleet_matches_single_scenario_engine():
