@@ -15,7 +15,13 @@ equations in the jaxpr shows the Pallas path removes the materialized
 mixed stack the XLA coordinate path creates (``Y = M @ X`` + sort).
 
   PYTHONPATH=src python benchmarks/bench_agg_cost.py [--full]
-      [--structural-only] [--json-out PATH]
+      [--structural-only] [--json-out PATH] [--dist-out PATH]
+
+``--dist-out`` additionally emits the per-device-count sharded-backend
+comparison (``backend="pallas_sharded"`` vs ``"xla"`` wide-op counts,
+fallbacks, and parity per mesh size) — run it on a forced multi-device
+host (``XLA_FLAGS=--xla_force_host_platform_device_count=8``); the JSON
+is the ``BENCH_dist_agg.json`` CI gate input.
 """
 import argparse
 import json
@@ -59,13 +65,90 @@ def structural_summary(n: int = 16, d: int = 8192) -> dict:
         {"x": jnp.ones((n, d), jnp.float32)},
         AggregatorSpec(rule="cwtm", f=3, pre="nnm", backend="pallas"))
     rec = kdispatch.last_dispatch()
+    pow2_fallbacks = len(rec.fallbacks)
+
+    # Non-pow2 n=17 (the common federated case): the padded sentinel sort
+    # must run the fused kernel — zero fallbacks — and match the oracle.
+    rng = np.random.default_rng(17)
+    t17 = {"x": jnp.asarray(rng.normal(size=(17, 777)), jnp.float32)}
+    spec17 = AggregatorSpec(rule="cwtm", f=4, pre="nnm", backend="pallas")
+    got17 = robust_lib.robust_aggregate(t17, spec17)
+    rec17 = kdispatch.last_dispatch()
+    ref17 = robust_lib.robust_aggregate(
+        t17, AggregatorSpec(rule="cwtm", f=4, pre="nnm", backend="xla"))
+    err17 = float(jnp.abs(got17["x"] - ref17["x"]).max())
     return {
         "kind": "agg_cost",
         "n": n,
         "d": d,
         "mixed_stack_wide_ops_xla": wide("xla"),
         "mixed_stack_wide_ops_pallas": wide("pallas"),
-        "mixtrim_fallbacks_pow2": len(rec.fallbacks),
+        "mixtrim_fallbacks_pow2": pow2_fallbacks,
+        "mixtrim_fallbacks_n17": len(rec17.fallbacks),
+        "padded_mixtrim_parity_ok": int(err17 < 1e-4),
+        "padded_mixtrim_parity_maxerr": err17,
+    }
+
+
+def dist_summary(n: int = 16, d: int = 8192) -> dict:
+    """Per-device-count backend comparison (machine-independent structure).
+
+    Runs only under a multi-device host (CI forces 8 CPU devices via
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=8``).  For each
+    device count k (1-D mesh over the first k devices), counts full-width
+    (n, d) dot/sort equations for ``backend="xla"`` vs
+    ``backend="pallas_sharded"`` and records the sharded run's fallbacks
+    and xla parity — the CI gate input for ``BENCH_dist_agg.json``.
+    """
+    from repro.launch.mesh import use_mesh
+
+    devices = jax.devices()
+    if len(devices) < 2:
+        raise SystemExit(
+            "bench_agg_cost --dist-out needs a multi-device host: a "
+            "1-device run only produces the DEGRADED pallas_sharded row, "
+            "which would trip the perf gate as a phantom regression.  "
+            "Re-run with XLA_FLAGS=--xla_force_host_platform_device_count=8")
+    counts = [k for k in (1, 2, 4, 8) if k <= len(devices)]
+    rng = np.random.default_rng(0)
+    tree = {"x": jnp.asarray(rng.normal(size=(n, d)), jnp.float32)}
+    spec_s = AggregatorSpec(rule="cwtm", f=3, pre="nnm",
+                            backend="pallas_sharded")
+    spec_x = AggregatorSpec(rule="cwtm", f=3, pre="nnm", backend="xla")
+    ref = robust_lib.robust_aggregate(tree, spec_x)
+
+    per_dc = {}
+    for k in counts:
+        mesh = jax.sharding.Mesh(np.asarray(devices[:k]), ("shard",))
+        with use_mesh(mesh):
+            wide_s = kdispatch.count_wide_ops(
+                lambda t: robust_lib.robust_aggregate(t, spec_s), tree,
+                n=n, width=d)
+            wide_x = kdispatch.count_wide_ops(
+                lambda t: robust_lib.robust_aggregate(t, spec_x), tree,
+                n=n, width=d)
+            got = robust_lib.robust_aggregate(tree, spec_s)
+            rec = kdispatch.last_dispatch()
+            err = float(jnp.abs(got["x"] - ref["x"]).max())
+        row = {"wide_ops_sharded": wide_s, "wide_ops_xla": wide_x,
+               "mesh_devices": rec.mesh_devices, "fallbacks":
+                   len(rec.fallbacks), "parity_maxerr_vs_xla": err}
+        per_dc[str(k)] = row
+        emit(f"dist_agg_dc{k}_wide_ops_sharded", float(wide_s),
+             f"n{n}_d{d},mesh_devices={rec.mesh_devices}")
+    last = str(counts[-1])
+    return {
+        "kind": "dist_agg",
+        "n": n,
+        "d": d,
+        "device_counts": counts,
+        "per_device_count": per_dc,
+        # flat gate keys for scripts/perf_gate.py (dc = max available)
+        "sharded_wide_ops_max_dc": per_dc[last]["wide_ops_sharded"],
+        "sharded_fallbacks_max_dc": per_dc[last]["fallbacks"],
+        "sharded_parity_ok": int(per_dc[last]["parity_maxerr_vs_xla"]
+                                 < 1e-4),
+        "wide_ops_xla": per_dc[last]["wide_ops_xla"],
     }
 
 
@@ -118,12 +201,21 @@ def bench_kernels(fast: bool) -> dict:
 
 
 def main(fast: bool = True, *, json_out: str | None = None,
-         structural_only: bool = False) -> dict:
+         structural_only: bool = False,
+         dist_out: str | None = None) -> dict:
     summary = structural_summary()
     emit("mixed_stack_wide_ops_xla",
          float(summary["mixed_stack_wide_ops_xla"]), "jaxpr_dot+sort_n_d")
     emit("mixed_stack_wide_ops_pallas",
          float(summary["mixed_stack_wide_ops_pallas"]), "jaxpr_dot+sort_n_d")
+    emit("mixtrim_fallbacks_n17",
+         float(summary["mixtrim_fallbacks_n17"]), "padded_sentinel_sort")
+
+    if dist_out:
+        dist = dist_summary()
+        with open(dist_out, "w") as fh:
+            json.dump(dist, fh, indent=2, sort_keys=True)
+        print(f"wrote {dist_out}")
 
     interp_rows: dict = {}
     if not structural_only:
@@ -164,6 +256,10 @@ if __name__ == "__main__":
                     help="skip timing sweeps; emit only the machine-"
                          "independent fusion facts (CI gate input)")
     ap.add_argument("--json-out", default=None)
+    ap.add_argument("--dist-out", default=None,
+                    help="also emit the per-device-count sharded-backend "
+                         "comparison (run under XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=8)")
     args = ap.parse_args()
     main(fast=not args.full, json_out=args.json_out,
-         structural_only=args.structural_only)
+         structural_only=args.structural_only, dist_out=args.dist_out)

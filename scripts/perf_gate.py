@@ -26,7 +26,22 @@ facts from ``benchmarks/bench_agg_cost.py``):
 * ``mixed_stack_wide_ops_xla``    >= 1 — the check itself stays honest
   (the XLA pipeline it contrasts against still materializes);
 * ``mixtrim_fallbacks_pow2``      <= baseline (0) — a pow2-n pallas run
-  must actually run the kernels.
+  must actually run the kernels;
+* ``mixtrim_fallbacks_n17``       <= baseline (0) — non-power-of-two n
+  runs the fused kernel through the padded sentinel sort, no oracle;
+* ``padded_mixtrim_parity_ok``    >= 1 — the padded kernel matches the
+  jnp oracle on n=17.
+
+Distributed-backend hard gates (``--dist-agg``; from
+``bench_agg_cost.py --dist-out`` on a forced 8-device host):
+
+* ``sharded_wide_ops_max_dc``   <= baseline (0) — under the largest mesh
+  the sharded pipeline holds zero full-width (n, d) dot/sort equations;
+* ``sharded_fallbacks_max_dc``  <= baseline (0) — the sharded run is
+  fallback-free at full mesh;
+* ``sharded_parity_ok``         >= 1 — sharded output matches the xla
+  oracle;
+* ``wide_ops_xla``              >= 1 — the contrast row stays honest.
 
 Interpret-mode quarantine: Pallas timings measured off-TPU live under the
 JSON's ``"interpret"`` key and CANNOT be gated — any gated key found only
@@ -55,7 +70,18 @@ STRICT_GATES = ("fleet_rounds_per_s",)
 #: "min_1" = current must be >= 1 regardless of baseline.
 AGG_GATES = (("mixed_stack_wide_ops_pallas", "max"),
              ("mixtrim_fallbacks_pow2", "max"),
+             ("mixtrim_fallbacks_n17", "max"),
+             ("padded_mixtrim_parity_ok", "min_1"),
              ("mixed_stack_wide_ops_xla", "min_1"))
+
+#: dist-agg gates (BENCH_dist_agg.json from bench_agg_cost.py --dist-out,
+#: forced 8-device host): the sharded backend must keep the full-width
+#: mixed stack eliminated at the largest mesh, run fallback-free there,
+#: and match the xla oracle; the xla contrast row keeps the check honest.
+DIST_GATES = (("sharded_wide_ops_max_dc", "max"),
+              ("sharded_fallbacks_max_dc", "max"),
+              ("sharded_parity_ok", "min_1"),
+              ("wide_ops_xla", "min_1"))
 
 
 def _gated_value(doc: dict, key: str, path: str):
@@ -93,9 +119,10 @@ def check_fleet(cur: dict, base: dict, args, failures: list) -> None:
             failures.append(key)
 
 
-def check_agg_cost(cur: dict, base: dict, cur_path: str,
-                   failures: list) -> None:
-    for key, direction in AGG_GATES:
+def check_gate_table(gates, cur: dict, base: dict, cur_path: str,
+                     failures: list) -> None:
+    """Exact structural gates shared by the agg-cost and dist-agg docs."""
+    for key, direction in gates:
         val = _gated_value(cur, key, cur_path)
         if direction == "max":
             ref = _gated_value(base, key, "baseline")
@@ -123,11 +150,17 @@ def main() -> int:
                     help="JSON from bench_agg_cost.py --json-out")
     ap.add_argument("--agg-cost-baseline",
                     default="benchmarks/baselines/BENCH_agg_cost.json")
+    ap.add_argument("--dist-agg", default=None,
+                    help="JSON from bench_agg_cost.py --dist-out "
+                         "(forced 8-device host)")
+    ap.add_argument("--dist-agg-baseline",
+                    default="benchmarks/baselines/BENCH_dist_agg.json")
     args = ap.parse_args()
 
-    if args.current is None and args.agg_cost is None:
-        print("perf gate: nothing to check (pass a fleet JSON and/or "
-              "--agg-cost)", file=sys.stderr)
+    if args.current is None and args.agg_cost is None \
+            and args.dist_agg is None:
+        print("perf gate: nothing to check (pass a fleet JSON, --agg-cost "
+              "and/or --dist-agg)", file=sys.stderr)
         return 2
 
     failures: list = []
@@ -143,7 +176,16 @@ def main() -> int:
             agg_cur = json.load(fh)
         with open(args.agg_cost_baseline) as fh:
             agg_base = json.load(fh)
-        check_agg_cost(agg_cur, agg_base, args.agg_cost, failures)
+        check_gate_table(AGG_GATES, agg_cur, agg_base, args.agg_cost,
+                         failures)
+
+    if args.dist_agg is not None:
+        with open(args.dist_agg) as fh:
+            dist_cur = json.load(fh)
+        with open(args.dist_agg_baseline) as fh:
+            dist_base = json.load(fh)
+        check_gate_table(DIST_GATES, dist_cur, dist_base, args.dist_agg,
+                         failures)
 
     if failures:
         print(f"perf gate FAILED: {', '.join(failures)} regressed",

@@ -33,13 +33,17 @@ def nnm(x: Array, f: int) -> Array:
 
 
 def nnm_direct(x: Array, f: int) -> Array:
-    """Literal Alg. 2 transcription (sort by explicit distances).
+    """Literal Alg. 2 transcription (neighbor selection on explicit
+    distances rather than the Gram factorization).
 
     Kept as an independent oracle for tests: must match :func:`nnm` exactly
-    up to tie-breaking.  O(n^2 d) like the paper's description.
+    up to tie-breaking.  O(n^2 d) like the paper's description.  Neighbor
+    selection uses ``top_k`` on negated distances — the same idiom as
+    ``gram.nnm_matrix`` — instead of a full-row argsort, dropping the
+    O(n log n)-per-row sort and unifying the two selection paths.
     """
     n = x.shape[0]
     xf = x.astype(jnp.float32)
     d2 = jnp.sum((xf[:, None, :] - xf[None, :, :]) ** 2, axis=-1)
-    idx = jnp.argsort(d2, axis=1)[:, : n - f]
+    _, idx = jax.lax.top_k(-d2, n - f)
     return xf[idx].mean(axis=1)

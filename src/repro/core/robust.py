@@ -22,8 +22,12 @@ Execution is backend-routed (``AggregatorSpec.backend`` through
 jnp forms below (what the GSPMD distributed path lowers); the "pallas"
 backend flattens the worker stack into ONE contiguous (n, D) buffer and
 runs the blocked ``gram``, streamed ``combine`` and fused ``mixtrim``
-kernels, so the NNM-mixed stack ``Y = M @ X`` never materializes in HBM
-("auto" = pallas on TPU, xla elsewhere; see docs/perf.md).
+kernels, so the NNM-mixed stack ``Y = M @ X`` never materializes in HBM;
+"pallas_sharded" is the same pipeline shard_map'd along D over a mesh
+axis (per-shard gram + psum'd (n, n) partials, replicated coefficients,
+shard-local combine/mixtrim — :mod:`repro.kernels.shard`).  "auto" =
+pallas on a single-device TPU, pallas_sharded on multi-device TPU, xla
+elsewhere; see docs/perf.md.
 
 Both paths do ranking-sensitive arithmetic in fp32.
 """
@@ -165,16 +169,22 @@ def _tree_bucket(tree: PyTree, f: int, key: Array,
 
 def _aggregate_flat(work: PyTree, spec: AggregatorSpec, f, *,
                     key: Optional[Array], return_coeff: bool,
-                    dyn: bool) -> PyTree:
-    """Pallas-backend pipeline: pre-aggregated stack -> one contiguous
+                    dyn: bool, backend: str = "pallas",
+                    mesh_ctx: Optional[tuple] = None) -> PyTree:
+    """Kernel-backend pipeline: pre-aggregated stack -> one contiguous
     (n, D) buffer -> blocked gram -> coeff -> streamed combine / fused
     mixtrim -> aggregated pytree.
 
-    ``f`` is a python int when ``dyn=False`` and a traced int32 scalar when
+    ``backend`` is "pallas" (single device) or "pallas_sharded" (the
+    shard_map'd form; ``mesh_ctx`` is its resolved (mesh, axis) — the
+    gram psums tiny (n, n) partials and combine/mixtrim run shard-local,
+    while the O(n^2) coefficient/NNM math below stays replicated).  ``f``
+    is a python int when ``dyn=False`` and a traced int32 scalar when
     ``dyn=True`` (the fleet path; rank-mask kernels keep one compile per
     shape bucket).  Decisions land on ``kdispatch.last_dispatch()``.
     """
     flat, layout = kdispatch.flatten_worker_stack(work)
+    mesh, axis = mesh_ctx if mesh_ctx is not None else (None, None)
 
     mix_matrix = None
     g = None
@@ -184,11 +194,12 @@ def _aggregate_flat(work: PyTree, spec: AggregatorSpec, f, *,
             # contract shared with the xla backend — so it stays on the
             # leaf-streamed path; only exact grams use the blocked kernel.
             kdispatch.record_decision(
-                "gram", "pallas", "xla",
+                "gram", backend, "xla",
                 "sketch_dim gram runs the leaf-streamed signed sketch")
             g = tree_sketch_gram(work, spec.sketch_dim, key)
         else:
-            g = kdispatch.dispatch_gram(flat, backend="pallas")
+            g = kdispatch.dispatch_gram(flat, backend=backend,
+                                        mesh=mesh, axis=axis)
 
     if spec.pre == "nnm":
         d2 = gramlib.pdist_sq_from_gram(g)
@@ -205,22 +216,20 @@ def _aggregate_flat(work: PyTree, spec: AggregatorSpec, f, *,
                 spec.rule, g, f, gm_iters=spec.gm_iters, gm_eps=spec.gm_eps)
         if mix_matrix is not None:
             coeff = coeff @ mix_matrix   # R = c^T (M X) = (c^T M) X
-        vec = kdispatch.dispatch_combine(flat, coeff, backend="pallas")
+        vec = kdispatch.dispatch_combine(flat, coeff, backend=backend,
+                                         mesh=mesh, axis=axis)
         out = kdispatch.unflatten_aggregate(vec, layout)
         return (out, coeff) if return_coeff else out
 
     if spec.rule in COORDINATE_RULES:
         if spec.rule == "meamed":
-            # No fused kernel: mix (if any) + mean-around-median in jnp on
-            # the flat buffer.  Recorded so "pallas" callers can see it.
-            kdispatch.record_decision("mixtrim", "pallas", "xla",
-                                      "meamed has no fused kernel")
-            mixed = flat if mix_matrix is None else jnp.einsum(
-                "mn,nd->md", mix_matrix.astype(flat.dtype), flat,
-                preferred_element_type=jnp.float32)
-            sub = {"x": mixed}
-            vec = (_tree_coordinate_rule_dyn(sub, "meamed", f) if dyn
-                   else _tree_coordinate_rule(sub, "meamed", f))["x"]
+            # No fused kernel: mix (if any) + mean-around-median in jnp —
+            # shard-local under the sharded backend, on the full flat
+            # buffer otherwise.  Recorded so kernel-path callers see it.
+            m = None if mix_matrix is None \
+                else mix_matrix.astype(flat.dtype)
+            vec = kdispatch.dispatch_meamed(flat, m, f, backend=backend,
+                                            dyn=dyn, mesh=mesh, axis=axis)
         else:
             mode = "med" if spec.rule == "cwmed" else "trim"
             # No NNM -> m=None: the kernel elides the mix dot instead of
@@ -229,11 +238,39 @@ def _aggregate_flat(work: PyTree, spec: AggregatorSpec, f, *,
             # so bf16-transport runs agree across backends.
             m = None if mix_matrix is None else mix_matrix.astype(flat.dtype)
             vec = kdispatch.dispatch_mixtrim(flat, m, f, mode=mode,
-                                             backend="pallas", dyn=dyn)
+                                             backend=backend, dyn=dyn,
+                                             mesh=mesh, axis=axis)
         out = kdispatch.unflatten_aggregate(vec, layout)
         return (out, None) if return_coeff else out
 
     raise ValueError(f"unknown rule {spec.rule!r}")
+
+
+def _open_routed_record(spec: AggregatorSpec, *, dyn: bool
+                        ) -> tuple[str, Optional[tuple]]:
+    """Resolve the backend (+ shard mesh), open the dispatch record, and
+    record a degrade when "pallas_sharded" has no multi-device mesh.
+
+    Returns (effective backend, mesh_ctx) where mesh_ctx is the resolved
+    (mesh, axis) for the sharded backend and None otherwise."""
+    backend = kdispatch.resolve_backend(spec.backend)
+    mesh_ctx = None
+    degraded = False
+    if backend == "pallas_sharded":
+        mesh_ctx = kdispatch.resolve_shard_mesh()
+        if mesh_ctx is None:
+            backend, degraded = "xla", True
+    mesh_devices = kdispatch.shardlib.axis_size(*mesh_ctx) \
+        if mesh_ctx is not None else 1
+    kdispatch.open_record(
+        requested=spec.backend, backend=backend, rule=spec.rule,
+        pre=spec.pre, dyn=dyn, mesh_devices=mesh_devices,
+        mesh_axis=mesh_ctx[1] if mesh_ctx is not None else None)
+    if degraded:
+        kdispatch.record_decision(
+            "pipeline", "pallas_sharded", "xla",
+            "no multi-device mesh: leaf-streamed fallback")
+    return backend, mesh_ctx
 
 
 def robust_aggregate(tree: PyTree, spec: AggregatorSpec, *,
@@ -264,12 +301,11 @@ def robust_aggregate(tree: PyTree, spec: AggregatorSpec, *,
         work = jax.tree_util.tree_map(
             lambda l: l.astype(jnp.bfloat16), work)
 
-    backend = kdispatch.resolve_backend(spec.backend)
-    kdispatch.open_record(requested=spec.backend, backend=backend,
-                          rule=spec.rule, pre=spec.pre, dyn=False)
-    if backend == "pallas":
+    backend, mesh_ctx = _open_routed_record(spec, dyn=False)
+    if backend in ("pallas", "pallas_sharded"):
         return _aggregate_flat(work, spec, f, key=key,
-                               return_coeff=return_coeff, dyn=False)
+                               return_coeff=return_coeff, dyn=False,
+                               backend=backend, mesh_ctx=mesh_ctx)
     kdispatch.record_decision("pipeline", "xla", "xla",
                               "leaf-streamed jnp path (GSPMD-friendly)")
 
@@ -392,12 +428,10 @@ def robust_aggregate_dyn(tree: PyTree, spec: AggregatorSpec, f: Array, *,
         work = jax.tree_util.tree_map(
             lambda l: l.astype(jnp.bfloat16), work)
 
-    backend = kdispatch.resolve_backend(spec.backend)
-    kdispatch.open_record(requested=spec.backend, backend=backend,
-                          rule=spec.rule, pre=spec.pre, dyn=True)
-    if backend == "pallas":
+    backend, mesh_ctx = _open_routed_record(spec, dyn=True)
+    if backend in ("pallas", "pallas_sharded"):
         return _aggregate_flat(work, spec, f, key=key, return_coeff=False,
-                               dyn=True)
+                               dyn=True, backend=backend, mesh_ctx=mesh_ctx)
     kdispatch.record_decision("pipeline", "xla", "xla",
                               "leaf-streamed jnp path (GSPMD-friendly)")
 

@@ -32,9 +32,13 @@ class AggregatorSpec:
         leaf-streamed jnp pipeline (GSPMD-friendly); "pallas" flattens the
         worker stack to one (n, D) buffer and runs the blocked gram /
         streamed combine / fused mix+trim kernels (interpret mode off-TPU);
-        "auto" picks "pallas" on a single-device TPU and "xla" elsewhere
-        (multi-device meshes stay on the GSPMD leaf-streamed path).
-        Routing decisions, including oracle fallbacks, are queryable via
+        "pallas_sharded" shard_maps that pipeline along D over a mesh axis
+        (per-shard gram + psum'd (n, n) partials, shard-local
+        combine/mixtrim — degrades to "xla", RECORDED, without a
+        multi-device mesh); "auto" picks "pallas" on a single-device TPU,
+        "pallas_sharded" on a multi-device TPU, and "xla" elsewhere.
+        Routing decisions — oracle fallbacks, the mesh/device-count
+        resolution — are queryable via
         ``repro.kernels.dispatch.last_dispatch()``.
     """
 

@@ -162,6 +162,23 @@ def _tree_sig(tree: PyTree) -> tuple:
         for leaf in flat)
 
 
+def _mesh_sig() -> tuple:
+    """Hashable fingerprint of the mesh the aggregation stage would shard
+    over at trace time.
+
+    The kernel-backend routing (notably "pallas_sharded" and "auto" —
+    including their recorded degrades) is baked into the compiled round,
+    so two drains under different meshes / device counts must never share
+    a compile-cache entry.  Mirrors ``kernels.dispatch.resolve_shard_mesh``
+    without touching device state when nothing changed."""
+    from repro.launch.mesh import current_mesh
+    mesh = current_mesh()
+    if mesh is not None:
+        return (jax.device_count(), tuple(mesh.axis_names),
+                tuple(mesh.devices.shape))
+    return (jax.device_count(),)
+
+
 def bucket_key(job: FleetJob) -> tuple:
     """The static skeleton a compiled fleet round is specialized on.
 
@@ -177,7 +194,7 @@ def bucket_key(job: FleetJob) -> tuple:
             c.agg.rule, c.agg.pre, c.agg.bucket_size,
             c.agg.gm_iters, c.agg.gm_eps,
             c.agg.transport_dtype, c.agg.sketch_dim,
-            c.agg.backend,
+            c.agg.backend, _mesh_sig(),
             c.track_kappa_hat,
             job.loss_fn, job.optimizer,
             _tree_sig(job.params), _tree_sig(probe))

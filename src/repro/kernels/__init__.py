@@ -17,11 +17,12 @@ from repro.kernels.gram import gram, gram_batched, gram_batched_ref, gram_ref
 from repro.kernels.mixtrim import (
     mixtrim, mixtrim_dyn, mixtrim_dyn_ref, mixtrim_ref,
 )
-from repro.kernels import dispatch
+from repro.kernels import dispatch, shard
 
 __all__ = [
     "combine", "combine_ref",
     "dispatch",
     "gram", "gram_batched", "gram_batched_ref", "gram_ref",
     "mixtrim", "mixtrim_dyn", "mixtrim_dyn_ref", "mixtrim_ref",
+    "shard",
 ]

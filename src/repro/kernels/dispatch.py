@@ -1,9 +1,9 @@
 """Kernel backend layer: route the aggregation hot path to Pallas or XLA.
 
 ``repro.core.robust`` is backend-polymorphic: every aggregation pipeline
-declares ``AggregatorSpec.backend`` ("xla" | "pallas" | "auto") and this
-module turns that request into concrete kernel calls over ONE contiguous
-``(n, D)`` view of the worker-stacked pytree:
+declares ``AggregatorSpec.backend`` ("xla" | "pallas" | "pallas_sharded" |
+"auto") and this module turns that request into concrete kernel calls over
+ONE contiguous ``(n, D)`` view of the worker-stacked pytree:
 
 * **flatten** — :func:`flatten_worker_stack` concatenates every leaf's
   ``(n, ...)`` stack into a single ``(n, D)`` buffer plus static
@@ -15,12 +15,21 @@ module turns that request into concrete kernel calls over ONE contiguous
   applying the gram-rule weights without re-materializing anything;
 * **mixtrim** — the fused NNM-mix + coordinate trim/median kernel
   (``kernels/mixtrim``), static-f or the dynamic-f rank-mask variant, so
-  the mixed stack ``Y = M @ X`` never exists in HBM.
+  the mixed stack ``Y = M @ X`` never exists in HBM (any n: the bitonic
+  sort pads to the next power of two with sentinel rows).
 
-Every dispatch decision — including silent jnp-oracle fallbacks such as
-"n is not a power of two" — is recorded on a :class:`DispatchRecord`
-queryable via :func:`last_dispatch`, so a "pallas" run that quietly ran
-XLA is detectable.
+Under a multi-device mesh, ``backend="pallas_sharded"`` runs the same
+pipeline shard_map'd along D (:mod:`repro.kernels.shard`): per-shard
+blocked gram + an O(n^2)-byte psum, replicated coefficient math,
+shard-local combine/mixtrim — the memory bound per device drops from
+n x largest-leaf-shard to the (n, BLK_D) VMEM tile.
+
+Every dispatch decision — including jnp-oracle fallbacks (meamed, sketch
+grams) and a "pallas_sharded" request degrading to the leaf-streamed XLA
+path because no multi-device mesh exists — is recorded on a
+:class:`DispatchRecord` (with its ``mesh_devices`` / ``mesh_axis``
+resolution) queryable via :func:`last_dispatch`, so a requested kernel
+path that quietly ran XLA is detectable.
 
 Decisions are **static** per (spec, shapes): they are taken while tracing,
 so under ``jax.jit`` the record reflects the most recent TRACE, not the
@@ -42,6 +51,7 @@ try:        # jaxpr types moved out of jax.core on newer jax releases
 except (ImportError, AttributeError):       # pragma: no cover - old jax
     from jax import core as _jaxpr_core
 
+from repro.kernels import shard as shardlib
 from repro.kernels.combine import combine as _combine_op
 from repro.kernels.gram import gram as _gram_op
 from repro.kernels.gram import gram_batched as _gram_batched_op
@@ -51,7 +61,11 @@ from repro.kernels.mixtrim import mixtrim_dyn as _mixtrim_dyn_op
 Array = jax.Array
 PyTree = Any
 
-BACKENDS = ("xla", "pallas", "auto")
+BACKENDS = ("xla", "pallas", "pallas_sharded", "auto")
+
+#: The two backends that run the Pallas kernel pipeline (the third value a
+#: KernelDecision.requested can hold is "xla").
+_PALLAS_BACKENDS = ("pallas", "pallas_sharded")
 
 #: Default VMEM tile-width cap (lane-dim multiple of 128, MXU-sized).
 DEFAULT_BLOCK_D = 512
@@ -60,22 +74,33 @@ DEFAULT_BLOCK_D = 512
 def resolve_backend(requested: str) -> str:
     """Resolve "auto" to a concrete backend.
 
-    "auto" picks Pallas only on a SINGLE-device TPU (the fleet/serving
-    deployment shape).  Multi-device runs resolve to "xla": the flattened
-    (n, D) pallas pipeline is not GSPMD-partitioned, while the xla
-    leaf-streamed path keeps the documented n x largest-leaf-shard memory
-    bound under ``vmap(spmd_axis_name=...)`` meshes.  An explicit "pallas"
-    is always honored (off-TPU via interpret mode — structurally
-    identical, CPU speed — which is what the exactness tests exercise).
+    "auto" on TPU picks "pallas" on a single device and "pallas_sharded"
+    on multi-device hosts (the shard_map'd pipeline: per-shard blocked
+    gram + psum, shard-local combine/mixtrim — see kernels/shard.py), so
+    the deployment shapes that matter most no longer pay the two
+    full-width (n, d) HBM intermediates of the leaf-streamed path.
+    Off-TPU "auto" stays "xla" (interpret-mode kernels are a structural
+    tool, not a fast path).  Explicit requests are always honored —
+    "pallas_sharded" additionally needs a multi-device mesh at dispatch
+    time (:func:`resolve_shard_mesh`); without one it degrades to the
+    leaf-streamed XLA pipeline and the degrade is RECORDED, never silent.
     """
     if requested not in BACKENDS:
         raise ValueError(
             f"unknown backend {requested!r}; expected one of {BACKENDS}")
     if requested == "auto":
-        if jax.default_backend() == "tpu" and jax.device_count() == 1:
-            return "pallas"
+        if jax.default_backend() == "tpu":
+            return "pallas" if jax.device_count() == 1 else "pallas_sharded"
         return "xla"
     return requested
+
+
+def resolve_shard_mesh() -> Optional[tuple[jax.sharding.Mesh, str]]:
+    """(mesh, axis) for the sharded backend, or None when the host has no
+    multi-device mesh to shard over (lazy import: the kernels package must
+    stay importable without touching jax device state)."""
+    from repro.launch.mesh import aggregation_mesh
+    return aggregation_mesh()
 
 
 def pick_block_d(d: int, cap: int = DEFAULT_BLOCK_D) -> int:
@@ -96,12 +121,12 @@ class KernelDecision:
     """One primitive-level routing decision."""
     primitive: str          # "gram" | "combine" | "mixtrim" | "pipeline"
     requested: str          # backend asked for at this call site
-    used: str               # "pallas" | "pallas-interpret" | "xla"
+    used: str               # "pallas[-sharded][-interpret]" | "xla"
     reason: str = ""        # why `used` differs from the pallas kernel path
 
     @property
     def fell_back(self) -> bool:
-        return self.requested == "pallas" and self.used == "xla"
+        return self.requested in _PALLAS_BACKENDS and self.used == "xla"
 
 
 @dataclasses.dataclass
@@ -112,6 +137,13 @@ class DispatchRecord:
     rule: str
     pre: Optional[str]
     dyn: bool = False
+    #: Mesh decision for the sharded backend: how many devices the
+    #: aggregation actually sharded over (1 = unsharded — a
+    #: "pallas_sharded" record with mesh_devices=1 is a DEGRADED request,
+    #: paired with a recorded "pipeline" fallback decision) and along
+    #: which mesh axis the feature dim was split.
+    mesh_devices: int = 1
+    mesh_axis: Optional[str] = None
     decisions: list = dataclasses.field(default_factory=list)
 
     @property
@@ -120,8 +152,10 @@ class DispatchRecord:
         return [d for d in self.decisions if d.fell_back]
 
     def describe(self) -> str:
+        mesh = f" mesh={self.mesh_devices}x{self.mesh_axis}" \
+            if self.mesh_axis else ""
         parts = [f"{self.requested}->{self.backend} rule={self.rule} "
-                 f"pre={self.pre or 'none'} dyn={self.dyn}"]
+                 f"pre={self.pre or 'none'} dyn={self.dyn}{mesh}"]
         for d in self.decisions:
             why = f" ({d.reason})" if d.reason else ""
             parts.append(f"  {d.primitive}: {d.used}{why}")
@@ -138,12 +172,15 @@ def last_dispatch() -> Optional[DispatchRecord]:
 
 
 def open_record(*, requested: str, backend: str, rule: str,
-                pre: Optional[str], dyn: bool = False) -> DispatchRecord:
+                pre: Optional[str], dyn: bool = False,
+                mesh_devices: int = 1,
+                mesh_axis: Optional[str] = None) -> DispatchRecord:
     """Start a fresh decision record; subsequent primitive dispatches in
     this trace append to it."""
     global _LAST
     _LAST = DispatchRecord(requested=requested, backend=backend, rule=rule,
-                           pre=pre, dyn=dyn)
+                           pre=pre, dyn=dyn, mesh_devices=mesh_devices,
+                           mesh_axis=mesh_axis)
     return _LAST
 
 
@@ -154,10 +191,19 @@ def record_decision(primitive: str, requested: str, used: str,
                                               reason))
 
 
-def _pallas_used(interpret: bool) -> tuple[str, str]:
+def _pallas_used(interpret: bool, sharded: bool = False) -> tuple[str, str]:
+    base = "pallas-sharded" if sharded else "pallas"
     if interpret:
-        return "pallas-interpret", "no TPU: kernel body runs interpreted"
-    return "pallas", ""
+        return base + "-interpret", "no TPU: kernel body runs interpreted"
+    return base, ""
+
+
+def _pad_note(n: int) -> str:
+    """Observability note for the sentinel-padded bitonic sort."""
+    from repro.kernels.mixtrim.kernel import next_pow2
+    if n & (n - 1) == 0:
+        return ""
+    return f"n={n} padded to {next_pow2(n)} with sort sentinels"
 
 
 # ---------------------------------------------------------------------------
@@ -239,9 +285,19 @@ def count_wide_ops(fn, *example_args, n: int, width: int) -> int:
     return count(closed.jaxpr)
 
 
-def dispatch_gram(x: Array, *, backend: str,
-                  block_d: Optional[int] = None) -> Array:
-    """(n, D) -> (n, n) fp32 Gram matrix through the chosen backend."""
+def dispatch_gram(x: Array, *, backend: str, block_d: Optional[int] = None,
+                  mesh: Optional[jax.sharding.Mesh] = None,
+                  axis: Optional[str] = None) -> Array:
+    """(n, D) -> (n, n) fp32 Gram matrix through the chosen backend.
+
+    ``backend="pallas_sharded"`` needs the resolved (mesh, axis): the
+    blocked kernel runs per D-shard and the tiny partial Grams psum."""
+    if backend == "pallas_sharded":
+        interpret = jax.default_backend() != "tpu"
+        used, why = _pallas_used(interpret, sharded=True)
+        record_decision("gram", backend, used, why)
+        return shardlib.sharded_gram(x, mesh=mesh, axis=axis,
+                                     block_d=block_d, interpret=interpret)
     if backend == "pallas":
         interpret = jax.default_backend() != "tpu"
         used, why = _pallas_used(interpret)
@@ -267,8 +323,16 @@ def dispatch_gram_batched(x: Array, *, backend: str,
 
 
 def dispatch_combine(x: Array, coeff: Array, *, backend: str,
-                     block_d: Optional[int] = None) -> Array:
+                     block_d: Optional[int] = None,
+                     mesh: Optional[jax.sharding.Mesh] = None,
+                     axis: Optional[str] = None) -> Array:
     """(n, D), (n,) -> (D,): streamed linear combination."""
+    if backend == "pallas_sharded":
+        interpret = jax.default_backend() != "tpu"
+        used, why = _pallas_used(interpret, sharded=True)
+        record_decision("combine", backend, used, why)
+        return shardlib.sharded_combine(x, coeff, mesh=mesh, axis=axis,
+                                        block_d=block_d, interpret=interpret)
     if backend == "pallas":
         interpret = jax.default_backend() != "tpu"
         used, why = _pallas_used(interpret)
@@ -281,27 +345,34 @@ def dispatch_combine(x: Array, coeff: Array, *, backend: str,
 
 def dispatch_mixtrim(x: Array, m: Optional[Array], f, *, mode: str,
                      backend: str, dyn: bool = False,
-                     block_d: Optional[int] = None) -> Array:
+                     block_d: Optional[int] = None,
+                     mesh: Optional[jax.sharding.Mesh] = None,
+                     axis: Optional[str] = None) -> Array:
     """(n, D) -> (D,): fused mix + coordinate trim/median.
 
     ``m=None`` elides the mix dot (plain CWTM/CWMed).  ``dyn=True`` takes
     a TRACED f through the rank-mask kernel variant (one compile per fleet
-    shape bucket).  When n is not a power of two the bitonic sort network
-    cannot run and the jnp oracle takes over — the fallback is RECORDED,
-    never silent (satellite: detectability).
+    shape bucket).  Non-power-of-two n runs the fused kernel through the
+    sentinel-padded bitonic sort (recorded as a note, NOT a fallback —
+    the kernel body executes for every n).
     """
     n = x.shape[0]
+
+    def _note(why: str) -> str:
+        pad = _pad_note(n)
+        return f"{why}; {pad}" if why and pad else (pad or why)
+
+    if backend == "pallas_sharded":
+        interpret = jax.default_backend() != "tpu"
+        used, why = _pallas_used(interpret, sharded=True)
+        record_decision("mixtrim", backend, used, _note(why))
+        return shardlib.sharded_mixtrim(x, m, f, mode=mode, mesh=mesh,
+                                        axis=axis, dyn=dyn, block_d=block_d,
+                                        interpret=interpret)
     if backend == "pallas":
-        if n & (n - 1) != 0:
-            record_decision("mixtrim", "pallas", "xla",
-                    f"n={n} is not a power of two (bitonic sort network)")
-            return _mixtrim_dyn_op(x, m, f, mode=mode, use_pallas=False) \
-                if dyn and mode == "trim" else \
-                _mixtrim_op(x, m, f=(0 if mode == "med" else int(f)),
-                            mode=mode, use_pallas=False)
         interpret = jax.default_backend() != "tpu"
         used, why = _pallas_used(interpret)
-        record_decision("mixtrim", "pallas", used, why)
+        record_decision("mixtrim", "pallas", used, _note(why))
         bd = block_d if block_d is not None else pick_block_d(x.shape[1])
         if dyn and mode == "trim":
             return _mixtrim_dyn_op(x, m, f, mode=mode, block_d=bd,
@@ -315,3 +386,30 @@ def dispatch_mixtrim(x: Array, m: Optional[Array], f, *, mode: str,
         return _mixtrim_dyn_op(x, m, f, mode=mode, use_pallas=False)
     return _mixtrim_op(x, m, f=(0 if mode == "med" else int(f)), mode=mode,
                        use_pallas=False)
+
+
+def dispatch_meamed(x: Array, m: Optional[Array], f, *, backend: str,
+                    dyn: bool = False,
+                    mesh: Optional[jax.sharding.Mesh] = None,
+                    axis: Optional[str] = None) -> Array:
+    """meamed on the flat buffer: no fused kernel exists, so the decision
+    is always a RECORDED fallback — but the jnp form (robust's own
+    coordinate-rule helpers, so the arithmetic can never drift across
+    backends) runs shard-locally under the sharded backend, keeping the
+    wide intermediates at (n, D/k) per device.  ``m`` arrives pre-cast to
+    the stack dtype (the bf16-parity contract of the caller)."""
+    if backend == "pallas_sharded":
+        record_decision("mixtrim", backend, "xla",
+                        "meamed has no fused kernel (shard-local jnp form)")
+        return shardlib.sharded_meamed(x, m, f, mesh=mesh, axis=axis,
+                                       dyn=dyn)
+    record_decision("mixtrim", "pallas", "xla",
+                    "meamed has no fused kernel")
+    from repro.core.robust import (
+        _tree_coordinate_rule, _tree_coordinate_rule_dyn,
+    )
+    mixed = x if m is None else jnp.einsum(
+        "mn,nd->md", m, x, preferred_element_type=jnp.float32)
+    sub = {"x": mixed}
+    return (_tree_coordinate_rule_dyn(sub, "meamed", f) if dyn
+            else _tree_coordinate_rule(sub, "meamed", f))["x"]

@@ -7,13 +7,20 @@ tile so Y never leaves VMEM:
 
     VMEM: X_blk (n, BLK_D), M (n, n)
     MXU : Y_blk = M @ X_blk
-    VPU : bitonic sort network along the (small, power-of-two) worker dim
+    VPU : bitonic sort network along the (small) worker dim
     out : trimmed mean / median of Y_blk  ->  (1, BLK_D)
 
 The sort is a static bitonic network (log^2 n compare-exchange stages built
 from reshape + min/max + select), because dynamic gathers along the sublane
-dimension do not map to the TPU vector unit; n = 16 / 32 workers keeps the
-network at 10 / 15 stages.
+dimension do not map to the TPU vector unit.  The network needs a
+power-of-two height; when n is not one (the common federated case, e.g.
+the paper's n=17), the worker dim is padded up to the next power of two
+with fp32-max sentinel rows.  Ascending sort parks every sentinel above
+every finite value, so the real rows occupy sorted positions 0..n-1
+exactly as in the unpadded sort and the trim/median ranks simply ignore
+the sentinel tail — no jnp-oracle fallback, the fused kernel runs for
+every n.  (Caveat: a worker value equal to fp32 max would tie with the
+sentinels; gradients never are.)
 """
 from __future__ import annotations
 
@@ -21,7 +28,16 @@ import functools
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.experimental import pallas as pl
+
+#: Sentinel for the padded sort: sorts above every finite worker value.
+_SENTINEL = float(np.finfo(np.float32).max)
+
+
+def next_pow2(n: int) -> int:
+    """Smallest power of two >= n (the bitonic network height)."""
+    return 1 << (n - 1).bit_length()
 
 
 def _compare_swap(y: jax.Array, j: int, dirs: jax.Array) -> jax.Array:
@@ -48,9 +64,32 @@ def _bitonic_sort(y: jax.Array) -> jax.Array:
     return y
 
 
-def _make_kernel(f: int, mode: str, mix: bool):
+def _with_sentinels(y: jax.Array, n_real: int) -> jax.Array:
+    """Bring y to the bitonic network height with sentinel pad rows.
+
+    The mix path arrives already tall (the zero-row-padded M made the dot
+    produce (n_pad, blk)) and gets its pad rows overwritten; the no-mix
+    path arrives at its true height and gets sentinel rows appended
+    IN-KERNEL — cheaper than a host-side (n_pad, D) zero-padded copy of
+    the whole stack, which would re-materialize exactly the wide HBM
+    intermediate this kernel exists to avoid."""
+    n_pad = next_pow2(n_real)
+    if n_pad == n_real:
+        return y
+    if y.shape[0] == n_real:
+        tail = jnp.full((n_pad - n_real, y.shape[1]), _SENTINEL,
+                        jnp.float32)
+        return jnp.concatenate([y, tail])
+    # >=2-D iota: 1-D iota does not lower on TPU.
+    i = jax.lax.broadcasted_iota(jnp.int32, (n_pad, 1), 0)
+    return jnp.where(i < n_real, y, _SENTINEL)
+
+
+def _make_kernel(f: int, mode: str, mix: bool, n_real: int):
     """Kernel body; ``mix=False`` drops the M operand and the MXU dot
-    entirely (plain CWTM/CWMed — no identity-matmul waste)."""
+    entirely (plain CWTM/CWMed).  ``n_real`` is the true worker count; the
+    sort height is the (power-of-two) row count of the operand — any pad
+    rows become sentinels before the network runs."""
     def kernel(*refs):
         if mix:
             m_ref, x_ref, o_ref = refs
@@ -58,36 +97,40 @@ def _make_kernel(f: int, mode: str, mix: bool):
             x_ref, o_ref = refs
         x = x_ref[...].astype(jnp.float32)
         if mix:
+            # M is (n_pad, n_real): zero pad rows, so Y's pad rows are 0
+            # until the sentinel mask overwrites them.
             m = m_ref[...].astype(jnp.float32)
             y = jax.lax.dot_general(
                 m, x, (((1,), (0,)), ((), ())),
                 preferred_element_type=jnp.float32)
         else:
             y = x
-        n = y.shape[0]
-        ys = _bitonic_sort(y)
+        ys = _bitonic_sort(_with_sentinels(y, n_real))
         if mode == "trim":
-            kept = ys[f: n - f] if f else ys
+            kept = ys[f: n_real - f] if f else ys[:n_real]
             o_ref[...] = kept.mean(axis=0, keepdims=True)
         elif mode == "med":
-            if n % 2 == 1:
-                o_ref[...] = ys[n // 2][None]
+            if n_real % 2 == 1:
+                o_ref[...] = ys[n_real // 2][None]
             else:
-                o_ref[...] = (0.5 * (ys[n // 2 - 1] + ys[n // 2]))[None]
+                o_ref[...] = (0.5 * (ys[n_real // 2 - 1]
+                                     + ys[n_real // 2]))[None]
         else:
             raise ValueError(mode)
     return kernel
 
 
-def _make_dyn_kernel(mode: str, mix: bool):
+def _make_dyn_kernel(mode: str, mix: bool, n_real: int):
     """Kernel body with f as a RUNTIME (1, 1) int32 operand.
 
     Trimming selects through a rank mask over the bitonically sorted stack
     instead of the static ``ys[f : n - f]`` slice, mirroring
     ``repro.core.robust._tree_coordinate_rule_dyn`` — so one compile serves
-    every Byzantine budget of a fleet shape bucket.  ``mode="med"`` ignores
-    f (kept in the signature for call-site uniformity); ``mix=False``
-    drops the M operand and the MXU dot entirely.
+    every Byzantine budget of a fleet shape bucket.  Sentinel pad rows sort
+    above every real value, so their ranks (>= n_real) never enter the
+    keep mask.  ``mode="med"`` ignores f (kept in the signature for
+    call-site uniformity); ``mix=False`` drops the M operand and the MXU
+    dot entirely.
     """
     def kernel(*refs):
         if mix:
@@ -103,22 +146,30 @@ def _make_dyn_kernel(mode: str, mix: bool):
                 preferred_element_type=jnp.float32)
         else:
             y = x
-        n = y.shape[0]
-        ys = _bitonic_sort(y)
+        ys = _bitonic_sort(_with_sentinels(y, n_real))
         if mode == "trim":
-            # >=2-D iota: 1-D iota does not lower on TPU.
-            i = jax.lax.broadcasted_iota(jnp.int32, (n, 1), 0)
-            keep = ((i >= f) & (i < n - f)).astype(jnp.float32)
-            denom = jnp.maximum((n - 2 * f).astype(jnp.float32), 1.0)
+            i = jax.lax.broadcasted_iota(jnp.int32, (ys.shape[0], 1), 0)
+            keep = ((i >= f) & (i < n_real - f)).astype(jnp.float32)
+            denom = jnp.maximum((n_real - 2 * f).astype(jnp.float32), 1.0)
             o_ref[...] = ((ys * keep).sum(axis=0) / denom)[None]
         elif mode == "med":
-            if n % 2 == 1:
-                o_ref[...] = ys[n // 2][None]
+            if n_real % 2 == 1:
+                o_ref[...] = ys[n_real // 2][None]
             else:
-                o_ref[...] = (0.5 * (ys[n // 2 - 1] + ys[n // 2]))[None]
+                o_ref[...] = (0.5 * (ys[n_real // 2 - 1]
+                                     + ys[n_real // 2]))[None]
         else:
             raise ValueError(mode)
     return kernel
+
+
+def _pad_mix_matrix(m, n: int, n_pad: int):
+    """Zero-row-pad M to (n_pad, n): the mix dot then produces the taller
+    stack directly.  X is never padded host-side — the no-mix path appends
+    its sentinel rows in-kernel (see _with_sentinels)."""
+    if m is not None and n_pad != n:
+        m = jnp.pad(m, ((0, n_pad - n), (0, 0)))
+    return m
 
 
 @functools.partial(jax.jit,
@@ -128,7 +179,8 @@ def mixtrim_pallas(x: jax.Array, m: jax.Array, *, f: int, mode: str = "trim",
     """Fused (M @ X -> sort -> trim/median) over d tiles.
 
     Args:
-      x: (n, d) worker stack, n a power of two, d a multiple of block_d.
+      x: (n, d) worker stack, any n >= 1, d a multiple of block_d.  Non-
+        power-of-two n runs the padded sentinel sort (see module docs).
       m: (n, n) mixing matrix, or None for plain CWTM/CWMed (the mix dot
         is elided entirely — no identity matmul).
       f: trim count (ignored for mode="med").
@@ -137,16 +189,17 @@ def mixtrim_pallas(x: jax.Array, m: jax.Array, *, f: int, mode: str = "trim",
     """
     n, d = x.shape
     assert d % block_d == 0, (d, block_d)
-    assert n & (n - 1) == 0, f"bitonic network needs power-of-two n, got {n}"
     grid = (d // block_d,)
     mix = m is not None
+    n_pad = next_pow2(n)
+    m = _pad_mix_matrix(m, n, n_pad)
     in_specs = [pl.BlockSpec((n, block_d), lambda i: (0, i))]
     operands = (x,)
     if mix:
-        in_specs.insert(0, pl.BlockSpec((n, n), lambda i: (0, 0)))
+        in_specs.insert(0, pl.BlockSpec((n_pad, n), lambda i: (0, 0)))
         operands = (m, x)
     out = pl.pallas_call(
-        _make_kernel(f, mode, mix),
+        _make_kernel(f, mode, mix, n),
         grid=grid,
         in_specs=in_specs,
         out_specs=pl.BlockSpec((1, block_d), lambda i: (0, i)),
@@ -162,26 +215,28 @@ def mixtrim_dyn_pallas(x: jax.Array, m: jax.Array, f: jax.Array, *,
                        interpret: bool = False) -> jax.Array:
     """Fused mix+trim with a TRACED Byzantine count.
 
-    Same tiling as :func:`mixtrim_pallas`; ``f`` rides along as a tiny
-    (1, 1) int32 operand broadcast to every grid step, and trimming goes
-    through a rank mask.  Under ``jax.vmap`` (the fleet's lane axis) the
-    pallas batching rule prepends a lane grid dimension, so a whole shape
-    bucket still costs one compile.
+    Same tiling as :func:`mixtrim_pallas` (including the padded sentinel
+    sort for non-power-of-two n); ``f`` rides along as a tiny (1, 1) int32
+    operand broadcast to every grid step, and trimming goes through a rank
+    mask.  Under ``jax.vmap`` (the fleet's lane axis) the pallas batching
+    rule prepends a lane grid dimension, so a whole shape bucket still
+    costs one compile.
     """
     n, d = x.shape
     assert d % block_d == 0, (d, block_d)
-    assert n & (n - 1) == 0, f"bitonic network needs power-of-two n, got {n}"
     f = jnp.asarray(f, jnp.int32).reshape(1, 1)
     grid = (d // block_d,)
     mix = m is not None
+    n_pad = next_pow2(n)
+    m = _pad_mix_matrix(m, n, n_pad)
     in_specs = [pl.BlockSpec((1, 1), lambda i: (0, 0)),
                 pl.BlockSpec((n, block_d), lambda i: (0, i))]
     operands = (f, x)
     if mix:
-        in_specs.insert(1, pl.BlockSpec((n, n), lambda i: (0, 0)))
+        in_specs.insert(1, pl.BlockSpec((n_pad, n), lambda i: (0, 0)))
         operands = (f, m, x)
     out = pl.pallas_call(
-        _make_dyn_kernel(mode, mix),
+        _make_dyn_kernel(mode, mix, n),
         grid=grid,
         in_specs=in_specs,
         out_specs=pl.BlockSpec((1, block_d), lambda i: (0, i)),

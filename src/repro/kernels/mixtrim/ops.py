@@ -19,12 +19,12 @@ def mixtrim(x: jax.Array, m: jax.Array, *, f: int, mode: str = "trim",
 
     ``m=None`` elides the mix dot entirely (plain CWTM/CWMed).  Pads d to
     a multiple of ``block_d`` (zero columns mix/sort/trim to an exact zero
-    tail which is sliced off).  Falls back to the jnp oracle when n is not
-    a power of two (the bitonic network requirement) or when
-    ``use_pallas=False``.
+    tail which is sliced off).  Non-power-of-two n runs the padded
+    sentinel bitonic sort (see kernel.py) — the jnp oracle is used only
+    when ``use_pallas=False``.
     """
     n, d = x.shape
-    if not use_pallas or n & (n - 1) != 0:
+    if not use_pallas:
         return mixtrim_ref(x, m, f, mode)
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
@@ -46,11 +46,11 @@ def mixtrim_dyn(x: jax.Array, m: jax.Array, f: jax.Array, *,
 
     One compile serves every f of a shape bucket: ``f`` is an int32 scalar
     operand (possibly a vmap lane tracer), trimming is a rank mask over the
-    sorted stack.  Same ``m=None`` / padding / power-of-two-n fallback
+    sorted stack.  Same ``m=None`` / d-padding / sentinel-padded-sort
     contract as :func:`mixtrim`.
     """
     n, d = x.shape
-    if not use_pallas or n & (n - 1) != 0:
+    if not use_pallas:
         return mixtrim_dyn_ref(x, m, f, mode)
     if interpret is None:
         interpret = jax.default_backend() != "tpu"

@@ -78,6 +78,47 @@ def as_shardings(specs: Any, mesh: Optional[jax.sharding.Mesh] = None) -> Any:
             s, (jax.sharding.PartitionSpec, jax.sharding.Sharding)))
 
 
+#: Mesh axes the sharded aggregation backend prefers to shard the
+#: flattened (n, D) feature dim over, in order.  "model" is where the
+#: parameters (and so the per-worker gradients) already live on the
+#: production mesh; "shard" is the ad-hoc 1-D mesh name below.
+AGG_AXIS_PREFERENCE = ("model", "shard")
+
+
+def aggregation_axis(mesh: jax.sharding.Mesh) -> Optional[str]:
+    """The mesh axis the aggregation stage shards D over, or None.
+
+    Prefers the axes in :data:`AGG_AXIS_PREFERENCE` (size > 1), else the
+    largest axis; None when every axis has size 1 (nothing to shard)."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    for name in AGG_AXIS_PREFERENCE:
+        if sizes.get(name, 1) > 1:
+            return name
+    if not sizes:
+        return None
+    name = max(sizes, key=lambda a: sizes[a])
+    return name if sizes[name] > 1 else None
+
+
+def aggregation_mesh() -> Optional[tuple[jax.sharding.Mesh, str]]:
+    """(mesh, axis) the ``pallas_sharded`` backend should run over, or None.
+
+    The innermost active :func:`use_mesh` scope wins (sharding D along its
+    :func:`aggregation_axis`); with no active mesh, a host with more than
+    one visible device gets an ad-hoc 1-D mesh over all of them.  None
+    means "no multi-device mesh" — the dispatcher records the degrade to
+    the leaf-streamed XLA path (never silent)."""
+    import numpy as np
+    mesh = current_mesh()
+    if mesh is not None:
+        ax = aggregation_axis(mesh)
+        return (mesh, ax) if ax is not None else None
+    if jax.device_count() > 1:
+        return jax.sharding.Mesh(np.asarray(jax.devices()), ("shard",)), \
+            "shard"
+    return None
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (PODS, DATA_PAR, MODEL_PAR) if multi_pod else (DATA_PAR, MODEL_PAR)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")

@@ -108,7 +108,11 @@ class FleetService:
         self.last_trace_count = 0
         #: Kernel-backend decision record of the latest drain's aggregation
         #: trace (None when the drain hit the compile cache — dispatch is
-        #: decided at trace time; see repro.kernels.dispatch).
+        #: decided at trace time; see repro.kernels.dispatch).  Carries the
+        #: mesh/device-count resolution (``mesh_devices`` / ``mesh_axis``),
+        #: so a tenant's "pallas_sharded" request that degraded to the
+        #: leaf-streamed XLA path shows up here as a recorded pipeline
+        #: fallback with mesh_devices=1 — never silent.
         self.last_dispatch = None
 
     def submit(self, job: Union["ScenarioSpec", "FleetJob"]) -> int:  # noqa: F821

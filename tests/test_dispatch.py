@@ -148,21 +148,18 @@ def test_dyn_pallas_one_compile_across_f():
 # Dispatch record: silent fallbacks are detectable.
 # ---------------------------------------------------------------------------
 
-def test_nonpow2_mixtrim_fallback_is_recorded():
-    """n=17 (paper scale) on backend="pallas": the mixtrim kernel cannot
-    run (bitonic network) — the oracle result must still be exact AND the
-    fallback must be visible in the decision record."""
+def test_nonpow2_mixtrim_runs_fused_padded_kernel():
+    """n=17 (paper scale) on backend="pallas": the padded sentinel sort
+    lets the fused kernel run — ZERO recorded fallbacks, the pad is noted
+    for observability, and the result matches the xla oracle."""
     tree = _tree(12, n=17)
     spec = AggregatorSpec(rule="cwtm", f=4, pre="nnm", backend="pallas")
     got = robust_lib.robust_aggregate(tree, spec)
     rec = kdispatch.last_dispatch()
     assert rec is not None and rec.backend == "pallas"
-    assert any(d.primitive == "mixtrim" and d.fell_back
+    assert rec.fallbacks == [], rec.describe()
+    assert any(d.primitive == "mixtrim" and "padded to 32" in d.reason
                for d in rec.decisions), rec.describe()
-    assert any("power of two" in d.reason for d in rec.fallbacks)
-    # gram itself has no power-of-two constraint: it must NOT fall back
-    assert not any(d.primitive == "gram" and d.fell_back
-                   for d in rec.decisions)
     ref = robust_lib.robust_aggregate(
         tree, AggregatorSpec(rule="cwtm", f=4, pre="nnm", backend="xla"))
     _assert_trees_close(got, ref, rtol=1e-5, atol=1e-5)
@@ -202,17 +199,41 @@ def test_xla_backend_records_xla_pipeline():
 def test_resolve_backend():
     assert kdispatch.resolve_backend("xla") == "xla"
     assert kdispatch.resolve_backend("pallas") == "pallas"
-    # auto: pallas only on a SINGLE-device TPU; multi-device meshes stay
-    # on the GSPMD leaf-streamed xla path
+    assert kdispatch.resolve_backend("pallas_sharded") == "pallas_sharded"
+    # auto: pallas on a single-device TPU, pallas_sharded on multi-device
+    # TPU hosts, xla elsewhere (interpret kernels are not a fast path)
     auto = kdispatch.resolve_backend("auto")
-    single_tpu = (jax.default_backend() == "tpu"
-                  and jax.device_count() == 1)
-    assert auto == ("pallas" if single_tpu else "xla")
+    if jax.default_backend() == "tpu":
+        assert auto == ("pallas" if jax.device_count() == 1
+                        else "pallas_sharded")
+    else:
+        assert auto == "xla"
     with pytest.raises(ValueError, match="backend"):
         kdispatch.resolve_backend("cuda")
     with pytest.raises(ValueError, match="backend"):
         robust_lib.robust_aggregate(
             _tree(16), AggregatorSpec(rule="cwtm", f=3, backend="cuda"))
+
+
+def test_pallas_sharded_degrade_is_recorded():
+    """A "pallas_sharded" request on a host with no multi-device mesh must
+    still compute correctly AND leave a detectable trail: the record shows
+    backend="xla", mesh_devices=1, and a pipeline-level fallback."""
+    tree = _tree(18)
+    spec = AggregatorSpec(rule="cwtm", f=3, pre="nnm",
+                          backend="pallas_sharded")
+    got = robust_lib.robust_aggregate(tree, spec)
+    rec = kdispatch.last_dispatch()
+    if jax.device_count() > 1:     # forced-multi-device hosts: no degrade
+        assert rec.backend == "pallas_sharded" and rec.mesh_devices > 1
+        return
+    assert rec.requested == "pallas_sharded" and rec.backend == "xla"
+    assert rec.mesh_devices == 1 and rec.mesh_axis is None
+    assert any(d.primitive == "pipeline" and d.fell_back
+               for d in rec.decisions), rec.describe()
+    ref = robust_lib.robust_aggregate(
+        tree, AggregatorSpec(rule="cwtm", f=3, pre="nnm", backend="xla"))
+    _assert_trees_close(got, ref, rtol=1e-6, atol=1e-6)
 
 
 def test_dispatch_gram_batched_direct_entry():

@@ -64,8 +64,9 @@ if _HAVE_HYPOTHESIS:
         np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
 
 
-def test_mixtrim_nonpow2_fallback():
-    """n=17 (paper scale) must route to the oracle, not the kernel."""
+def test_mixtrim_nonpow2_runs_padded_kernel():
+    """n=17 (paper scale) runs the fused kernel through the sentinel-padded
+    bitonic network — no jnp-oracle fallback — and matches the oracle."""
     x = jax.random.normal(jax.random.PRNGKey(0), (17, 100))
     m = jnp.eye(17)
     got = np.asarray(mixtrim(x, m, f=4, mode="trim"))
@@ -204,13 +205,69 @@ def test_mixtrim_dyn_vmap_lane_batch():
             rtol=1e-6, atol=1e-6)
 
 
-def test_mixtrim_dyn_nonpow2_fallback():
-    """n=17 (paper scale) must route to the dyn oracle, not the kernel."""
+def test_mixtrim_dyn_nonpow2_runs_padded_kernel():
+    """n=17 through the dyn rank-mask kernel: the sentinel pad rows sort
+    above every real value, so their ranks never enter the keep mask."""
     x = jax.random.normal(jax.random.PRNGKey(16), (17, 100))
     m = jnp.eye(17)
     got = np.asarray(mixtrim_dyn(x, m, jnp.int32(4)))
     want = np.asarray(mixtrim_dyn_ref(x, m, jnp.int32(4)))
     np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Padded sentinel sort: non-power-of-two n runs the fused kernel.
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n", [3, 5, 17])
+@pytest.mark.parametrize("mode", ["trim", "med"])
+def test_mixtrim_padded_sort_vs_oracle(n, mode):
+    """The federated worker counts the pow2 network used to reject (n=17 is
+    the paper's own scale): f=0 and f one below breakdown, with and without
+    the mix dot, static and dynamic f — all through the padded kernel."""
+    x = jax.random.normal(jax.random.PRNGKey(n), (n, 130))
+    m = jax.nn.softmax(jax.random.normal(jax.random.PRNGKey(n + 1), (n, n)),
+                       axis=-1)
+    for f in (0, max(0, (n - 1) // 2)):
+        for mm in (m, None):
+            got = np.asarray(mixtrim(x, mm, f=f, mode=mode, block_d=128))
+            want = np.asarray(mixtrim_ref(x, mm, f, mode))
+            np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-6,
+                                       err_msg=f"n={n} f={f} mode={mode}")
+            got_dyn = np.asarray(mixtrim_dyn(x, mm, jnp.int32(f), mode=mode,
+                                             block_d=128))
+            want_dyn = np.asarray(mixtrim_dyn_ref(x, mm, jnp.int32(f), mode))
+            np.testing.assert_allclose(got_dyn, want_dyn, rtol=1e-6,
+                                       atol=1e-6,
+                                       err_msg=f"dyn n={n} f={f} mode={mode}")
+
+
+def test_mixtrim_padded_sort_negative_and_tied_values():
+    """Sentinels must dominate NEGATIVE values too (fp32 max, not |max|),
+    and exact ties among real rows must not disturb the trim ranks."""
+    x = jnp.asarray(np.array([[-5.0, -1.0], [-5.0, 3.0], [2.0, -1.0],
+                              [2.0, 3.0], [9.0, -7.0]]), jnp.float32)
+    for f in (0, 1, 2):
+        got = np.asarray(mixtrim(x, None, f=f, mode="trim", block_d=128))
+        want = np.asarray(mixtrim_ref(x, None, f, "trim"))
+        np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-6)
+    got = np.asarray(mixtrim(x, None, f=0, mode="med", block_d=128))
+    np.testing.assert_allclose(got, np.median(np.asarray(x), axis=0),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_mixtrim_dyn_padded_vmap_lane_batch():
+    """Non-pow2 n under the fleet's lane vmap: the padded kernel batches
+    exactly like the pow2 kernel (lane grid dim prepended)."""
+    xs = jax.random.normal(jax.random.PRNGKey(22), (3, 5, 128))
+    m = jnp.eye(5, dtype=jnp.float32)
+    fs = jnp.asarray([0, 1, 2], jnp.int32)
+    out = jax.vmap(lambda x, f: mixtrim_dyn(x, m, f, block_d=128))(xs, fs)
+    for k in range(3):
+        np.testing.assert_allclose(
+            np.asarray(out[k]),
+            np.asarray(mixtrim_dyn_ref(xs[k], m, fs[k])),
+            rtol=1e-6, atol=1e-6)
 
 
 # ---------------------------------------------------------------------------
