@@ -1,14 +1,38 @@
-"""Theorems 1 & 2 on controlled quadratics: measured error vs the paper's
-bounds as a function of T (rates), with exact L, G^2, sigma^2."""
+"""Theorems 1 & 2 on controlled quadratics — now driven end-to-end by the
+scan-compiled round engine — plus the round-engine throughput smoke.
+
+Two halves:
+
+* the THEOREM suite (``main``): measured error vs the paper's bounds as a
+  function of T (rates), with exact L, G^2, sigma^2.  Every horizon runs
+  as ONE scanned XLA program via ``train_loop(engine="scan")`` (the
+  best-iterate selection of Alg. 1 rides in the scan carry), which is what
+  makes the --full grids cheap enough for routine CI.
+* the ROUNDS smoke (``rounds_smoke`` / ``--smoke``): rounds/sec of the
+  scanned trainer and fed server vs their per-round Python loops,
+  interleaved-median timed, plus the engine compile counters.  The JSON
+  feeds ``scripts/perf_gate.py --rounds`` (compile count <= baseline,
+  scan speedup >= 5x the loop).
+"""
+import argparse
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import emit
+from benchmarks.common import emit, median as _median, \
+    timed_interleaved as _timed_interleaved
 from repro.core import AggregatorSpec, theory
+from repro.fed import ClientConfig, FedConfig, FedServer, constant_attack, \
+    run_rounds
 from repro.optim import sgd
 from repro.optim.schedules import constant
-from repro.training import ByzantineConfig, TrainerConfig, build_train_step, init_state
+from repro.training import ByzantineConfig, TrainerConfig, train_loop
 
 
 def run_dgd(rule, attack, steps, n=17, f=4, d=10, spread=1.0, seed=0):
@@ -24,18 +48,13 @@ def run_dgd(rule, attack, steps, n=17, f=4, d=10, spread=1.0, seed=0):
     cfg = TrainerConfig(algorithm="dgd",
                         agg=AggregatorSpec(rule=rule, f=f, pre="nnm"),
                         byz=ByzantineConfig(f=f, attack=attack))
-    optimizer = sgd()
-    step_fn = jax.jit(build_train_step(loss_fn, optimizer, cfg, constant(1.0)))
-    state = init_state({"theta": jnp.zeros((d,), jnp.float32)}, optimizer, n, cfg)
-    batch = {"idx": np.arange(n)[:, None]}
-    key = jax.random.PRNGKey(seed)
-    best, best_theta = np.inf, None
-    for _ in range(steps):
-        key, sub = jax.random.split(key)
-        prev = state["params"]["theta"]
-        state, m = step_fn(state, batch, sub)
-        if float(m["direction_norm"]) < best:
-            best, best_theta = float(m["direction_norm"]), np.asarray(prev)
+    # One scanned program for the whole horizon; theta_hat (the min-
+    # direction-norm iterate of Alg. 1) is selected in the scan carry.
+    _, out = train_loop(loss_fn, {"theta": jnp.zeros((d,), jnp.float32)},
+                        {"idx": np.arange(n)[:, None]}, sgd(), cfg,
+                        constant(1.0), steps, seed=seed, engine="scan")
+    assert out["scan_report"]["trace_count"] == 1, out["scan_report"]
+    best_theta = np.asarray(out["best"]["params"]["theta"])
     err = float(np.sum((best_theta - honest.mean(0)) ** 2))
     kp = theory.nnm_kappa(theory.kappa(rule, n, f), n, f)
     loss_gap = 0.5 * float(np.sum(honest.mean(0) ** 2)) + 0.5 * g2
@@ -61,5 +80,139 @@ def main(fast: bool = True):
          f"prop1_floor={floor:.4f}")
 
 
+# ---------------------------------------------------------------------------
+# Round-engine throughput smoke: scan vs per-round loop, trainer + fed.
+# ---------------------------------------------------------------------------
+
+def _trainer_candidates(steps: int, n=12, f=3, d=16, seed=0):
+    """(scan, loop) thunks for the lockstep trainer, sharing one compile
+    cache each: RoundEngine.run vs RoundEngine.run_loop over the SAME
+    body, so the ratio isolates per-round dispatch + host round-trips."""
+    from repro.rounds import RoundEngine, iterated_split_keys
+    from repro.training.trainer import build_train_step, init_state
+
+    rng = np.random.default_rng(seed)
+    centers = jnp.asarray(rng.normal(size=(n, d)), jnp.float32)
+
+    def loss_fn(params, batch):
+        c = centers[batch["idx"][0]]
+        return 0.5 * jnp.sum((params["theta"] - c) ** 2), {}
+
+    cfg = TrainerConfig(algorithm="dshb",
+                        agg=AggregatorSpec(rule="cwtm", f=f, pre="nnm"),
+                        byz=ByzantineConfig(f=f, attack="alie", eta=3.0))
+    optimizer = sgd(clip=1.0)
+    step = build_train_step(loss_fn, optimizer, cfg, constant(0.1))
+
+    def body(state, op):
+        return step(state, op["batch"], op["key"])
+
+    eng = RoundEngine(body)
+    params = {"theta": jnp.zeros((d,), jnp.float32)}
+    state0 = init_state(params, optimizer, n, cfg)
+    batch = {"idx": np.arange(n)[:, None]}
+    operands = {
+        "batch": jax.tree_util.tree_map(
+            lambda x: np.broadcast_to(np.asarray(x)[None],
+                                      (steps,) + np.shape(x)), batch),
+        "key": iterated_split_keys(jax.random.PRNGKey(seed), steps),
+    }
+
+    def scan():
+        st, _ = eng.run(state0, operands)
+        jax.block_until_ready(jax.tree_util.tree_leaves(st)[0])
+
+    def loop():
+        st, _ = eng.run_loop(state0, operands)
+        jax.block_until_ready(jax.tree_util.tree_leaves(st)[0])
+
+    return scan, loop, eng
+
+
+def _fed_candidates(rounds: int, n=12, m=8, f=2, d=16, seed=0):
+    """(scan, loop) thunks for the fed server — run_rounds end to end, so
+    the scan side pays its full host-side plan build every rep."""
+    rng = np.random.default_rng(seed)
+    centers = jnp.asarray(rng.normal(size=(n, d)), jnp.float32)
+
+    def loss_fn(params, batch):
+        c = centers[batch["idx"][0]]
+        return 0.5 * jnp.sum((params["theta"] - c) ** 2), {}
+
+    def batch_fn(cohort, n_flip, rng):
+        return {"idx": np.asarray(cohort)[:, None, None]}
+
+    cfg = FedConfig(n_clients=n, clients_per_round=m, f=f,
+                    agg=AggregatorSpec(rule="cwtm", f=f, pre="nnm"),
+                    client=ClientConfig(algorithm="dshb", beta=0.9))
+    server = FedServer(loss_fn, sgd(clip=1.0), cfg, constant(0.1))
+    params = {"theta": jnp.zeros((d,), jnp.float32)}
+    sched = constant_attack("alie", 3.0)
+
+    def run(engine):
+        state = server.init_state(params)
+        state, _ = run_rounds(server, state, batch_fn, rounds,
+                              schedule=sched, seed=seed, engine=engine)
+        jax.block_until_ready(jax.tree_util.tree_leaves(state)[0])
+
+    return (lambda: run("scan")), (lambda: run("loop")), server
+
+
+def rounds_smoke(json_out: str | None = None, *, rounds: int = 150) -> dict:
+    t_scan, t_loop, t_eng = _trainer_candidates(rounds)
+    ts, tl = _timed_interleaved([t_scan, t_loop])
+    f_scan, f_loop, server = _fed_candidates(rounds)
+    fs, fl = _timed_interleaved([f_scan, f_loop])
+
+    out = {
+        "rounds": rounds,
+        "trainer_rounds_per_s_scan": rounds / _median(ts),
+        "trainer_rounds_per_s_loop": rounds / _median(tl),
+        # Medians of PER-REP ratios: immune to drift between candidates.
+        "trainer_scan_speedup": _median([lo / sc for lo, sc in zip(tl, ts)]),
+        "fed_rounds_per_s_scan": rounds / _median(fs),
+        "fed_rounds_per_s_loop": rounds / _median(fl),
+        "fed_scan_speedup": _median([lo / sc for lo, sc in zip(fl, fs)]),
+        # LIFETIME trace counts: warmup + every timed rep shared ONE
+        # compiled program per surface, or these exceed 1 and the gate
+        # trips.
+        "compile_count_trainer_scan": t_eng.trace_count,
+        "compile_count_fed_scan":
+            server.last_scan_report["total_trace_count"],
+    }
+    assert out["compile_count_trainer_scan"] == 1, \
+        f"whole-run scan must trace once, traced {t_eng.trace_count}"
+    assert out["compile_count_fed_scan"] == 1, server.last_scan_report
+
+    emit("rounds_trainer_scan", _median(ts) / rounds * 1e6,
+         f"rounds_per_s={out['trainer_rounds_per_s_scan']:.1f}")
+    emit("rounds_trainer_loop", _median(tl) / rounds * 1e6,
+         f"rounds_per_s={out['trainer_rounds_per_s_loop']:.1f}")
+    emit("rounds_trainer_speedup", 0.0,
+         f"x{out['trainer_scan_speedup']:.2f},compiles=1")
+    emit("rounds_fed_scan", _median(fs) / rounds * 1e6,
+         f"rounds_per_s={out['fed_rounds_per_s_scan']:.1f}")
+    emit("rounds_fed_loop", _median(fl) / rounds * 1e6,
+         f"rounds_per_s={out['fed_rounds_per_s_loop']:.1f}")
+    emit("rounds_fed_speedup", 0.0,
+         f"x{out['fed_scan_speedup']:.2f},compiles=1")
+
+    if json_out:
+        with open(json_out, "w") as fh:
+            json.dump(out, fh, indent=2, sort_keys=True)
+        print(f"wrote {json_out}")
+    return out
+
+
 if __name__ == "__main__":
-    main(fast=False)
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--smoke", action="store_true",
+                    help="round-engine throughput smoke only; writes "
+                         "--json-out")
+    ap.add_argument("--json-out", default="BENCH_rounds.json")
+    args = ap.parse_args()
+    if args.smoke:
+        rounds_smoke(json_out=args.json_out)
+    else:
+        main(fast=not args.full)

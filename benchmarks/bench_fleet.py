@@ -26,14 +26,14 @@ import argparse
 import json
 import os
 import sys
-import time
 
 sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
 
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import emit
+from benchmarks.common import emit, median as _median, \
+    timed_interleaved as _timed_interleaved
 from repro.core import AggregatorSpec
 from repro.fed import ClientConfig, FedConfig, FedServer, constant_attack, \
     ramp_eta, run_rounds, switch_attack
@@ -75,32 +75,12 @@ def _quad_jobs(b: int, rounds: int, *, n: int = 12, m: int = 8,
     return jobs
 
 
-def _median(xs: list) -> float:
-    return sorted(xs)[len(xs) // 2]
-
-
-def _timed_interleaved(fns: list, reps: int = 5) -> list[list[float]]:
-    """Steady-state wall seconds, INTERLEAVED across the candidates.
-
-    Each rep times every candidate back-to-back, so machine-load drift
-    (noisy shared CPU) lands on all of them instead of biasing whichever
-    ran last; callers gate on medians of per-rep numbers.  Compiles are
-    paid by one warmup sweep first.
-    """
-    for fn in fns:
-        fn()                        # warm every jit cache involved
-    times: list[list[float]] = [[] for _ in fns]
-    for _ in range(reps):
-        for slot, fn in zip(times, fns):
-            t0 = time.perf_counter()
-            fn()
-            slot.append(time.perf_counter() - t0)
-    return times
-
-
 def _engine_loop(jobs: list):
     """The PR-1 sequential loop: one `run_rounds` per job, reusing each
-    job's `FedServer` (and thus its per-attack-family jit cache)."""
+    job's `FedServer` (and thus its per-attack-family jit cache).
+    ``engine="loop"`` pins the historical per-round-dispatch semantics —
+    this baseline must NOT silently become a scanned run now that the fed
+    server defaults to the round engine."""
     servers = [FedServer(j.loss_fn, j.optimizer, j.cfg,
                          constant(float(j.lr_fn(0)))) for j in jobs]
 
@@ -109,7 +89,8 @@ def _engine_loop(jobs: list):
             state = server.init_state(job.params)
             run_rounds(server, state, job.batch_fn, job.rounds,
                        schedule=job.schedule,
-                       byz_identity=job.byz_identity, seed=job.seed)
+                       byz_identity=job.byz_identity, seed=job.seed,
+                       engine="loop")
     return run_all
 
 

@@ -19,3 +19,28 @@ def time_fn(fn, *args, iters: int = 20, warmup: int = 3) -> float:
 
 def emit(name: str, us: float, derived: str = "") -> None:
     print(f"{name},{us:.1f},{derived}")
+
+
+def median(xs: list) -> float:
+    return sorted(xs)[len(xs) // 2]
+
+
+def timed_interleaved(fns: list, reps: int = 5) -> list[list[float]]:
+    """Steady-state wall seconds, INTERLEAVED across the candidates.
+
+    Each rep times every candidate back-to-back, so machine-load drift
+    (noisy shared CPU) lands on all of them instead of biasing whichever
+    ran last; callers gate on medians of per-rep numbers (typically of
+    per-rep RATIOS, which machine-normalize).  Compiles are paid by one
+    warmup sweep first.  The shared protocol behind every speedup the
+    perf gates check (bench_fleet, bench_convergence --smoke).
+    """
+    for fn in fns:
+        fn()                        # warm every jit cache involved
+    times: list[list[float]] = [[] for _ in fns]
+    for _ in range(reps):
+        for slot, fn in zip(times, fns):
+            t0 = time.perf_counter()
+            fn()
+            slot.append(time.perf_counter() - t0)
+    return times

@@ -18,9 +18,14 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--smoke", action="store_true",
-                    help="fleet perf smoke only; writes --json-out")
+                    help="perf smoke only (fleet + round engine); writes "
+                         "--json-out and --rounds-out")
     ap.add_argument("--json-out", default="BENCH_fleet.json",
-                    help="summary path for --smoke (default: %(default)s)")
+                    help="fleet summary path for --smoke "
+                         "(default: %(default)s)")
+    ap.add_argument("--rounds-out", default="BENCH_rounds.json",
+                    help="round-engine summary path for --smoke "
+                         "(default: %(default)s)")
     ap.add_argument("--only", default=None,
                     help="comma-separated subset: kappa,grid,kappahat,cost,"
                          "convergence,roofline,fed,fleet")
@@ -29,8 +34,9 @@ def main() -> None:
     only = set(args.only.split(",")) if args.only else None
 
     if args.smoke:
-        from benchmarks import bench_fleet
+        from benchmarks import bench_convergence, bench_fleet
         bench_fleet.main(fast=True, json_out=args.json_out)
+        bench_convergence.rounds_smoke(json_out=args.rounds_out)
         return
 
     from benchmarks import (bench_accuracy_grid, bench_agg_cost,

@@ -43,6 +43,16 @@ Distributed-backend hard gates (``--dist-agg``; from
   oracle;
 * ``wide_ops_xla``              >= 1 — the contrast row stays honest.
 
+Round-engine hard gates (``--rounds``; from
+``benchmarks/bench_convergence.py --smoke``):
+
+* ``compile_count_trainer_scan`` / ``compile_count_fed_scan`` <= baseline
+  (1) — a whole-run scan is ONE compiled program per surface;
+* ``trainer_scan_speedup`` / ``fed_scan_speedup`` >= 5 — the scanned run
+  must beat the per-round Python loop by 5x rounds/sec (median of
+  interleaved per-rep ratios, machine-normalized, so the floor is
+  absolute).
+
 Interpret-mode quarantine: Pallas timings measured off-TPU live under the
 JSON's ``"interpret"`` key and CANNOT be gated — any gated key found only
 there is a hard configuration error, so interpreter numbers can never
@@ -83,6 +93,16 @@ DIST_GATES = (("sharded_wide_ops_max_dc", "max"),
               ("sharded_parity_ok", "min_1"),
               ("wide_ops_xla", "min_1"))
 
+#: round-engine gates (BENCH_rounds.json from bench_convergence.py
+#: --smoke): a whole-run scan must compile exactly once per surface
+#: (trainer body, fed round) and beat the per-round Python loop by >= 5x
+#: rounds/sec.  The speedups are medians of per-rep interleaved ratios —
+#: machine-normalized, so the 5x floor is absolute, not baseline-scaled.
+ROUNDS_GATES = (("compile_count_trainer_scan", "max"),
+                ("compile_count_fed_scan", "max"),
+                ("trainer_scan_speedup", "min_5"),
+                ("fed_scan_speedup", "min_5"))
+
 
 def _gated_value(doc: dict, key: str, path: str):
     """Fetch a gated key, refusing interpret-quarantined rows."""
@@ -121,16 +141,21 @@ def check_fleet(cur: dict, base: dict, args, failures: list) -> None:
 
 def check_gate_table(gates, cur: dict, base: dict, cur_path: str,
                      failures: list) -> None:
-    """Exact structural gates shared by the agg-cost and dist-agg docs."""
+    """Exact/absolute gates shared by the structural benchmark docs.
+
+    Directions: ``"max"`` — current <= baseline (exact); ``"min_N"`` —
+    current >= N regardless of baseline (absolute floor).
+    """
     for key, direction in gates:
         val = _gated_value(cur, key, cur_path)
         if direction == "max":
             ref = _gated_value(base, key, "baseline")
             ok = val <= ref
             detail = f"(baseline {ref}, exact)"
-        else:  # min_1
-            ok = val >= 1
-            detail = "(must stay >= 1)"
+        else:  # min_N
+            floor = float(direction.removeprefix("min_"))
+            ok = val >= floor
+            detail = f"(must stay >= {floor:g})"
         print(f"[{'OK' if ok else 'FAIL'}] {key}: {val} {detail}")
         if not ok:
             failures.append(key)
@@ -155,12 +180,16 @@ def main() -> int:
                          "(forced 8-device host)")
     ap.add_argument("--dist-agg-baseline",
                     default="benchmarks/baselines/BENCH_dist_agg.json")
+    ap.add_argument("--rounds", default=None,
+                    help="JSON from bench_convergence.py --smoke")
+    ap.add_argument("--rounds-baseline",
+                    default="benchmarks/baselines/BENCH_rounds.json")
     args = ap.parse_args()
 
     if args.current is None and args.agg_cost is None \
-            and args.dist_agg is None:
-        print("perf gate: nothing to check (pass a fleet JSON, --agg-cost "
-              "and/or --dist-agg)", file=sys.stderr)
+            and args.dist_agg is None and args.rounds is None:
+        print("perf gate: nothing to check (pass a fleet JSON, --agg-cost, "
+              "--dist-agg and/or --rounds)", file=sys.stderr)
         return 2
 
     failures: list = []
@@ -185,6 +214,14 @@ def main() -> int:
         with open(args.dist_agg_baseline) as fh:
             dist_base = json.load(fh)
         check_gate_table(DIST_GATES, dist_cur, dist_base, args.dist_agg,
+                         failures)
+
+    if args.rounds is not None:
+        with open(args.rounds) as fh:
+            rounds_cur = json.load(fh)
+        with open(args.rounds_baseline) as fh:
+            rounds_base = json.load(fh)
+        check_gate_table(ROUNDS_GATES, rounds_cur, rounds_base, args.rounds,
                          failures)
 
     if failures:

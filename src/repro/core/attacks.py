@@ -208,6 +208,53 @@ def apply_attack_tree(name: str, tree, f: int, *, eta: float | None = None,
 
 
 # ---------------------------------------------------------------------------
+# Scan-phase attacks (round engine).
+#
+# A scanned multi-round run resolves its attack SCHEDULE host-side into a
+# per-round branch index, but keeps the Byzantine count f STATIC (it is
+# constant within a run) — so every branch can replay the static
+# `apply_attack_tree` math exactly.  This is what makes a scanned fed run
+# bit-for-bit equal to the per-round loop it replaces, even when the
+# schedule switches family mid-chunk.  Contrast `apply_attack_dyn` below:
+# traced f forces masked statistics, which are only float-close to the
+# static slices.
+# ---------------------------------------------------------------------------
+
+def apply_attack_scan(families: tuple[str, ...], attack_id: Array, tree,
+                      f: int, *, eta: Array,
+                      agg_closure: Callable | None = None):
+    """Attacked worker-stacked pytree with a TRACED family, STATIC f.
+
+    ``families`` is the static branch tuple (the run's schedule families,
+    jit-cache key material); ``attack_id`` selects the branch per round.
+    Branch b computes ``apply_attack_tree(families[b], tree, f, ...)``
+    verbatim: ``eta`` is passed through only for the families that consume
+    a traced eta (alie/foe — matching the fed server's ``use_eta``
+    convention), and ``agg_closure`` only reaches the optimized variants.
+    Outside a vmap, `lax.switch` executes ONE branch per round.
+    """
+    if f == 0 or not families:
+        return tree
+    for name in families:
+        if name not in ("none", "lf") and name not in ATTACKS:
+            raise ValueError(f"unknown attack {name!r}; known: "
+                             f"{('none', 'lf') + tuple(sorted(ATTACKS))}")
+        _require_agg_closure(name, agg_closure)
+
+    def branch(name: str):
+        def run():
+            use_eta = name in ("alie", "foe")
+            return apply_attack_tree(name, tree, f,
+                                     eta=eta if use_eta else None,
+                                     agg_closure=agg_closure)
+        return run
+
+    if len(families) == 1:
+        return branch(families[0])()
+    return jax.lax.switch(attack_id, [branch(n) for n in families])
+
+
+# ---------------------------------------------------------------------------
 # Lane-dynamic attacks (fleet engine).
 #
 # The attack FAMILY becomes a traced int32 selecting a `lax.switch` branch,

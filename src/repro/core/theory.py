@@ -7,6 +7,7 @@ from __future__ import annotations
 
 import math
 
+import jax
 import jax.numpy as jnp
 
 
@@ -98,6 +99,25 @@ def dshb_hyperparams(smooth_l: float, loss_gap: float, kappa_: float,
 def resilience_lower_bound(n: int, f: int, g_sq: float) -> float:
     """Prop. 1 / Appendix 12 explicit constant: eps >= f/(4(n-2f)) G^2."""
     return f / (4.0 * (n - 2 * f)) * g_sq
+
+
+def tree_kappa_hat(agg, stack, n_honest: int):
+    """Paper Eq. (26) over worker-stacked pytrees, leaf-streamed in fp32.
+
+    ``stack`` leaves carry a leading worker axis; the first ``n_honest``
+    rows are the honest workers.  This is the shared estimator of the
+    lockstep trainer and the fed server (both record it per round/step);
+    :func:`empirical_kappa_hat` below is the single-(n, d)-stack form.
+    """
+    num = jnp.zeros((), jnp.float32)
+    den = jnp.zeros((), jnp.float32)
+    for a, s in zip(jax.tree_util.tree_leaves(agg),
+                    jax.tree_util.tree_leaves(stack)):
+        h = s[:n_honest].astype(jnp.float32)
+        mbar = h.mean(axis=0)
+        num += jnp.sum((a.astype(jnp.float32) - mbar) ** 2)
+        den += jnp.mean(jnp.sum((h - mbar).reshape(n_honest, -1) ** 2, axis=1))
+    return jnp.sqrt(num / (den + 1e-20))
 
 
 def empirical_kappa_hat(agg_out, stack, honest_idx=None):

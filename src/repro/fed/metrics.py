@@ -14,8 +14,9 @@ from typing import Optional
 import numpy as np
 
 # The kappa-hat estimator (paper Eq. 26) is shared with the lockstep
-# trainer — re-exported here as the fed-facing name.
-from repro.training.trainer import _kappa_hat as kappa_hat  # noqa: F401
+# trainer — the public home is repro.core.theory, re-exported here as the
+# fed-facing name.
+from repro.core.theory import tree_kappa_hat as kappa_hat  # noqa: F401
 
 
 @dataclasses.dataclass

@@ -28,7 +28,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import robust as robust_lib
-from repro.core.attacks import apply_attack_tree
+from repro.core.attacks import apply_attack_scan, apply_attack_tree
+from repro.core.theory import tree_kappa_hat
 from repro.core.types import AggregatorSpec
 from repro.fed.clients import (
     ClientConfig, client_updates, gather_rows, init_client_momentum,
@@ -37,7 +38,11 @@ from repro.fed.clients import (
 from repro.fed.metrics import FedHistory
 from repro.fed.schedules import AttackSchedule, FixedByzantine
 from repro.optim import Optimizer, global_norm
-from repro.training.trainer import _kappa_hat, _split_info, merge_params
+from repro.rounds import (
+    RoundEngine, iterated_split_keys, resolve_attack_operands,
+    split_segments, stack_rounds,
+)
+from repro.training.trainer import _split_info, merge_params
 
 Array = jax.Array
 PyTree = Any
@@ -106,6 +111,17 @@ class FedServer:
         self.cfg = cfg
         self.lr_schedule = lr_schedule
         self._round_cache: dict[tuple, Callable] = {}
+        # Scan engines keyed by (schedule family tuple, m_byz, f_round,
+        # chunk) — the static skeleton of a scanned run.  Cached so a
+        # server re-running the same scenario never re-traces.
+        self._scan_cache: dict[tuple, RoundEngine] = {}
+        #: Compile counters of the latest scanned run (None before one):
+        #: ``trace_count`` — NEW traces that run caused (0 on a full
+        #: cache hit), ``total_trace_count`` — lifetime traces of the
+        #: engine it used, ``chunk_shapes`` — that run's segment lengths.
+        #: The one-compile-per-(run x chunk-shape) contract tests and
+        #: benches assert on.
+        self.last_scan_report: Optional[dict] = None
 
     # -- state ------------------------------------------------------------
     def init_state(self, params: PyTree) -> dict:
@@ -166,8 +182,8 @@ class FedServer:
                 "direction_norm": global_norm(direction),
             }
             if cfg.track_kappa_hat:
-                metrics["kappa_hat"] = _kappa_hat(robust_dir, attacked,
-                                                  m_honest)
+                metrics["kappa_hat"] = tree_kappa_hat(robust_dir, attacked,
+                                                      m_honest)
             return new_state, metrics
 
         return jax.jit(round_fn)
@@ -185,12 +201,90 @@ class FedServer:
                 attack, m_byz, f_round, use_eta)
         return self._round_cache[cache_key]
 
+    # -- the scanned round ------------------------------------------------
+    def _build_scan_body(self, families: tuple[str, ...], m_byz: int,
+                         f_round: int) -> Callable:
+        """One round as a scan body: ``(state, op) -> (state, metrics)``.
+
+        Identical math to :meth:`_build_round`'s per-family rounds — the
+        attack family is the only per-round decision that was compiled
+        statically there, and it becomes a traced ``lax.switch`` branch
+        index over the run's static family tuple
+        (:func:`repro.core.attacks.apply_attack_scan`, bitwise equal per
+        family).  ``op`` carries one round's slice of the plan: ``batch``,
+        cohort ``idx``, ``attack_id``, ``eta``, PRNG ``key``.
+        """
+        cfg, ccfg = self.cfg, self.cfg.client
+        spec = dataclasses.replace(cfg.agg, f=f_round)
+        optimizer, lr_schedule, loss_fn = \
+            self.optimizer, self.lr_schedule, self.loss_fn
+        needs_closure = any(n.endswith("_opt") for n in families)
+
+        def body(state: dict, op: dict):
+            params = state["params"]
+            treedef, _, is_fsdp = _split_info(params, ())
+            has_momentum = "momentum" in state
+            cohort_mom = gather_rows(state["momentum"], op["idx"]) \
+                if has_momentum else []
+
+            losses, stack, new_cohort_mom = client_updates(
+                loss_fn, params, cohort_mom, op["batch"], ccfg)
+            m = losses.shape[0]
+            m_honest = m - m_byz
+
+            agg_key = jax.random.split(op["key"])[0]
+            closure = (lambda t: robust_lib.robust_aggregate(
+                t, spec, key=agg_key)) if needs_closure else None
+            attacked = apply_attack_scan(families, op["attack_id"], stack,
+                                         m_byz, eta=op["eta"],
+                                         agg_closure=closure)
+
+            robust_dir = robust_lib.robust_aggregate(attacked, spec,
+                                                     key=agg_key)
+            direction = merge_params(robust_dir, [], treedef, is_fsdp)
+
+            lr = lr_schedule(state["step"])
+            new_params, new_opt = optimizer.update(
+                direction, state["opt_state"], params, lr)
+            new_state = dict(params=new_params, opt_state=new_opt,
+                             step=state["step"] + 1)
+            if has_momentum:
+                new_state["momentum"] = scatter_rows(
+                    state["momentum"], op["idx"], new_cohort_mom)
+
+            metrics = {
+                "loss": losses[:m_honest].mean(),
+                "lr": lr,
+                "direction_norm": global_norm(direction),
+            }
+            if cfg.track_kappa_hat:
+                metrics["kappa_hat"] = tree_kappa_hat(robust_dir, attacked,
+                                                      m_honest)
+            return new_state, metrics
+
+        return body
+
+    def scan_engine(self, families: tuple[str, ...], m_byz: int,
+                    f_round: Optional[int] = None,
+                    chunk: Optional[int] = None) -> RoundEngine:
+        """The chunked scan engine for one run skeleton (cached — a rerun
+        with the same families/budgets/chunk re-traces nothing)."""
+        if f_round is None:
+            f_round = rescale_f(self.cfg.f, self.cfg.n_clients,
+                                self.cfg.clients_per_round)
+        cache_key = (families, m_byz, f_round, chunk)
+        if cache_key not in self._scan_cache:
+            self._scan_cache[cache_key] = RoundEngine(
+                self._build_scan_body(families, m_byz, f_round), chunk=chunk)
+        return self._scan_cache[cache_key]
+
 
 def run_rounds(server: FedServer, state: dict, batch_fn: Callable,
                rounds: int, *,
                schedule: AttackSchedule = AttackSchedule(),
-               byz_identity=None, seed: int = 0) -> tuple[dict, FedHistory]:
-    """The host-side round loop.
+               byz_identity=None, seed: int = 0, engine: str = "scan",
+               chunk: Optional[int] = None) -> tuple[dict, FedHistory]:
+    """Drive ``rounds`` federated rounds; returns (state, history).
 
     Args:
       batch_fn: ``batch_fn(cohort_ids, n_flip, rng) -> pytree`` of numpy
@@ -200,6 +294,13 @@ def run_rounds(server: FedServer, state: dict, batch_fn: Callable,
       schedule: time-varying attack schedule (family + eta per round).
       byz_identity: object with ``.ids(round) -> np.ndarray`` (defaults to
         the fixed last-f convention).
+      engine: ``"scan"`` (default) resolves the whole run host-side —
+        cohorts, batches, attack phases, eta ramps, PRNG subkeys — into
+        ``(R, ...)`` operands and executes it as chunked ``lax.scan``
+        programs (bit-for-bit the loop, minus R - 1 dispatches; compile
+        counters land in ``server.last_scan_report``).  ``"loop"`` is the
+        per-round jitted loop (one compile per attack family).
+      chunk: scan segment length (None = the whole run in ONE program).
     """
     cfg = server.cfg
     if byz_identity is None:
@@ -208,19 +309,62 @@ def run_rounds(server: FedServer, state: dict, batch_fn: Callable,
     m_byz = rescale_f(cfg.f, cfg.n_clients, m)
     assert m_byz <= cohort_breakdown(m) or m_byz == 0
     rng = np.random.default_rng(seed)
-    key = jax.random.PRNGKey(seed)
     hist = FedHistory()
+    if rounds == 0:
+        return state, hist
 
+    if engine == "loop":
+        key = jax.random.PRNGKey(seed)
+        for r in range(rounds):
+            attack, eta = schedule.resolve(r)
+            cohort = sample_cohort(rng, cfg.n_clients, m,
+                                   byz_identity.ids(r), m_byz)
+            n_flip = m_byz if attack == "lf" else 0
+            batch = batch_fn(cohort, n_flip, rng)
+            key, sub = jax.random.split(key)
+            step = server.round_fn(attack, m_byz)
+            eta_arg = jnp.float32(0.0 if eta is None else eta)
+            state, metrics = step(state, batch, jnp.asarray(cohort),
+                                  eta_arg, sub)
+            hist.record(metrics, cohort=cohort, attack=attack, eta=eta,
+                        m_byz=m_byz, f_round=m_byz)
+        return state, hist
+    if engine != "scan":
+        raise ValueError(f"engine must be 'scan' or 'loop', got {engine!r}")
+
+    # HOST, once: the per-round decisions of the loop above, in the same
+    # rng order (cohort sampling then batch building, round by round).
+    families, attack_ops, meta = resolve_attack_operands(schedule, rounds)
+    cohorts: list[np.ndarray] = []
+    batches: list = []
     for r in range(rounds):
-        attack, eta = schedule.resolve(r)
+        attack, _ = meta[r]
         cohort = sample_cohort(rng, cfg.n_clients, m,
                                byz_identity.ids(r), m_byz)
         n_flip = m_byz if attack == "lf" else 0
-        batch = batch_fn(cohort, n_flip, rng)
-        key, sub = jax.random.split(key)
-        step = server.round_fn(attack, m_byz)
-        eta_arg = jnp.float32(0.0 if eta is None else eta)
-        state, metrics = step(state, batch, jnp.asarray(cohort), eta_arg, sub)
-        hist.record(metrics, cohort=cohort, attack=attack, eta=eta,
+        batches.append(batch_fn(cohort, n_flip, rng))
+        cohorts.append(cohort)
+    operands = {
+        "batch": stack_rounds(batches),
+        "idx": np.stack(cohorts).astype(np.int32),
+        "key": iterated_split_keys(jax.random.PRNGKey(seed), rounds),
+        **attack_ops,
+    }
+
+    eng = server.scan_engine(families, m_byz, chunk=chunk)
+    traces_before = eng.trace_count
+    state, metrics = eng.run(state, operands)
+    server.last_scan_report = {
+        "trace_count": eng.trace_count - traces_before,
+        "total_trace_count": eng.trace_count,
+        "chunk_shapes": tuple(sorted({end - start for start, end
+                                      in split_segments(rounds, chunk)})),
+    }
+    for r in range(rounds):
+        attack, eta = meta[r]
+        lane = {k: metrics[k][r] for k in ("loss", "lr", "direction_norm")}
+        if "kappa_hat" in metrics:
+            lane["kappa_hat"] = metrics["kappa_hat"][r]
+        hist.record(lane, cohort=cohorts[r], attack=attack, eta=eta,
                     m_byz=m_byz, f_round=m_byz)
     return state, hist

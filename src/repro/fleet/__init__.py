@@ -16,7 +16,7 @@ produces bit-for-bit the same trajectory (tested), so batching is purely a
 throughput lever — `benchmarks/bench_fleet.py` measures it.
 """
 from repro.fleet.lanes import (
-    LANE_OP_FIELDS, build_fleet_round, build_lane_round,
+    LANE_OP_FIELDS, build_fleet_round, build_fleet_scan, build_lane_round,
 )
 from repro.fleet.runner import (
     FleetJob, FleetResult, FleetRunner, LaneBucket, SCENARIO_OPTIMIZER,
@@ -24,7 +24,8 @@ from repro.fleet.runner import (
 )
 
 __all__ = [
-    "LANE_OP_FIELDS", "build_fleet_round", "build_lane_round",
+    "LANE_OP_FIELDS", "build_fleet_round", "build_fleet_scan",
+    "build_lane_round",
     "FleetJob", "FleetResult", "FleetRunner", "LaneBucket",
     "SCENARIO_OPTIMIZER", "ScenarioSpec", "bucket_key", "job_from_spec",
     "run_fleet",

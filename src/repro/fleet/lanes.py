@@ -128,3 +128,34 @@ def build_fleet_round(loss_fn: Callable, optimizer: Optimizer,
         return jax.vmap(lane)(state, batch, idx, ops)
 
     return jax.jit(fleet_round)
+
+
+def build_fleet_scan(loss_fn: Callable, optimizer: Optimizer,
+                     cfg: FedConfig, *,
+                     on_trace: Optional[Callable[[], None]] = None
+                     ) -> Callable:
+    """The scanned fleet program: ``lax.scan`` of the vmapped B-lane round
+    over a leading ROUND axis — B lanes x K rounds in one compiled call.
+
+    ``(state, operands) -> (state, metrics)`` where ``operands`` is
+    ``{"batch": (K, B, m, L, ...), "idx": (K, B, m), "ops": {field:
+    (K, B)}}`` (one segment's slice of the runner's precomputed round
+    plan) and ``metrics`` leaves come back round-stacked ``(K, B)``.
+    Scanning outside the vmap keeps the per-round math identical to
+    :func:`build_fleet_round` — a scanned lane is bit-for-bit the stepped
+    lane (tested) — while collapsing K dispatches + K metric fetches into
+    one.  ``on_trace`` fires at TRACE time; each distinct segment length
+    K is one trace of this program.
+    """
+    lane = build_lane_round(loss_fn, optimizer, cfg)
+
+    def fleet_scan(state: dict, operands: dict):
+        if on_trace is not None:
+            on_trace()
+
+        def step(st, op):
+            return jax.vmap(lane)(st, op["batch"], op["idx"], op["ops"])
+
+        return jax.lax.scan(step, state, operands)
+
+    return jax.jit(fleet_scan)

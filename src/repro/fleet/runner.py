@@ -34,8 +34,9 @@ from repro.fed.scenarios import (
     Scenario, _mlp_eval, _mlp_init, _mlp_loss, cohort_batch_fn, get_scenario,
 )
 from repro.fed.server import FedConfig, rescale_f, sample_cohort
-from repro.fleet.lanes import build_fleet_round
+from repro.fleet.lanes import build_fleet_scan
 from repro.optim import Optimizer, sgd
+from repro.rounds import cadence_boundaries, split_segments, stack_rounds
 
 PyTree = Any
 
@@ -179,11 +180,14 @@ def _mesh_sig() -> tuple:
     return (jax.device_count(),)
 
 
-def bucket_key(job: FleetJob) -> tuple:
+def bucket_key(job: FleetJob, *, chunk: Optional[int] = None) -> tuple:
     """The static skeleton a compiled fleet round is specialized on.
 
     Everything NOT here — f, attack family, eta, beta, local_lr, lr, seed,
-    round count — is a traced per-lane operand.
+    round count — is a traced per-lane operand.  ``chunk`` is the runner's
+    scan segment length: two runners scanning the same jobs at different
+    cadences compile different programs, so the chunk is key material —
+    compiles must never leak across cadences.
     """
     c = job.cfg
     probe = job.batch_fn(
@@ -197,7 +201,7 @@ def bucket_key(job: FleetJob) -> tuple:
             c.agg.backend, _mesh_sig(),
             c.track_kappa_hat,
             job.loss_fn, job.optimizer,
-            _tree_sig(job.params), _tree_sig(probe))
+            _tree_sig(job.params), _tree_sig(probe), chunk)
 
 
 @dataclasses.dataclass
@@ -219,25 +223,37 @@ class FleetResult:
 
 
 class FleetRunner:
-    """Packs jobs into shape buckets and runs each bucket in lockstep.
+    """Packs jobs into shape buckets and scans each bucket in lockstep.
 
-    The compile cache is keyed on (bucket static key, lane count): re-running
-    the same runner, or many max_lanes-sized chunks of one bucket, reuses the
-    compiled round.  ``trace_count`` counts actual tracings — the
-    one-compile-per-shape-bucket contract benchmarks assert on.
+    Each bucket runs as B lanes x R rounds of ONE compiled scan program
+    (``repro.fleet.lanes.build_fleet_scan``): the whole per-round host loop
+    — schedule resolution, cohort sampling, batch building, operand
+    packing — happens up front, and the device sees one dispatch per scan
+    segment instead of one per round.  ``chunk`` bounds the segment length
+    (None = whole run, cut only at eval boundaries).
+
+    The compile cache is keyed on (bucket static key incl. chunk, lane
+    count): re-running the same runner, or many max_lanes-sized chunks of
+    one bucket, reuses the compiled program.  ``trace_count`` counts actual
+    tracings — one per bucket x lane-count x SEGMENT LENGTH, the
+    one-compile-per-(bucket x chunk-shape) contract benchmarks assert on.
     """
 
     def __init__(self, jobs: Sequence[Union[FleetJob, ScenarioSpec]], *,
                  max_lanes: Optional[int] = None,
-                 compile_cache: Optional[dict] = None):
+                 compile_cache: Optional[dict] = None,
+                 chunk: Optional[int] = None):
         self.jobs = [job_from_spec(j) if isinstance(j, ScenarioSpec) else j
                      for j in jobs]
         if not self.jobs:
             raise ValueError("empty fleet")
         self.max_lanes = max_lanes
+        self.chunk = chunk
         # ``compile_cache`` may be shared across runners (FleetService
         # passes one per service) so later fleets reuse earlier compiles;
-        # ``trace_count`` still counts only THIS runner's new tracings.
+        # ``trace_count`` still counts only THIS runner's new tracings
+        # (a cached program retracing on a NEW segment length attributes
+        # to the runner that built it).
         self._compiled: dict[tuple, Callable] = \
             compile_cache if compile_cache is not None else {}
         self.trace_count = 0
@@ -247,7 +263,7 @@ class FleetRunner:
     def _pack(self) -> list[LaneBucket]:
         groups: dict[tuple, LaneBucket] = {}
         for i, job in enumerate(self.jobs):
-            key = bucket_key(job)
+            key = bucket_key(job, chunk=self.chunk)
             if key not in groups:
                 groups[key] = LaneBucket(key, [], [])
             groups[key].jobs.append(job)
@@ -273,7 +289,7 @@ class FleetRunner:
             def bump():
                 self.trace_count += 1
 
-            self._compiled[cache_key] = build_fleet_round(
+            self._compiled[cache_key] = build_fleet_scan(
                 job0.loss_fn, job0.optimizer, job0.cfg, on_trace=bump)
         return self._compiled[cache_key]
 
@@ -286,36 +302,28 @@ class FleetRunner:
                 results[idx] = res
         return results  # type: ignore[return-value]
 
-    def _run_bucket(self, bucket: LaneBucket) -> list[FleetResult]:
+    def _plan_bucket(self, bucket: LaneBucket
+                     ) -> tuple[dict, list[tuple[list, list, list]]]:
+        """HOST, once per bucket run: the whole per-round decision loop —
+        schedule resolution, cohort sampling, batch building, lane-operand
+        packing — resolved into round-stacked scan operands.
+
+        Returns ``(operands, round_meta)``: operands leaves are
+        ``(R, B, ...)`` arrays, ``round_meta[r]`` is the (attacks,
+        raw etas, cohorts) triple the history demux records.  The host rng
+        consumption order is exactly the old per-round loop's (cohort
+        sample then batch build, lane by lane, round by round), so scanned
+        cohorts/batches match the stepped engine's sample for sample.
+        """
         jobs = bucket.jobs
         cfg0 = jobs[0].cfg
         m = cfg0.clients_per_round
-        fleet_round = self._round_fn(bucket)
-
-        lane_states = []
-        for job in jobs:
-            st = dict(params=job.params,
-                      opt_state=job.optimizer.init(job.params),
-                      step=jnp.zeros((), jnp.int32),
-                      key=jax.random.PRNGKey(job.seed))
-            if cfg0.client.algorithm == "dshb":
-                st["momentum"] = init_client_momentum(job.params,
-                                                      cfg0.n_clients)
-            lane_states.append(st)
-        state = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs),
-                                       *lane_states)
-
         rngs = [np.random.default_rng(job.seed) for job in jobs]
         m_byzs = [job.m_byz for job in jobs]
-        hists = [FedHistory() for _ in jobs]
-        evals: list[list[tuple[int, float]]] = [[] for _ in jobs]
         max_rounds = max(job.rounds for job in jobs)
-        # Device metrics stay on device until the end of the run: fetching
-        # them every round would serialize the host loop on a device sync
-        # per round (measured; the demux below is one transfer per run).
-        round_meta: list[tuple[list, list, list]] = []
-        round_metrics: list[dict] = []
 
+        per_round: list[dict] = []
+        round_meta: list[tuple[list, list, list]] = []
         for r in range(max_rounds):
             attacks, etas_raw, cohorts, batches = [], [], [], []
             ops = {k: [] for k in ("attack_id", "m_byz", "f_agg", "eta",
@@ -339,48 +347,90 @@ class FleetRunner:
                 ops["lr"].append(float(job.lr_fn(r)))
                 ops["active"].append(r < job.rounds)
 
-            batch = jax.tree_util.tree_map(lambda *xs: np.stack(xs),
-                                           *batches)
-            idx = np.stack(cohorts).astype(np.int32)
-            ops_arr = {
-                "attack_id": np.asarray(ops["attack_id"], np.int32),
-                "m_byz": np.asarray(ops["m_byz"], np.int32),
-                "f_agg": np.asarray(ops["f_agg"], np.int32),
-                "eta": np.asarray(ops["eta"], np.float32),
-                "beta": np.asarray(ops["beta"], np.float32),
-                "local_lr": np.asarray(ops["local_lr"], np.float32),
-                "lr": np.asarray(ops["lr"], np.float32),
-                "active": np.asarray(ops["active"], bool),
-            }
-            state, metrics = fleet_round(state, batch, idx, ops_arr)
+            per_round.append({
+                "batch": jax.tree_util.tree_map(lambda *xs: np.stack(xs),
+                                                *batches),
+                "idx": np.stack(cohorts).astype(np.int32),
+                "ops": {
+                    "attack_id": np.asarray(ops["attack_id"], np.int32),
+                    "m_byz": np.asarray(ops["m_byz"], np.int32),
+                    "f_agg": np.asarray(ops["f_agg"], np.int32),
+                    "eta": np.asarray(ops["eta"], np.float32),
+                    "beta": np.asarray(ops["beta"], np.float32),
+                    "local_lr": np.asarray(ops["local_lr"], np.float32),
+                    "lr": np.asarray(ops["lr"], np.float32),
+                    "active": np.asarray(ops["active"], bool),
+                },
+            })
             round_meta.append((attacks, etas_raw, cohorts))
-            round_metrics.append(metrics)
+        return stack_rounds(per_round), round_meta
 
+    def _run_bucket(self, bucket: LaneBucket) -> list[FleetResult]:
+        jobs = bucket.jobs
+        cfg0 = jobs[0].cfg
+        fleet_scan = self._round_fn(bucket)
+
+        lane_states = []
+        for job in jobs:
+            st = dict(params=job.params,
+                      opt_state=job.optimizer.init(job.params),
+                      step=jnp.zeros((), jnp.int32),
+                      key=jax.random.PRNGKey(job.seed))
+            if cfg0.client.algorithm == "dshb":
+                st["momentum"] = init_client_momentum(job.params,
+                                                      cfg0.n_clients)
+            lane_states.append(st)
+        state = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs),
+                                       *lane_states)
+
+        m_byzs = [job.m_byz for job in jobs]
+        hists = [FedHistory() for _ in jobs]
+        evals: list[list[tuple[int, float]]] = [[] for _ in jobs]
+        max_rounds = max(job.rounds for job in jobs)
+        if max_rounds == 0:             # degenerate: nothing to scan
+            return [FleetResult(label=job.label, job=job,
+                                state=jax.tree_util.tree_map(
+                                    lambda leaf, kk=k: leaf[kk], state),
+                                history=hists[k], evals=[])
+                    for k, job in enumerate(jobs)]
+        operands, round_meta = self._plan_bucket(bucket)
+
+        # Scan segments are cut at every eval round so the carry state is
+        # back on the host exactly when the stepped loop evaluated it.
+        boundaries = cadence_boundaries(
+            max_rounds, *(job.eval_every for job in jobs
+                          if job.eval_fn is not None and job.eval_every))
+        seg_metrics: list[dict] = []
+        for start, end in split_segments(max_rounds, self.chunk, boundaries):
+            seg_ops = jax.tree_util.tree_map(lambda a: a[start:end], operands)
+            state, metrics = fleet_scan(state, seg_ops)
+            seg_metrics.append(metrics)
             for k, job in enumerate(jobs):
                 if (job.eval_fn is not None and job.eval_every
-                        and r < job.rounds
-                        and (r + 1) % job.eval_every == 0):
+                        and end <= job.rounds
+                        and end % job.eval_every == 0):
                     lane_params = jax.tree_util.tree_map(
                         lambda leaf, kk=k: leaf[kk], state["params"])
                     # Keep the device scalar: float() here would sync the
                     # dispatch pipeline per eval (same reason the round
                     # metrics stay on device until the demux below).
-                    evals[k].append((r + 1, job.eval_fn(lane_params)))
+                    evals[k].append((end, job.eval_fn(lane_params)))
 
         # Demux: one host transfer for the whole run's metrics + evals.
-        fetched = jax.device_get(round_metrics)
+        fetched = jax.device_get(seg_metrics)
+        metrics_np = jax.tree_util.tree_map(
+            lambda *xs: np.concatenate(xs, axis=0), *fetched)
         evals = [[(r, float(v)) for r, v in lane] for lane in evals]
-        for r, ((attacks, etas_raw, cohorts), metrics_np) in enumerate(
-                zip(round_meta, fetched)):
+        for r, (attacks, etas_raw, cohorts) in enumerate(round_meta):
             for k, job in enumerate(jobs):
                 if r >= job.rounds:
                     continue
-                lane_metrics = {"loss": metrics_np["loss"][k],
-                                "lr": metrics_np["lr"][k],
+                lane_metrics = {"loss": metrics_np["loss"][r][k],
+                                "lr": metrics_np["lr"][r][k],
                                 "direction_norm":
-                                    metrics_np["direction_norm"][k]}
+                                    metrics_np["direction_norm"][r][k]}
                 if "kappa_hat" in metrics_np:
-                    lane_metrics["kappa_hat"] = metrics_np["kappa_hat"][k]
+                    lane_metrics["kappa_hat"] = metrics_np["kappa_hat"][r][k]
                 hists[k].record(lane_metrics, cohort=cohorts[k],
                                 attack=attacks[k], eta=etas_raw[k],
                                 m_byz=m_byzs[k], f_round=m_byzs[k])
@@ -397,6 +447,7 @@ class FleetRunner:
 
 
 def run_fleet(jobs: Sequence[Union[FleetJob, ScenarioSpec]], *,
-              max_lanes: Optional[int] = None) -> list[FleetResult]:
+              max_lanes: Optional[int] = None,
+              chunk: Optional[int] = None) -> list[FleetResult]:
     """One-shot convenience: pack, run, return per-lane results."""
-    return FleetRunner(jobs, max_lanes=max_lanes).run()
+    return FleetRunner(jobs, max_lanes=max_lanes, chunk=chunk).run()

@@ -1,0 +1,29 @@
+"""Scan-compiled round engine: one XLA program per experiment.
+
+Division of labor with the loop owners:
+
+* ``repro.rounds`` — the generic machinery: a chunked ``lax.scan`` driver
+  with compile counters (:class:`RoundEngine`), segment arithmetic
+  (:func:`split_segments`, :func:`cadence_boundaries`), and the host-side
+  plan helpers that turn per-round loop decisions into stacked ``(R, ...)``
+  operands (PRNG subkey sequences, attack-schedule resolution, batch
+  stacking).
+* ``repro.training.trainer`` / ``repro.fed.server`` / ``repro.fleet`` —
+  own their round BODIES and plan assembly (they must consume host rngs in
+  exactly their loop paths' order), and drive them through this engine.
+
+A scanned run is bit-for-bit the per-round Python loop of the same body
+(``tests/test_rounds.py``); the engine exists purely to delete the
+per-round dispatch + host round-trip, not to change any math.
+"""
+from repro.rounds.engine import RoundEngine, WHOLE_RUN, split_segments
+from repro.rounds.plan import (
+    cadence_boundaries, iterated_split_keys, resolve_attack_operands,
+    schedule_families, stack_rounds,
+)
+
+__all__ = [
+    "RoundEngine", "WHOLE_RUN", "split_segments",
+    "cadence_boundaries", "iterated_split_keys", "resolve_attack_operands",
+    "schedule_families", "stack_rounds",
+]

@@ -1,0 +1,155 @@
+"""Chunked ``lax.scan`` round engine: one XLA program per experiment.
+
+Every multi-round loop owner in the repo (the lockstep trainer, the fed
+server, the fleet runner) used to drive its compiled round from a Python
+loop — one device dispatch + host round-trip per round, so wall-clock was
+dominated by dispatch and transfer, not compute.  This module compiles the
+*round loop itself*: the per-round body becomes the body of a
+``lax.scan`` over precomputed, round-stacked operands, and per-round
+metrics come back as stacked scan outputs fetched ONCE per chunk.
+
+The contract with the loop paths is exact: a scanned run is **bit-for-bit**
+the per-round Python loop of the same body (tested in
+``tests/test_rounds.py``) — everything the loop decided per round on the
+host (attack phase, eta ramp, cohort ids, PRNG subkeys, learning rates) is
+resolved up front into ``(R, ...)`` operand arrays, and everything the
+loop computed on device stays on device.
+
+Chunking: ``chunk=None`` (the default) scans the whole run as ONE compiled
+program.  ``chunk=K`` splits the run into segments of at most K rounds so
+checkpoint/eval/log cadence survives — the host gets the carry state back
+at every segment boundary.  ``boundaries`` forces extra cuts (eval rounds).
+Each DISTINCT segment length is one trace of the scanned program; the
+engine counts traces (``trace_count``) and records the lengths it traced
+(``chunk_shapes``) so callers can assert the one-compile-per-
+(experiment x chunk-shape) contract.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Iterable, Optional
+
+import jax
+import numpy as np
+
+PyTree = Any
+
+#: ``chunk`` value meaning "the whole run is one segment".
+WHOLE_RUN = None
+
+
+def split_segments(rounds: int, chunk: Optional[int] = None,
+                   boundaries: Iterable[int] = ()) -> list[tuple[int, int]]:
+    """``[start, end)`` segments covering ``range(rounds)``.
+
+    Segments never exceed ``chunk`` rounds (``None`` = unbounded) and are
+    additionally cut at every round index in ``boundaries`` (exclusive end
+    points — an eval scheduled "after round e" needs a segment ending at
+    e).  Out-of-range boundaries are ignored.
+    """
+    if rounds < 0:
+        raise ValueError(f"rounds must be >= 0, got {rounds}")
+    if chunk is not None and chunk <= 0:
+        raise ValueError(f"chunk must be positive or None, got {chunk}")
+    cuts = sorted({b for b in boundaries if 0 < b < rounds} | {rounds})
+    segs: list[tuple[int, int]] = []
+    start = 0
+    for cut in cuts:
+        while start < cut:
+            end = cut if chunk is None else min(start + chunk, cut)
+            segs.append((start, end))
+            start = end
+    return segs
+
+
+def _leading_dim(operands: PyTree) -> int:
+    leaves = jax.tree_util.tree_leaves(operands)
+    if not leaves:
+        raise ValueError("operands pytree has no leaves")
+    n = np.shape(leaves[0])[0]
+    for leaf in leaves:
+        if np.shape(leaf)[0] != n:
+            raise ValueError("operand leaves disagree on the round axis: "
+                             f"{np.shape(leaf)[0]} vs {n}")
+    return n
+
+
+class RoundEngine:
+    """Drives ``body(state, op) -> (state, metrics)`` through chunked scans.
+
+    ``body`` is the UN-jitted per-round function; ``op`` is one round's
+    slice of the operand pytree (the leading round axis stripped).  The
+    engine jits ``lax.scan(body)`` once; each distinct segment length is
+    one retrace of that program (counted in ``trace_count``), and repeated
+    segments of the same length hit the XLA executable cache.
+    """
+
+    def __init__(self, body: Callable, *, chunk: Optional[int] = WHOLE_RUN):
+        self.body = body
+        self.chunk = chunk
+        self.trace_count = 0
+        self.chunk_shapes: set[int] = set()
+        self._scanned = jax.jit(self._make_scanned())
+        self._jit_body = jax.jit(body)      # run_loop's per-round program
+
+    def _make_scanned(self) -> Callable:
+        body = self.body
+
+        def scanned(state: PyTree, operands: PyTree):
+            # Executes at TRACE time only: one bump per (segment length,
+            # operand/state shape) — the compile counter callers gate on.
+            self.trace_count += 1
+            self.chunk_shapes.add(_leading_dim(operands))
+            return jax.lax.scan(body, state, operands)
+
+        return scanned
+
+    def run(self, state: PyTree, operands: PyTree, *,
+            boundaries: Iterable[int] = (),
+            on_boundary: Optional[Callable[[int, PyTree], None]] = None
+            ) -> tuple[PyTree, PyTree]:
+        """Runs all rounds; returns (final state, host-side metrics).
+
+        ``operands``: pytree whose every leaf has a leading round axis R.
+        ``on_boundary(end_round, state)`` fires after every segment with
+        the carry state — the hook for eval/checkpoint/log cadence (cut
+        the segments where you need it via ``boundaries`` / ``chunk``).
+        Metrics leaves come back as ``(R, ...)`` numpy arrays, fetched in
+        one transfer per segment, concatenated host-side.
+        """
+        rounds = _leading_dim(operands)
+        per_chunk: list[PyTree] = []
+        for start, end in split_segments(rounds, self.chunk, boundaries):
+            seg_ops = jax.tree_util.tree_map(lambda a: a[start:end], operands)
+            state, metrics = self._scanned(state, seg_ops)
+            per_chunk.append(metrics)
+            if on_boundary is not None:
+                on_boundary(end, state)
+        fetched = jax.device_get(per_chunk)
+        stacked = jax.tree_util.tree_map(
+            lambda *xs: np.concatenate(xs, axis=0), *fetched)
+        return state, stacked
+
+    def run_loop(self, state: PyTree, operands: PyTree, *,
+                 boundaries: Iterable[int] = (),
+                 on_boundary: Optional[Callable[[int, PyTree], None]] = None
+                 ) -> tuple[PyTree, PyTree]:
+        """The per-round Python loop over ``jit(body)`` — the dispatch-bound
+        baseline the scan replaces.  Kept first-class for the parity tests
+        and the ``bench_convergence`` speedup measurement; honors the same
+        boundary hooks so the two paths are drop-in interchangeable.
+        """
+        rounds = _leading_dim(operands)
+        jbody = self._jit_body
+        stops = {end for _, end in split_segments(rounds, self.chunk,
+                                                  boundaries)}
+        per_round: list[PyTree] = []
+        for r in range(rounds):
+            op = jax.tree_util.tree_map(lambda a: a[r], operands)
+            state, metrics = jbody(state, op)
+            per_round.append(metrics)
+            if on_boundary is not None and (r + 1) in stops:
+                on_boundary(r + 1, state)
+        fetched = jax.device_get(per_round)
+        stacked = jax.tree_util.tree_map(
+            lambda *xs: np.stack(xs, axis=0), *fetched)
+        return state, stacked

@@ -1,0 +1,100 @@
+"""Host-side round plans: everything a Python round loop decided per round,
+resolved up front into ``(R, ...)`` operand arrays for the scan engine.
+
+The per-round host work of the loop owners falls into four families, each
+with a precompute helper here:
+
+* **PRNG** — the loop's ``key, sub = jax.random.split(key)`` per round
+  becomes :func:`iterated_split_keys`, the SAME split sequence generated in
+  one device scan (bitwise identical subkeys, one dispatch instead of R).
+* **adversary** — :func:`resolve_attack_operands` walks an
+  :class:`~repro.fed.schedules.AttackSchedule` once and emits the per-round
+  branch ids + eta scalars the traced ``lax.switch`` dispatch consumes,
+  plus the host-side (attack name, raw eta) metadata histories record.
+* **batches / cohorts** — :func:`stack_rounds` stacks per-round host
+  pytrees (numpy batches, cohort id vectors) along a new leading round
+  axis.  Cohort SAMPLING stays with the owner (it must consume the host
+  rng in exactly the loop's order) — the plan only stacks the results.
+* **cadence** — eval/checkpoint rounds become scan segment ``boundaries``
+  via :func:`cadence_boundaries`.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Callable, Optional, Sequence
+
+import jax
+import numpy as np
+
+PyTree = Any
+
+
+@partial(jax.jit, static_argnums=1)
+def _iterated_split(key, rounds: int):
+    def body(k, _):
+        pair = jax.random.split(k)
+        return pair[0], pair[1]
+
+    _, subs = jax.lax.scan(body, key, None, length=rounds)
+    return subs
+
+
+def iterated_split_keys(key, rounds: int):
+    """The subkey sequence of ``for r: key, sub = split(key)`` as one
+    ``(R, 2)`` array — bitwise identical to the host loop's subs (threefry
+    is deterministic), computed in a single device program."""
+    return _iterated_split(key, rounds)
+
+
+def stack_rounds(per_round: Sequence[PyTree]) -> PyTree:
+    """Stack R per-round host pytrees into one pytree of (R, ...) arrays."""
+    if not per_round:
+        raise ValueError("no rounds to stack")
+    return jax.tree_util.tree_map(lambda *xs: np.stack(xs, axis=0),
+                                  *per_round)
+
+
+def schedule_families(schedule) -> tuple[str, ...]:
+    """The static branch tuple of a schedule's ``lax.switch`` dispatch:
+    attack families in first-appearance order (a jit-cache key)."""
+    return tuple(dict.fromkeys(p.attack for p in schedule.phases))
+
+
+def resolve_attack_operands(
+        schedule, rounds: int, *,
+        eta_default: Optional[Callable[[str], float]] = None
+        ) -> tuple[tuple[str, ...], dict, list[tuple[str, Optional[float]]]]:
+    """Resolve an attack schedule into scan operands.
+
+    Returns ``(families, operands, meta)`` where ``operands`` holds
+    ``attack_id (R,) int32`` (index into ``families``) and ``eta (R,)
+    float32``, and ``meta`` is the per-round ``(attack name, raw eta)``
+    list for history records.  ``eta_default(attack)`` fills unset etas;
+    the default mirrors the fed loop's ``jnp.float32(0.0 if eta is None)``
+    convention (the value is only read by the alie/foe branches).
+    """
+    families = schedule_families(schedule)
+    index = {name: i for i, name in enumerate(families)}
+    ids = np.empty((rounds,), np.int32)
+    etas = np.empty((rounds,), np.float32)
+    meta: list[tuple[str, Optional[float]]] = []
+    for r in range(rounds):
+        attack, eta = schedule.resolve(r)
+        ids[r] = index[attack]
+        if eta is not None:
+            etas[r] = eta
+        else:
+            etas[r] = 0.0 if eta_default is None else eta_default(attack)
+        meta.append((attack, eta))
+    return families, {"attack_id": ids, "eta": etas}, meta
+
+
+def cadence_boundaries(rounds: int, *cadences: int) -> tuple[int, ...]:
+    """Every round index where one of the given cadences fires — the scan
+    segments must END there so the host sees the state at exactly the
+    rounds the loop path evaluated at ((r + 1) % cadence == 0)."""
+    cuts: set[int] = set()
+    for every in cadences:
+        if every and every > 0:
+            cuts.update(range(every, rounds + 1, every))
+    return tuple(sorted(cuts))

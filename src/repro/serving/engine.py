@@ -32,13 +32,46 @@ class ServeEngine:
 
     def __post_init__(self):
         self._decode = jax.jit(self.model.decode_step)
+        decode = self.model.decode_step
+
+        def prefill_scan(params, cache: PyTree, prompts: Array):
+            toks = prompts.T[:, :, None].astype(jnp.int32)      # (P, B, 1)
+            pos = jnp.arange(prompts.shape[1], dtype=jnp.int32)
+
+            def step(c, inp):
+                tok, t = inp
+                _, c = decode(params, c, tok, t)
+                return c, None
+
+            # First P-1 tokens emit NO scan outputs (stacking per-step
+            # logits would materialize a (P, B, 1, V) buffer the loop
+            # never held); the last token runs outside the scan so only
+            # its (B, 1, V) logits exist.
+            cache, _ = jax.lax.scan(step, cache, (toks[:-1], pos[:-1]))
+            logits, cache = decode(params, cache, toks[-1], pos[-1])
+            return cache, logits
+
+        self._prefill = jax.jit(prefill_scan)
 
     def init_cache(self) -> PyTree:
         return self.model.init_cache(self.batch_size, self.max_seq)
 
     def prefill(self, cache: PyTree, prompts: Array) -> tuple[PyTree, Array, int]:
-        """Teacher-forced prefill via repeated decode (cache-exact for every
-        family).  prompts: (B, P).  Returns (cache, last logits, prompt len)."""
+        """Teacher-forced prefill as ONE scanned program (cache-exact for
+        every family — the scan body is ``decode_step`` verbatim, so the
+        cache after P scanned tokens is bit-for-bit the cache after P
+        stepped decodes, tested).  prompts: (B, P).  Returns (cache, last
+        logits, prompt len).  One dispatch, not P."""
+        p = prompts.shape[1]
+        if p == 0:                      # the loop's degenerate behavior
+            return cache, None, 0
+        cache, logits = self._prefill(self.params, cache, prompts)
+        return cache, logits, p
+
+    def prefill_loop(self, cache: PyTree, prompts: Array
+                     ) -> tuple[PyTree, Array, int]:
+        """The per-token jitted decode loop the scan replaced — kept as the
+        parity oracle (``tests/test_rounds.py``)."""
         p = prompts.shape[1]
         logits = None
         for t in range(p):
@@ -96,8 +129,12 @@ class FleetService:
     ``repro.fleet.FleetJob``; ``poll`` never blocks.
     """
 
-    def __init__(self, *, max_lanes: Optional[int] = None):
+    def __init__(self, *, max_lanes: Optional[int] = None,
+                 chunk: Optional[int] = None):
         self.max_lanes = max_lanes
+        #: Scan segment length forwarded to every drain's FleetRunner
+        #: (None = each bucket's whole run is one compiled scan program).
+        self.chunk = chunk
         self._tickets: dict[int, FleetTicket] = {}
         self._queue: list[int] = []
         self._next_id = 0
@@ -154,7 +191,8 @@ class FleetService:
         self._queue = []
         jobs = [self._tickets[i].result for i in ids]
         runner = FleetRunner(jobs, max_lanes=self.max_lanes,
-                             compile_cache=self._compile_cache)
+                             compile_cache=self._compile_cache,
+                             chunk=self.chunk)
         before = kdispatch.last_dispatch()
         for i, res in zip(ids, runner.run()):
             self._tickets[i].status = "done"

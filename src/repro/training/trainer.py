@@ -24,6 +24,7 @@ import jax.numpy as jnp
 
 from repro.core import robust as robust_lib
 from repro.core.attacks import apply_attack_tree
+from repro.core.theory import tree_kappa_hat
 from repro.core.types import AggregatorSpec
 from repro.optim import Optimizer, global_norm
 
@@ -90,19 +91,6 @@ def init_state(params: PyTree, optimizer: Optimizer, n_workers: int,
         state["momentum"] = [
             jnp.zeros((n_workers,) + p.shape, jnp.float32) for p in robust]
     return state
-
-
-def _kappa_hat(agg: PyTree, stack: PyTree, n_honest: int) -> Array:
-    """Paper Eq. (26), computed leaf-streamed in fp32."""
-    num = jnp.zeros((), jnp.float32)
-    den = jnp.zeros((), jnp.float32)
-    for a, s in zip(jax.tree_util.tree_leaves(agg),
-                    jax.tree_util.tree_leaves(stack)):
-        h = s[:n_honest].astype(jnp.float32)
-        mbar = h.mean(axis=0)
-        num += jnp.sum((a.astype(jnp.float32) - mbar) ** 2)
-        den += jnp.mean(jnp.sum((h - mbar).reshape(n_honest, -1) ** 2, axis=1))
-    return jnp.sqrt(num / (den + 1e-20))
 
 
 def kappa_hat_masked(agg: PyTree, stack: PyTree, n_honest: Array) -> Array:
@@ -212,7 +200,8 @@ def build_train_step(loss_fn: Callable, optimizer: Optimizer,
             "direction_norm": global_norm(direction),
         }
         if cfg.track_kappa_hat:
-            metrics["kappa_hat"] = _kappa_hat(robust_dir, attacked, n_honest)
+            metrics["kappa_hat"] = tree_kappa_hat(robust_dir, attacked,
+                                                  n_honest)
         return new_state, metrics
 
     return step
@@ -225,13 +214,118 @@ def build_train_step(loss_fn: Callable, optimizer: Optimizer,
 def train_loop(loss_fn, params, batches, optimizer, cfg: TrainerConfig,
                lr_schedule, steps: int, *, seed: int = 0,
                eval_fn: Optional[Callable] = None, eval_every: int = 0,
-               track_best: bool = True):
+               track_best: bool = True, engine: str = "scan",
+               chunk: Optional[int] = None):
     """Runs `steps` iterations; returns (final_params, history dict).
 
     Implements the paper's model selection: for D-GD, theta_hat is the
     iterate with the smallest aggregate norm (Alg. 1); history records
     everything needed for that selection and for accuracy curves.
+
+    ``engine="scan"`` (default) compiles the whole step loop as chunked
+    ``lax.scan`` programs (:mod:`repro.rounds`): batches and PRNG subkeys
+    are stacked up front, metrics accumulate device-side, and the best-
+    iterate selection runs in the scan carry — bit-for-bit the
+    ``engine="loop"`` per-step jit loop (tested), minus R - 1 dispatches.
+    ``chunk`` bounds the scan segment length (None = whole run between
+    eval boundaries); the scan path also returns a ``"scan_report"`` with
+    the engine's compile counters.
     """
+    import numpy as np
+
+    if engine == "loop":
+        return _train_loop_loop(loss_fn, params, batches, optimizer, cfg,
+                                lr_schedule, steps, seed=seed,
+                                eval_fn=eval_fn, eval_every=eval_every,
+                                track_best=track_best)
+    if engine != "scan":
+        raise ValueError(f"engine must be 'scan' or 'loop', got {engine!r}")
+
+    from repro.rounds import (
+        RoundEngine, cadence_boundaries, iterated_split_keys,
+    )
+
+    if steps == 0:
+        first = next(batches) if hasattr(batches, "__next__") else batches
+        n_workers = jax.tree_util.tree_leaves(first)[0].shape[0]
+        state = init_state(params, optimizer, n_workers, cfg)
+        return state["params"], {
+            "history": {"loss": [], "direction_norm": [], "kappa_hat": [],
+                        "eval": [], "eval_step": []},
+            "best": {"norm": np.inf, "params": params, "acc": -np.inf},
+            "state": state,
+            "scan_report": {"trace_count": 0, "chunk_shapes": ()}}
+
+    step_fn = build_train_step(loss_fn, optimizer, cfg, lr_schedule)
+    if hasattr(batches, "__next__"):
+        per_round = [next(batches) for _ in range(steps)]
+        first = per_round[0]
+        stacked = jax.tree_util.tree_map(
+            lambda *xs: np.stack([np.asarray(x) for x in xs]), *per_round)
+    else:
+        first = batches
+        # One batch reused every step (the loop path's non-generator
+        # semantics): a zero-copy broadcast view along the round axis.
+        stacked = jax.tree_util.tree_map(
+            lambda x: np.broadcast_to(np.asarray(x)[None],
+                                      (steps,) + np.shape(x)), batches)
+    n_workers = jax.tree_util.tree_leaves(first)[0].shape[0]
+    state = init_state(params, optimizer, n_workers, cfg)
+    keys = iterated_split_keys(jax.random.PRNGKey(seed), steps)
+
+    def body(carry, op):
+        state, best_norm, best_params = carry
+        prev = state["params"]
+        state, metrics = step_fn(state, op["batch"], op["key"])
+        if track_best:
+            dn = metrics["direction_norm"]
+            better = dn < best_norm
+            # theta_hat is the iterate ENTERING the best step (Alg. 1's
+            # selection), hence prev, not the stepped params.
+            best_params = jax.tree_util.tree_map(
+                lambda new, old: jnp.where(better, new, old),
+                prev, best_params)
+            best_norm = jnp.where(better, dn, best_norm)
+        return (state, best_norm, best_params), metrics
+
+    hist: dict[str, list] = {"loss": [], "direction_norm": [], "kappa_hat": [],
+                             "eval": [], "eval_step": []}
+    best = {"norm": np.inf, "params": params, "acc": -np.inf}
+
+    def on_boundary(end: int, carry):
+        if eval_fn and eval_every and end % eval_every == 0 and end <= steps:
+            acc = float(eval_fn(carry[0]["params"]))
+            hist["eval"].append(acc)
+            hist["eval_step"].append(end)
+            best["acc"] = max(best["acc"], acc)
+
+    eng = RoundEngine(body, chunk=chunk)
+    carry0 = (state, jnp.asarray(np.inf, jnp.float32), params)
+    (state, best_norm, best_params), metrics = eng.run(
+        carry0, {"batch": stacked, "key": keys},
+        boundaries=cadence_boundaries(steps, eval_every if eval_fn else 0),
+        on_boundary=on_boundary)
+
+    hist["loss"] = [float(x) for x in metrics["loss"]]
+    hist["direction_norm"] = [float(x) for x in metrics["direction_norm"]]
+    if "kappa_hat" in metrics:
+        hist["kappa_hat"] = [float(x) for x in metrics["kappa_hat"]]
+    if track_best:
+        best["norm"] = float(best_norm)
+        best["params"] = best_params
+    report = {"trace_count": eng.trace_count,
+              "chunk_shapes": tuple(sorted(eng.chunk_shapes))}
+    return state["params"], {"history": hist, "best": best, "state": state,
+                             "scan_report": report}
+
+
+def _train_loop_loop(loss_fn, params, batches, optimizer, cfg: TrainerConfig,
+                     lr_schedule, steps: int, *, seed: int = 0,
+                     eval_fn: Optional[Callable] = None, eval_every: int = 0,
+                     track_best: bool = True):
+    """The per-step jitted Python loop — one dispatch + host round-trip per
+    step.  The scan engine's parity baseline and the denominator of
+    ``benchmarks/bench_convergence.py``'s rounds/sec speedup."""
     import numpy as np
 
     first = next(batches) if hasattr(batches, "__next__") else batches

@@ -1,0 +1,410 @@
+"""Scan-compiled round engine tests.
+
+The load-bearing property: a scanned run is BIT-FOR-BIT the per-round
+Python loop of the same body — for the lockstep trainer, the fed server
+(partial participation, attack phase transitions mid-chunk, kappa-hat
+on/off), the fleet (lanes x scan == solo scanned runs), and the serving
+prefill (scan == per-token decode loop, per model family).  Plus the
+compile-count contract: one trace per (experiment x chunk shape).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import AggregatorSpec
+from repro.fed import (
+    ClientConfig, FedConfig, FedServer, RotatingByzantine, constant_attack,
+    ramp_eta, run_rounds, switch_attack,
+)
+from repro.fleet import FleetJob, FleetRunner
+from repro.optim import sgd
+from repro.optim.schedules import constant
+from repro.rounds import (
+    RoundEngine, cadence_boundaries, iterated_split_keys, split_segments,
+)
+from repro.training import ByzantineConfig, TrainerConfig, train_loop
+
+_N, _M, _D = 10, 6, 5
+
+
+def _centers(seed, n, d):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.normal(size=(n, d)), jnp.float32)
+
+
+def _quad_loss(centers):
+    def loss_fn(params, batch):
+        c = centers[batch["idx"][0]]
+        return 0.5 * jnp.sum((params["theta"] - c) ** 2), {}
+    return loss_fn
+
+
+def _idx_batch_fn(cohort, n_flip, rng):
+    return {"idx": np.asarray(cohort)[:, None, None]}
+
+
+def _tree_equal(a, b):
+    for x, y in zip(jax.tree_util.tree_leaves(a),
+                    jax.tree_util.tree_leaves(b)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+# ---------------------------------------------------------------------------
+# Engine primitives.
+# ---------------------------------------------------------------------------
+
+def test_split_segments_chunking_and_boundaries():
+    assert split_segments(10, None) == [(0, 10)]
+    assert split_segments(10, 4) == [(0, 4), (4, 8), (8, 10)]
+    assert split_segments(10, None, boundaries=(4, 8)) == \
+        [(0, 4), (4, 8), (8, 10)]
+    assert split_segments(10, 3, boundaries=(5,)) == \
+        [(0, 3), (3, 5), (5, 8), (8, 10)]
+    assert split_segments(10, None, boundaries=(0, 10, 99)) == [(0, 10)]
+    assert split_segments(0, 4) == []
+    with pytest.raises(ValueError):
+        split_segments(10, 0)
+
+
+def test_cadence_boundaries():
+    assert cadence_boundaries(10, 4) == (4, 8)
+    assert cadence_boundaries(10, 4, 5) == (4, 5, 8, 10)
+    assert cadence_boundaries(10, 0) == ()
+
+
+def test_iterated_split_keys_matches_host_loop():
+    key = jax.random.PRNGKey(7)
+    ref = []
+    k = key
+    for _ in range(13):
+        k, sub = jax.random.split(k)
+        ref.append(np.asarray(sub))
+    np.testing.assert_array_equal(np.stack(ref),
+                                  np.asarray(iterated_split_keys(key, 13)))
+
+
+def test_engine_scan_equals_loop_and_counts_traces():
+    def body(carry, op):
+        carry = carry + op["x"]
+        return carry, {"carry": carry, "twice": 2.0 * op["x"]}
+
+    ops = {"x": np.arange(10, dtype=np.float32)}
+    eng = RoundEngine(body, chunk=4)
+    s_final, s_meta = eng.run(jnp.float32(0.0), ops)
+    l_final, l_meta = eng.run_loop(jnp.float32(0.0), ops)
+    assert float(s_final) == float(l_final)
+    np.testing.assert_array_equal(s_meta["carry"], l_meta["carry"])
+    np.testing.assert_array_equal(s_meta["twice"], l_meta["twice"])
+    # chunk=4 over 10 rounds: segment lengths {4, 2} — exactly 2 traces.
+    assert eng.trace_count == 2 and eng.chunk_shapes == {4, 2}
+    eng.run(jnp.float32(1.0), ops)      # same shapes: no retrace
+    assert eng.trace_count == 2
+
+
+def test_engine_boundary_hook_sees_carry_state():
+    seen = []
+
+    def body(c, op):
+        return c + op["x"], {"c": c}
+
+    eng = RoundEngine(body, chunk=None)
+    eng.run(jnp.float32(0.0), {"x": np.ones(6, np.float32)},
+            boundaries=(2, 4), on_boundary=lambda e, c: seen.append(
+                (e, float(c))))
+    assert seen == [(2, 2.0), (4, 4.0), (6, 6.0)]
+
+
+# ---------------------------------------------------------------------------
+# Trainer: scan == loop bit-for-bit.
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("algorithm,attack,track", [
+    ("dshb", "alie", True), ("dgd", "sf", True), ("dshb", "none", False)])
+def test_train_loop_scan_matches_loop(algorithm, attack, track):
+    n, f, d, steps = 8, 2, 6, 12
+    loss_fn = _quad_loss(_centers(0, n, d))
+    cfg = TrainerConfig(algorithm=algorithm,
+                        agg=AggregatorSpec(rule="cwtm", f=f, pre="nnm"),
+                        byz=ByzantineConfig(f=f, attack=attack, eta=3.0),
+                        track_kappa_hat=track)
+    params = {"theta": jnp.zeros((d,), jnp.float32)}
+    batch = {"idx": np.arange(n)[:, None]}
+    outs = {}
+    for engine in ("loop", "scan"):
+        outs[engine] = train_loop(loss_fn, params, batch, sgd(clip=1.0),
+                                  cfg, constant(0.1), steps, seed=3,
+                                  engine=engine, chunk=5)
+    (p_l, o_l), (p_s, o_s) = outs["loop"], outs["scan"]
+    _tree_equal(p_l, p_s)
+    assert o_l["history"]["loss"] == o_s["history"]["loss"]
+    assert o_l["history"]["direction_norm"] == o_s["history"]["direction_norm"]
+    assert o_l["history"]["kappa_hat"] == o_s["history"]["kappa_hat"]
+    assert (len(o_s["history"]["kappa_hat"]) > 0) == track
+    assert o_l["best"]["norm"] == o_s["best"]["norm"]
+    _tree_equal(o_l["best"]["params"], o_s["best"]["params"])
+    _tree_equal(o_l["state"], o_s["state"])
+    # 12 steps in chunks of 5: lengths {5, 2} — exactly two traces.
+    assert o_s["scan_report"] == {"trace_count": 2, "chunk_shapes": (2, 5)}
+
+
+def test_train_loop_scan_generator_batches_and_eval_cadence():
+    n, d, steps = 6, 4, 9
+    loss_fn = _quad_loss(_centers(1, n, d))
+    cfg = TrainerConfig(algorithm="dshb",
+                        agg=AggregatorSpec(rule="average", f=0, pre=None),
+                        byz=ByzantineConfig(f=0))
+    params = {"theta": jnp.zeros((d,), jnp.float32)}
+
+    def gen():
+        rng = np.random.default_rng(5)
+        while True:
+            yield {"idx": rng.integers(0, n, size=(n, 1))}
+
+    def eval_fn(p):
+        return -jnp.sum(p["theta"] ** 2)
+
+    outs = {}
+    for engine in ("loop", "scan"):
+        outs[engine] = train_loop(loss_fn, params, gen(), sgd(), cfg,
+                                  constant(0.1), steps, seed=0,
+                                  eval_fn=eval_fn, eval_every=4,
+                                  engine=engine)
+    _, o_l = outs["loop"]
+    _, o_s = outs["scan"]
+    assert o_l["history"]["loss"] == o_s["history"]["loss"]
+    assert o_l["history"]["eval"] == o_s["history"]["eval"]
+    assert o_l["history"]["eval_step"] == o_s["history"]["eval_step"] == [4, 8]
+    assert o_l["best"]["acc"] == o_s["best"]["acc"]
+
+
+def test_train_loop_scan_one_compile_per_chunk_shape():
+    """The acceptance assertion: a 100-round scanned run compiles once per
+    chunk shape — once total when the chunk divides the horizon."""
+    n, d = 6, 4
+    loss_fn = _quad_loss(_centers(2, n, d))
+    cfg = TrainerConfig(algorithm="dshb",
+                        agg=AggregatorSpec(rule="cwtm", f=2, pre="nnm"),
+                        byz=ByzantineConfig(f=2, attack="alie", eta=2.0))
+    params = {"theta": jnp.zeros((d,), jnp.float32)}
+    batch = {"idx": np.arange(n)[:, None]}
+    _, whole = train_loop(loss_fn, params, batch, sgd(), cfg, constant(0.1),
+                          100, engine="scan", chunk=None)
+    assert whole["scan_report"] == {"trace_count": 1, "chunk_shapes": (100,)}
+    _, even = train_loop(loss_fn, params, batch, sgd(), cfg, constant(0.1),
+                         100, engine="scan", chunk=25)
+    assert even["scan_report"] == {"trace_count": 1, "chunk_shapes": (25,)}
+    _, ragged = train_loop(loss_fn, params, batch, sgd(), cfg, constant(0.1),
+                           100, engine="scan", chunk=32)
+    assert ragged["scan_report"] == {"trace_count": 2,
+                                     "chunk_shapes": (4, 32)}
+    assert whole["history"]["loss"] == even["history"]["loss"] \
+        == ragged["history"]["loss"]
+
+
+# ---------------------------------------------------------------------------
+# Fed server: scan == loop bit-for-bit.
+# ---------------------------------------------------------------------------
+
+def _fed_setup(f, *, local_steps=0, algorithm="dshb", track=True):
+    loss_fn = _quad_loss(_centers(0, _N, _D))
+    cfg = FedConfig(n_clients=_N, clients_per_round=_M, f=f,
+                    agg=AggregatorSpec(rule="cwtm", f=f, pre="nnm"),
+                    client=ClientConfig(local_steps=local_steps,
+                                        local_lr=0.05, algorithm=algorithm),
+                    track_kappa_hat=track)
+    return loss_fn, cfg
+
+
+@pytest.mark.parametrize("sched,f,kw", [
+    (constant_attack("alie", 3.0), 2, {}),
+    (switch_attack((0, "none"), (3, "sf"), (7, "alie", 2.0)), 2, {}),
+    (ramp_eta("foe", 1.0, 6.0, 4), 3, {}),
+    (constant_attack("lf"), 3, {}),
+    (constant_attack("alie_opt"), 2, {}),
+    (constant_attack("none"), 0, {}),
+    (constant_attack("mimic"), 2, {"local_steps": 2}),
+    (constant_attack("alie", 4.0), 2, {"track": False}),
+], ids=["alie", "switch-midchunk", "ramp", "lf", "opt", "clean",
+        "mimic-localsgd", "no-kappa"])
+def test_run_rounds_scan_matches_loop(sched, f, kw):
+    """Partial participation (m < n), rotating identities, every schedule
+    shape — chunk=4 puts the round-3 and round-7 phase switches MID-chunk."""
+    loss_fn, cfg = _fed_setup(f, **kw)
+    rounds = 10
+    out = {}
+    for engine in ("loop", "scan"):
+        server = FedServer(loss_fn, sgd(clip=1.0), cfg, constant(0.1))
+        state = server.init_state({"theta": jnp.zeros((_D,), jnp.float32)})
+        byz = RotatingByzantine(_N, f, period=3) if f else None
+        out[engine] = run_rounds(server, state, _idx_batch_fn, rounds,
+                                 schedule=sched, byz_identity=byz, seed=7,
+                                 engine=engine, chunk=4)
+        if engine == "scan":
+            assert server.last_scan_report["trace_count"] == 2
+            assert server.last_scan_report["chunk_shapes"] == (2, 4)
+    (s_l, h_l), (s_s, h_s) = out["loop"], out["scan"]
+    _tree_equal(s_l, s_s)
+    assert h_l.loss == h_s.loss
+    assert h_l.direction_norm == h_s.direction_norm
+    assert h_l.kappa_hat == h_s.kappa_hat
+    assert (len(h_s.kappa_hat) > 0) == kw.get("track", True)
+    assert h_l.lr == h_s.lr
+    assert h_l.attack == h_s.attack and h_l.eta == h_s.eta
+    assert h_l.m_byz == h_s.m_byz and h_l.f_round == h_s.f_round
+    for a, b in zip(h_l.cohorts, h_s.cohorts):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_fed_scan_engine_cached_across_runs():
+    """A server re-running the same schedule skeleton re-traces nothing;
+    a 100-round run with chunk=25 is exactly one compile."""
+    loss_fn, cfg = _fed_setup(2)
+    server = FedServer(loss_fn, sgd(clip=1.0), cfg, constant(0.1))
+    sched = constant_attack("alie", 3.0)
+    for new_traces in (1, 0):      # second run: full cache hit
+        state = server.init_state({"theta": jnp.zeros((_D,), jnp.float32)})
+        _, hist = run_rounds(server, state, _idx_batch_fn, 100,
+                             schedule=sched, seed=1, chunk=25)
+        assert hist.rounds == 100
+        assert server.last_scan_report == {"trace_count": new_traces,
+                                           "total_trace_count": 1,
+                                           "chunk_shapes": (25,)}
+
+
+# ---------------------------------------------------------------------------
+# Fleet: B-lane scanned bucket == solo scanned runs, bit for bit.
+# ---------------------------------------------------------------------------
+
+_OPT = sgd(clip=1.0)
+_CENTERS = _centers(0, _N, _D)
+_FLEET_LOSS = _quad_loss(_CENTERS)
+
+
+def _job(label, *, f=2, schedule=None, seed=0, rounds=5, local_steps=0,
+         eval_every=0):
+    cfg = FedConfig(n_clients=_N, clients_per_round=_M, f=f,
+                    agg=AggregatorSpec(rule="cwtm", f=f, pre="nnm"),
+                    client=ClientConfig(local_steps=local_steps,
+                                        local_lr=0.05, algorithm="dshb"))
+    # Jobs sharing a bucket must share the loss OBJECT (bucket-key
+    # material), hence the module-level _FLEET_LOSS.
+    job = FleetJob(label=label, cfg=cfg, loss_fn=_FLEET_LOSS, optimizer=_OPT,
+                   params={"theta": jnp.zeros((_D,), jnp.float32)},
+                   batch_fn=_idx_batch_fn, rounds=rounds, seed=seed,
+                   schedule=schedule or constant_attack("none"),
+                   lr_fn=lambda r: 0.1)
+    if eval_every:
+        job.eval_every = eval_every
+        job.eval_fn = lambda p: -jnp.sum(p["theta"] ** 2)
+    return job
+
+
+def test_fleet_lanes_scan_equals_solo_scan():
+    jobs = [
+        _job("alie", f=2, schedule=constant_attack("alie", 3.0), seed=0),
+        _job("switch", f=2,
+             schedule=switch_attack((0, "none"), (2, "mimic")), seed=1),
+        _job("short", f=3, schedule=constant_attack("sf"), seed=2,
+             rounds=3),                       # active freeze mid-scan
+        _job("evald", f=2, schedule=constant_attack("alie", 2.0), seed=3,
+             eval_every=2),                   # eval boundary cuts the scan
+    ]
+    runner = FleetRunner(jobs, chunk=None)
+    fleet = runner.run()
+    assert runner.n_buckets == 1
+    # 5 rounds cut at eval boundaries {2, 4}: segments (2, 2, 1) — two
+    # DISTINCT segment lengths, so exactly two traces.
+    assert runner.trace_count == 2
+
+    for job, res in zip(jobs, fleet):
+        solo = FleetRunner([job], chunk=None).run()[0]
+        assert solo.history.rounds == res.history.rounds == job.rounds
+        assert solo.history.loss == res.history.loss
+        assert solo.history.kappa_hat == res.history.kappa_hat
+        assert solo.history.direction_norm == res.history.direction_norm
+        assert solo.evals == res.evals
+        _tree_equal(solo.state, res.state)
+
+
+def test_fleet_chunk_is_bucket_key_material():
+    from repro.fleet import bucket_key
+    job = _job("a")
+    assert bucket_key(job, chunk=None) != bucket_key(job, chunk=8)
+    r_whole = FleetRunner([_job("a", seed=0, rounds=6)], chunk=None)
+    r_chunk = FleetRunner([_job("a", seed=0, rounds=6)], chunk=2)
+    res_w, res_c = r_whole.run()[0], r_chunk.run()[0]
+    assert r_whole.trace_count == 1          # one 6-round program
+    assert r_chunk.trace_count == 1          # one 2-round program, 3 calls
+    assert res_w.history.loss == res_c.history.loss
+    _tree_equal(res_w.state, res_c.state)
+
+
+def test_fleet_100_rounds_one_compile_per_chunk_shape():
+    runner = FleetRunner([_job("a", seed=0, rounds=100),
+                          _job("b", seed=1, rounds=100,
+                               schedule=constant_attack("alie", 3.0))],
+                         chunk=25)
+    res = runner.run()
+    assert runner.n_buckets == 1 and runner.trace_count == 1
+    assert all(r.history.rounds == 100 for r in res)
+
+
+# ---------------------------------------------------------------------------
+# Serving prefill: scanned == per-token loop, per model family.
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("arch", ["qwen2-7b", "mixtral-8x22b",
+                                  "internvl2-2b", "rwkv6-3b", "zamba2-2.7b",
+                                  "whisper-base"])
+def test_prefill_scan_matches_loop(arch):
+    """The scanned prefill must be cache-exact vs the per-token decode loop
+    for every model family (dense / moe / vlm / ssm / hybrid / encdec)."""
+    from repro.configs import reduced_config
+    from repro.models import build_model
+    from repro.serving import ServeEngine
+
+    B, P = 2, 7
+    cfg = reduced_config(arch)
+    model = build_model(cfg)
+    key = jax.random.PRNGKey(4)
+    params = model.init(key)
+    prompts = jax.random.randint(key, (B, P), 0, cfg.vocab_size)
+    eng = ServeEngine(model, params, batch_size=B, max_seq=16)
+    if cfg.family == "encdec":
+        frames = jax.random.normal(key, (B, cfg.encoder_seq, cfg.d_model))
+        cache0 = model.prefill_cache(params, frames, B, 16)
+    else:
+        cache0 = eng.init_cache()
+    cache_l, logits_l, p_l = eng.prefill_loop(cache0, prompts)
+    cache_s, logits_s, p_s = eng.prefill(cache0, prompts)
+    assert p_l == p_s == P
+    np.testing.assert_array_equal(np.asarray(logits_l),
+                                  np.asarray(logits_s))
+    _tree_equal(cache_l, cache_s)
+
+
+def test_generate_uses_scanned_prefill():
+    """End-to-end: generate() over the scanned prefill still produces the
+    same tokens as a generate over the loop prefill."""
+    from repro.configs import reduced_config
+    from repro.models import build_model
+    from repro.serving import ServeEngine
+
+    cfg = reduced_config("qwen2-7b")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    prompts = jax.random.randint(jax.random.PRNGKey(1), (2, 5), 0,
+                                 cfg.vocab_size)
+    eng = ServeEngine(model, params, batch_size=2, max_seq=12)
+    toks_scan = eng.generate(prompts, max_new=4)
+
+    cache, logits, p = eng.prefill_loop(eng.init_cache(), prompts)
+    cur = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+    ref = [cur]
+    for i in range(3):
+        logits, cache = eng._decode(eng.params, cache, cur, jnp.int32(p + i))
+        cur = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+        ref.append(cur)
+    np.testing.assert_array_equal(
+        toks_scan, np.concatenate([np.asarray(t) for t in ref], axis=1))
