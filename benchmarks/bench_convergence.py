@@ -84,7 +84,7 @@ def main(fast: bool = True):
 # Round-engine throughput smoke: scan vs per-round loop, trainer + fed.
 # ---------------------------------------------------------------------------
 
-def _trainer_candidates(steps: int, n=12, f=3, d=16, seed=0):
+def _trainer_candidates(steps: int, n=12, f=3, d=16, seed=0, taps=False):
     """(scan, loop) thunks for the lockstep trainer, sharing one compile
     cache each: RoundEngine.run vs RoundEngine.run_loop over the SAME
     body, so the ratio isolates per-round dispatch + host round-trips."""
@@ -100,7 +100,8 @@ def _trainer_candidates(steps: int, n=12, f=3, d=16, seed=0):
 
     cfg = TrainerConfig(algorithm="dshb",
                         agg=AggregatorSpec(rule="cwtm", f=f, pre="nnm"),
-                        byz=ByzantineConfig(f=f, attack="alie", eta=3.0))
+                        byz=ByzantineConfig(f=f, attack="alie", eta=3.0),
+                        taps=taps)
     optimizer = sgd(clip=1.0)
     step = build_train_step(loss_fn, optimizer, cfg, constant(0.1))
 
@@ -204,15 +205,79 @@ def rounds_smoke(json_out: str | None = None, *, rounds: int = 150) -> dict:
     return out
 
 
+# ---------------------------------------------------------------------------
+# Observability overhead smoke: health taps on vs off, scanned trainer.
+# ---------------------------------------------------------------------------
+
+def obs_smoke(json_out: str | None = None, *, rounds: int = 150,
+              d: int = 256) -> dict:
+    """Taps-overhead contract for ``scripts/perf_gate.py --obs``.
+
+    Both candidates are the SAME scanned trainer (cwtm + NNM — the
+    tap-heaviest config: per-coordinate trim fractions AND the mixing-mass
+    family); the only difference is ``TrainerConfig.taps``.  The gate
+    demands the tapped run keep >= 0.9x the untapped rounds/sec (median of
+    interleaved per-rep ratios, machine-normalized) and that BOTH surfaces
+    compile exactly once — taps ride the existing once-per-segment metrics
+    transfer, so a second trace or transfer is a wiring bug, not noise.
+
+    ``d=256`` (vs the throughput smoke's toy d=16) puts the round in the
+    compute-dominated regime the contract is about: taps reuse the
+    aggregation's O(n^2 d) intermediates (``internals`` threading, see
+    repro.obs.taps), so their remaining cost is a FIXED O(n^2 + n d)
+    epilogue — pure per-op constants at d=16 (~15% there), noise at any
+    realistic model size.  A regression that re-grows with d (a broken
+    internals hand-off recomputing the gram/mix/sort) drags the d=256
+    ratio far below 0.9 and trips the gate.
+    """
+    on, _, eng_on = _trainer_candidates(rounds, d=d, taps=True)
+    off, _, eng_off = _trainer_candidates(rounds, d=d, taps=False)
+    t_off, t_on = _timed_interleaved([off, on])
+
+    out = {
+        "rounds": rounds,
+        "d": d,
+        "taps_rounds_per_s_on": rounds / _median(t_on),
+        "taps_rounds_per_s_off": rounds / _median(t_off),
+        # Median of PER-REP off/on ratios: >= 0.9 means taps cost <= ~10%.
+        "taps_speed_ratio": _median([o / t for o, t in zip(t_off, t_on)]),
+        "compile_count_taps_on": eng_on.trace_count,
+        "compile_count_taps_off": eng_off.trace_count,
+        # Host-transfer parity: taps must NOT add device_get round-trips.
+        "transfers_taps_on": eng_on.transfer_count,
+        "transfers_taps_off": eng_off.transfer_count,
+    }
+    assert out["compile_count_taps_on"] == 1, eng_on.trace_count
+    assert out["compile_count_taps_off"] == 1, eng_off.trace_count
+    assert out["transfers_taps_on"] == out["transfers_taps_off"], out
+
+    emit("obs_taps_on", _median(t_on) / rounds * 1e6,
+         f"rounds_per_s={out['taps_rounds_per_s_on']:.1f}")
+    emit("obs_taps_off", _median(t_off) / rounds * 1e6,
+         f"rounds_per_s={out['taps_rounds_per_s_off']:.1f}")
+    emit("obs_taps_ratio", 0.0,
+         f"x{out['taps_speed_ratio']:.3f},compiles=1+1")
+
+    if json_out:
+        with open(json_out, "w") as fh:
+            json.dump(out, fh, indent=2, sort_keys=True)
+        print(f"wrote {json_out}")
+    return out
+
+
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--smoke", action="store_true",
                     help="round-engine throughput smoke only; writes "
                          "--json-out")
+    ap.add_argument("--obs-smoke", action="store_true",
+                    help="health-tap overhead smoke only; writes --json-out")
     ap.add_argument("--json-out", default="BENCH_rounds.json")
     args = ap.parse_args()
     if args.smoke:
         rounds_smoke(json_out=args.json_out)
+    elif args.obs_smoke:
+        obs_smoke(json_out=args.json_out)
     else:
         main(fast=not args.full)

@@ -53,6 +53,16 @@ Round-engine hard gates (``--rounds``; from
   interleaved per-rep ratios, machine-normalized, so the floor is
   absolute).
 
+Observability hard gates (``--obs``; from
+``benchmarks/bench_convergence.py --obs-smoke``):
+
+* ``taps_speed_ratio``       >= 0.9 — the tapped scan keeps at least 90%
+  of the untapped rounds/sec (absolute floor, machine-normalized);
+* ``compile_count_taps_on`` / ``compile_count_taps_off`` <= baseline (1)
+  — taps are static bucket-key material, one compile per flavor;
+* ``transfers_taps_on``      <= baseline — taps add ZERO host transfers
+  (they ride the existing once-per-segment metrics device_get).
+
 Interpret-mode quarantine: Pallas timings measured off-TPU live under the
 JSON's ``"interpret"`` key and CANNOT be gated — any gated key found only
 there is a hard configuration error, so interpreter numbers can never
@@ -102,6 +112,17 @@ ROUNDS_GATES = (("compile_count_trainer_scan", "max"),
                 ("compile_count_fed_scan", "max"),
                 ("trainer_scan_speedup", "min_5"),
                 ("fed_scan_speedup", "min_5"))
+
+#: observability gates (BENCH_obs.json from bench_convergence.py
+#: --obs-smoke): health taps must stay cheap ON (tapped scan >= 0.9x the
+#: untapped rounds/sec; median of interleaved per-rep ratios, machine-
+#: normalized, so the 0.9 floor is absolute) and FREE off — both surfaces
+#: compile exactly once, and the tapped run adds zero host transfers
+#: (taps ride the existing once-per-segment metrics device_get).
+OBS_GATES = (("taps_speed_ratio", "min_0.9"),
+             ("compile_count_taps_on", "max"),
+             ("compile_count_taps_off", "max"),
+             ("transfers_taps_on", "max"))
 
 
 def _gated_value(doc: dict, key: str, path: str):
@@ -184,12 +205,17 @@ def main() -> int:
                     help="JSON from bench_convergence.py --smoke")
     ap.add_argument("--rounds-baseline",
                     default="benchmarks/baselines/BENCH_rounds.json")
+    ap.add_argument("--obs", default=None,
+                    help="JSON from bench_convergence.py --obs-smoke")
+    ap.add_argument("--obs-baseline",
+                    default="benchmarks/baselines/BENCH_obs.json")
     args = ap.parse_args()
 
     if args.current is None and args.agg_cost is None \
-            and args.dist_agg is None and args.rounds is None:
+            and args.dist_agg is None and args.rounds is None \
+            and args.obs is None:
         print("perf gate: nothing to check (pass a fleet JSON, --agg-cost, "
-              "--dist-agg and/or --rounds)", file=sys.stderr)
+              "--dist-agg, --rounds and/or --obs)", file=sys.stderr)
         return 2
 
     failures: list = []
@@ -223,6 +249,13 @@ def main() -> int:
             rounds_base = json.load(fh)
         check_gate_table(ROUNDS_GATES, rounds_cur, rounds_base, args.rounds,
                          failures)
+
+    if args.obs is not None:
+        with open(args.obs) as fh:
+            obs_cur = json.load(fh)
+        with open(args.obs_baseline) as fh:
+            obs_base = json.load(fh)
+        check_gate_table(OBS_GATES, obs_cur, obs_base, args.obs, failures)
 
     if failures:
         print(f"perf gate FAILED: {', '.join(failures)} regressed",

@@ -12,27 +12,31 @@ from typing import Any
 import jax
 import numpy as np
 
+from repro.obs import runtime as obs_runtime
+
 PyTree = Any
 _SEP = "::"
 
 
 def save_checkpoint(path: str, tree: PyTree, step: int | None = None) -> None:
     flat, _ = jax.tree_util.tree_flatten_with_path(tree)
-    data = {}
-    for keypath, leaf in flat:
-        data[jax.tree_util.keystr(keypath)] = np.asarray(leaf)
-    if step is not None:
-        data[f"{_SEP}step"] = np.asarray(step)
-    tmp = path + ".tmp"
-    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
-    with open(tmp, "wb") as fh:
-        np.savez(fh, **data)
-    os.replace(tmp, path)
+    with obs_runtime.span("checkpoint.save", path=path, leaves=len(flat),
+                          step=step):
+        data = {}
+        for keypath, leaf in flat:
+            data[jax.tree_util.keystr(keypath)] = np.asarray(leaf)
+        if step is not None:
+            data[f"{_SEP}step"] = np.asarray(step)
+        tmp = path + ".tmp"
+        os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+        with open(tmp, "wb") as fh:
+            np.savez(fh, **data)
+        os.replace(tmp, path)
 
 
 def load_checkpoint(path: str, like: PyTree) -> tuple[PyTree, int | None]:
     """Restore into the structure (and dtypes) of ``like``."""
-    with np.load(path) as data:
+    with obs_runtime.span("checkpoint.load", path=path), np.load(path) as data:
         flat, treedef = jax.tree_util.tree_flatten_with_path(like)
         leaves = []
         for keypath, leaf in flat:

@@ -115,8 +115,14 @@ def tree_mix(tree: PyTree, m: Array) -> PyTree:
     return jax.tree_util.tree_map(mix, tree)
 
 
-def _tree_coordinate_rule(tree: PyTree, rule: str, f: int) -> PyTree:
-    """Apply a coordinate-wise rule along the worker axis of every leaf."""
+def _tree_coordinate_rule(tree: PyTree, rule: str, f: int,
+                          internals: Optional[dict] = None) -> PyTree:
+    """Apply a coordinate-wise rule along the worker axis of every leaf.
+
+    ``internals`` (taps support, see :mod:`repro.obs.taps`): when a dict is
+    passed, cwtm stashes its per-leaf sorted stacks under
+    ``"sorted_leaves"`` (tree_leaves order) so diagnostics reuse the sort
+    instead of re-emitting it."""
     def apply(leaf):
         n = leaf.shape[0]
         x = leaf.astype(jnp.float32)
@@ -127,6 +133,8 @@ def _tree_coordinate_rule(tree: PyTree, rule: str, f: int) -> PyTree:
                 out = x.mean(axis=0)
             else:
                 xs = jnp.sort(x, axis=0)
+                if internals is not None:
+                    internals.setdefault("sorted_leaves", []).append(xs)
                 out = jax.lax.slice_in_dim(xs, f, n - f, axis=0).mean(axis=0)
         elif rule == "meamed":
             med = jnp.median(x, axis=0, keepdims=True)
@@ -170,7 +178,8 @@ def _tree_bucket(tree: PyTree, f: int, key: Array,
 def _aggregate_flat(work: PyTree, spec: AggregatorSpec, f, *,
                     key: Optional[Array], return_coeff: bool,
                     dyn: bool, backend: str = "pallas",
-                    mesh_ctx: Optional[tuple] = None) -> PyTree:
+                    mesh_ctx: Optional[tuple] = None,
+                    internals: Optional[dict] = None) -> PyTree:
     """Kernel-backend pipeline: pre-aggregated stack -> one contiguous
     (n, D) buffer -> blocked gram -> coeff -> streamed combine / fused
     mixtrim -> aggregated pytree.
@@ -205,6 +214,8 @@ def _aggregate_flat(work: PyTree, spec: AggregatorSpec, f, *,
         d2 = gramlib.pdist_sq_from_gram(g)
         mix_matrix = gramlib.nnm_matrix_dyn(d2, f) if dyn \
             else gramlib.nnm_matrix(d2, f)
+        if internals is not None:
+            internals["mix_matrix"] = mix_matrix
         g = gramlib.mixed_gram(g, mix_matrix)
 
     if spec.rule in GRAM_RULES:
@@ -275,13 +286,24 @@ def _open_routed_record(spec: AggregatorSpec, *, dyn: bool
 
 def robust_aggregate(tree: PyTree, spec: AggregatorSpec, *,
                      key: Optional[Array] = None,
-                     return_coeff: bool = False) -> PyTree:
+                     return_coeff: bool = False,
+                     internals: Optional[dict] = None) -> PyTree:
     """Full distributed pipeline: pre-aggregation + rule on a worker-stacked
     pytree.  Returns the aggregated pytree (worker axis removed).
 
     With ``return_coeff=True`` additionally returns the effective linear
     coefficient vector when one exists (gram rules), else None — used by the
     kappa-hat diagnostics.
+
+    ``internals`` (taps support): pass an empty dict and the pipeline
+    stashes its reusable intermediates into it — ``"mix_matrix"`` (the
+    fp32 NNM matrix), and on the XLA backend also ``"mixed"`` (the
+    NNM-mixed worker stack) and ``"sorted_leaves"`` (cwtm's per-leaf
+    sorted stacks).  :func:`repro.obs.taps.health_taps` consumes these so
+    tapped rounds never recompute the O(n^2 d) passes (relying on XLA CSE
+    instead is NOT sufficient: inside ``lax.scan`` bodies the duplicated
+    NNM construction fuses per-consumer before CSE can merge the dominant
+    sort/dot ops — measured at ~2x round cost).
 
     Execution routes through the kernel backend layer per
     ``spec.backend`` (see :mod:`repro.kernels.dispatch`).
@@ -305,7 +327,8 @@ def robust_aggregate(tree: PyTree, spec: AggregatorSpec, *,
     if backend in ("pallas", "pallas_sharded"):
         return _aggregate_flat(work, spec, f, key=key,
                                return_coeff=return_coeff, dyn=False,
-                               backend=backend, mesh_ctx=mesh_ctx)
+                               backend=backend, mesh_ctx=mesh_ctx,
+                               internals=internals)
     kdispatch.record_decision("pipeline", "xla", "xla",
                               "leaf-streamed jnp path (GSPMD-friendly)")
 
@@ -317,6 +340,8 @@ def robust_aggregate(tree: PyTree, spec: AggregatorSpec, *,
     if spec.pre == "nnm":
         d2 = gramlib.pdist_sq_from_gram(g)
         mix_matrix = gramlib.nnm_matrix(d2, f)
+        if internals is not None:
+            internals["mix_matrix"] = mix_matrix
         # Gram of the mixed stack is M G M^T — free, no second data pass.
         g = gramlib.mixed_gram(g, mix_matrix)
 
@@ -331,7 +356,9 @@ def robust_aggregate(tree: PyTree, spec: AggregatorSpec, *,
     if spec.rule in COORDINATE_RULES:
         if mix_matrix is not None:
             work = tree_mix(work, mix_matrix)
-        out = _tree_coordinate_rule(work, spec.rule, f)
+            if internals is not None:
+                internals["mixed"] = work
+        out = _tree_coordinate_rule(work, spec.rule, f, internals=internals)
         if return_coeff:
             return out, None
         return out
@@ -348,7 +375,8 @@ def robust_aggregate(tree: PyTree, spec: AggregatorSpec, *,
 # lane axis.
 # ---------------------------------------------------------------------------
 
-def _tree_coordinate_rule_dyn(tree: PyTree, rule: str, f: Array) -> PyTree:
+def _tree_coordinate_rule_dyn(tree: PyTree, rule: str, f: Array,
+                              internals: Optional[dict] = None) -> PyTree:
     """Coordinate-wise rules with a traced trim count."""
     def apply(leaf):
         n = leaf.shape[0]
@@ -358,6 +386,8 @@ def _tree_coordinate_rule_dyn(tree: PyTree, rule: str, f: Array) -> PyTree:
         i = jnp.arange(n).reshape((-1,) + (1,) * (leaf.ndim - 1))
         if rule == "cwtm":
             xs = jnp.sort(x, axis=0)
+            if internals is not None:
+                internals.setdefault("sorted_leaves", []).append(xs)
             keep = ((i >= f) & (i < n - f)).astype(jnp.float32)
             return (xs * keep).sum(axis=0) / jnp.maximum(
                 (n - 2 * f).astype(jnp.float32), 1.0)
@@ -402,13 +432,15 @@ def _tree_bucket_dyn(tree: PyTree, f: Array, key: Array,
 
 
 def robust_aggregate_dyn(tree: PyTree, spec: AggregatorSpec, f: Array, *,
-                         key: Optional[Array] = None) -> PyTree:
+                         key: Optional[Array] = None,
+                         internals: Optional[dict] = None) -> PyTree:
     """`robust_aggregate` with a TRACED Byzantine count.
 
     ``spec.f`` is ignored; ``f`` (an int32 scalar, possibly a vmap tracer)
     takes its place.  ``spec.pre == "bucketing"`` requires an explicit
     ``spec.bucket_size``.  MDA has no dynamic form (see
-    :func:`repro.core.gram.coeff_for_rule_dyn`).
+    :func:`repro.core.gram.coeff_for_rule_dyn`).  ``internals`` as in
+    :func:`robust_aggregate`.
     """
     f = jnp.asarray(f, jnp.int32)
     work = tree
@@ -431,7 +463,8 @@ def robust_aggregate_dyn(tree: PyTree, spec: AggregatorSpec, f: Array, *,
     backend, mesh_ctx = _open_routed_record(spec, dyn=True)
     if backend in ("pallas", "pallas_sharded"):
         return _aggregate_flat(work, spec, f, key=key, return_coeff=False,
-                               dyn=True, backend=backend, mesh_ctx=mesh_ctx)
+                               dyn=True, backend=backend, mesh_ctx=mesh_ctx,
+                               internals=internals)
     kdispatch.record_decision("pipeline", "xla", "xla",
                               "leaf-streamed jnp path (GSPMD-friendly)")
 
@@ -443,6 +476,8 @@ def robust_aggregate_dyn(tree: PyTree, spec: AggregatorSpec, f: Array, *,
     if spec.pre == "nnm":
         d2 = gramlib.pdist_sq_from_gram(g)
         mix_matrix = gramlib.nnm_matrix_dyn(d2, f)
+        if internals is not None:
+            internals["mix_matrix"] = mix_matrix
         g = gramlib.mixed_gram(g, mix_matrix)
 
     if spec.rule in GRAM_RULES:
@@ -456,7 +491,10 @@ def robust_aggregate_dyn(tree: PyTree, spec: AggregatorSpec, f: Array, *,
     if spec.rule in COORDINATE_RULES:
         if mix_matrix is not None:
             work = tree_mix(work, mix_matrix)
-        return _tree_coordinate_rule_dyn(work, spec.rule, f)
+            if internals is not None:
+                internals["mixed"] = work
+        return _tree_coordinate_rule_dyn(work, spec.rule, f,
+                                         internals=internals)
 
     raise ValueError(f"unknown rule {spec.rule!r}")
 

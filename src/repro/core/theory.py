@@ -101,13 +101,18 @@ def resilience_lower_bound(n: int, f: int, g_sq: float) -> float:
     return f / (4.0 * (n - 2 * f)) * g_sq
 
 
-def tree_kappa_hat(agg, stack, n_honest: int):
+def tree_kappa_hat(agg, stack, n_honest: int, internals=None):
     """Paper Eq. (26) over worker-stacked pytrees, leaf-streamed in fp32.
 
     ``stack`` leaves carry a leading worker axis; the first ``n_honest``
     rows are the honest workers.  This is the shared estimator of the
     lockstep trainer and the fed server (both record it per round/step);
     :func:`empirical_kappa_hat` below is the single-(n, d)-stack form.
+
+    ``internals`` (taps support, see :mod:`repro.obs.taps`): when a dict
+    is passed, the squared distance ``num`` and the per-leaf honest means
+    are stashed (``"honest_sq_dist"`` / ``"honest_mean_leaves"``) so the
+    health taps reuse this traversal instead of re-walking the stack.
     """
     num = jnp.zeros((), jnp.float32)
     den = jnp.zeros((), jnp.float32)
@@ -115,8 +120,12 @@ def tree_kappa_hat(agg, stack, n_honest: int):
                     jax.tree_util.tree_leaves(stack)):
         h = s[:n_honest].astype(jnp.float32)
         mbar = h.mean(axis=0)
+        if internals is not None:
+            internals.setdefault("honest_mean_leaves", []).append(mbar)
         num += jnp.sum((a.astype(jnp.float32) - mbar) ** 2)
         den += jnp.mean(jnp.sum((h - mbar).reshape(n_honest, -1) ** 2, axis=1))
+    if internals is not None:
+        internals["honest_sq_dist"] = num
     return jnp.sqrt(num / (den + 1e-20))
 
 

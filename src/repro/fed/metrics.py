@@ -30,19 +30,28 @@ class FedHistory:
     cohorts: list = dataclasses.field(default_factory=list)   # np.ndarray per round
     m_byz: list = dataclasses.field(default_factory=list)
     f_round: list = dataclasses.field(default_factory=list)
+    #: Health taps (repro.obs.taps) per round: {field: np.ndarray} when the
+    #: round ran tapped, None otherwise — like every column, one entry per
+    #: round, so taps[i] always belongs to round i.
+    taps: list = dataclasses.field(default_factory=list)
 
     def record(self, metrics: dict, *, cohort: np.ndarray, attack: str,
-               eta: Optional[float], m_byz: int, f_round: int) -> None:
+               eta: Optional[float], m_byz: int, f_round: int,
+               taps: Optional[dict] = None) -> None:
         self.loss.append(float(metrics["loss"]))
         self.direction_norm.append(float(metrics["direction_norm"]))
         self.lr.append(float(metrics["lr"]))
-        if "kappa_hat" in metrics:
-            self.kappa_hat.append(float(metrics["kappa_hat"]))
+        # NaN placeholder when untracked: kappa_hat[i] must stay round i's
+        # value even across runs that toggle tracking mid-history.
+        self.kappa_hat.append(float(metrics["kappa_hat"])
+                              if "kappa_hat" in metrics else float("nan"))
         self.attack.append(attack)
         self.eta.append(eta)
         self.cohorts.append(np.asarray(cohort))
         self.m_byz.append(m_byz)
         self.f_round.append(f_round)
+        self.taps.append(None if taps is None else
+                         {k: np.asarray(v) for k, v in taps.items()})
 
     @property
     def rounds(self) -> int:
@@ -65,12 +74,23 @@ class FedHistory:
                 segs.append((a, r, r + 1))
         return segs
 
+    def tap_columns(self) -> dict:
+        """Round-stacked tap columns ``{field: (rounds, ...) array}``.
+        Empty when any round ran untapped (columns would misalign)."""
+        if not self.taps or any(t is None for t in self.taps):
+            return {}
+        return {k: np.stack([t[k] for t in self.taps])
+                for k in self.taps[0]}
+
     def summary(self) -> dict:
+        kappa = np.asarray(self.kappa_hat, np.float64)
+        tracked = kappa[np.isfinite(kappa)]
         out = {
             "rounds": self.rounds,
             "final_loss": self.loss[-1] if self.loss else None,
-            "mean_kappa_hat": (float(np.mean(self.kappa_hat))
-                               if self.kappa_hat else None),
+            # nanmean over the tracked rounds (NaN = untracked placeholder).
+            "mean_kappa_hat": (float(tracked.mean()) if tracked.size
+                               else None),
             "attacks": [f"{a}[{s}:{e}]" for a, s, e in self.attack_segments()],
         }
         by_attack: dict[str, list] = {}

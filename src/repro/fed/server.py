@@ -57,6 +57,10 @@ class FedConfig:
     agg: AggregatorSpec = AggregatorSpec()
     client: ClientConfig = ClientConfig()
     track_kappa_hat: bool = True
+    #: In-scan robustness health taps (repro.obs.taps): pure side-outputs
+    #: of the compiled round riding the metrics transfer.  Static — part
+    #: of the round's jit key and the fleet bucket key.
+    taps: bool = False
 
     def __post_init__(self):
         if not 0 < self.clients_per_round <= self.n_clients:
@@ -160,8 +164,9 @@ class FedServer:
                 attack, stack, m_byz,
                 eta=eta if use_eta else None, agg_closure=closure)
 
-            robust_dir = robust_lib.robust_aggregate(attacked, spec,
-                                                     key=agg_key)
+            tap_internals = {} if cfg.taps else None
+            robust_dir = robust_lib.robust_aggregate(
+                attacked, spec, key=agg_key, internals=tap_internals)
             direction = merge_params(robust_dir, [], treedef, is_fsdp)
 
             lr = lr_schedule(state["step"])
@@ -182,8 +187,13 @@ class FedServer:
                 "direction_norm": global_norm(direction),
             }
             if cfg.track_kappa_hat:
-                metrics["kappa_hat"] = tree_kappa_hat(robust_dir, attacked,
-                                                      m_honest)
+                metrics["kappa_hat"] = tree_kappa_hat(
+                    robust_dir, attacked, m_honest, internals=tap_internals)
+            if cfg.taps:
+                from repro.obs import health_taps
+                metrics["taps"] = health_taps(
+                    attacked, robust_dir, n_honest=m_honest, f=f_round,
+                    rule=spec.rule, pre=spec.pre, internals=tap_internals)
             return new_state, metrics
 
         return jax.jit(round_fn)
@@ -239,8 +249,9 @@ class FedServer:
                                          m_byz, eta=op["eta"],
                                          agg_closure=closure)
 
-            robust_dir = robust_lib.robust_aggregate(attacked, spec,
-                                                     key=agg_key)
+            tap_internals = {} if cfg.taps else None
+            robust_dir = robust_lib.robust_aggregate(
+                attacked, spec, key=agg_key, internals=tap_internals)
             direction = merge_params(robust_dir, [], treedef, is_fsdp)
 
             lr = lr_schedule(state["step"])
@@ -258,8 +269,13 @@ class FedServer:
                 "direction_norm": global_norm(direction),
             }
             if cfg.track_kappa_hat:
-                metrics["kappa_hat"] = tree_kappa_hat(robust_dir, attacked,
-                                                      m_honest)
+                metrics["kappa_hat"] = tree_kappa_hat(
+                    robust_dir, attacked, m_honest, internals=tap_internals)
+            if cfg.taps:
+                from repro.obs import health_taps
+                metrics["taps"] = health_taps(
+                    attacked, robust_dir, n_honest=m_honest, f=f_round,
+                    rule=spec.rule, pre=spec.pre, internals=tap_internals)
             return new_state, metrics
 
         return body
@@ -326,8 +342,9 @@ def run_rounds(server: FedServer, state: dict, batch_fn: Callable,
             eta_arg = jnp.float32(0.0 if eta is None else eta)
             state, metrics = step(state, batch, jnp.asarray(cohort),
                                   eta_arg, sub)
+            taps = metrics["taps"].to_dict() if "taps" in metrics else None
             hist.record(metrics, cohort=cohort, attack=attack, eta=eta,
-                        m_byz=m_byz, f_round=m_byz)
+                        m_byz=m_byz, f_round=m_byz, taps=taps)
         return state, hist
     if engine != "scan":
         raise ValueError(f"engine must be 'scan' or 'loop', got {engine!r}")
@@ -360,11 +377,14 @@ def run_rounds(server: FedServer, state: dict, batch_fn: Callable,
         "chunk_shapes": tuple(sorted({end - start for start, end
                                       in split_segments(rounds, chunk)})),
     }
+    tap_cols = metrics["taps"].to_dict() if "taps" in metrics else None
     for r in range(rounds):
         attack, eta = meta[r]
         lane = {k: metrics[k][r] for k in ("loss", "lr", "direction_norm")}
         if "kappa_hat" in metrics:
             lane["kappa_hat"] = metrics["kappa_hat"][r]
+        taps = {k: v[r] for k, v in tap_cols.items()} \
+            if tap_cols is not None else None
         hist.record(lane, cohort=cohorts[r], attack=attack, eta=eta,
-                    m_byz=m_byz, f_round=m_byz)
+                    m_byz=m_byz, f_round=m_byz, taps=taps)
     return state, hist

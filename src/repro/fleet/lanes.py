@@ -76,9 +76,11 @@ def build_lane_round(loss_fn: Callable, optimizer: Optimizer,
 
         attacked = apply_attack_dyn(ops["attack_id"], stack, ops["m_byz"],
                                     eta=ops["eta"])
+        tap_internals = {} if cfg.taps else None
         robust_dir = robust_lib.robust_aggregate_dyn(attacked, spec,
                                                      ops["f_agg"],
-                                                     key=agg_key)
+                                                     key=agg_key,
+                                                     internals=tap_internals)
         direction = merge_params(robust_dir, [], treedef, is_fsdp)
 
         lr = ops["lr"]
@@ -99,7 +101,16 @@ def build_lane_round(loss_fn: Callable, optimizer: Optimizer,
         }
         if cfg.track_kappa_hat:
             metrics["kappa_hat"] = kappa_hat_masked(robust_dir, attacked,
-                                                    m_honest)
+                                                    m_honest,
+                                                    internals=tap_internals)
+        if cfg.taps:
+            from repro.obs import health_taps
+            # Dynamic-f taps: f_agg / m_honest are traced per-lane scalars,
+            # same rank-mask selection as robust_aggregate_dyn.
+            metrics["taps"] = health_taps(
+                attacked, robust_dir, n_honest=m_honest, f=ops["f_agg"],
+                rule=spec.rule, pre=spec.pre, dyn=True,
+                internals=tap_internals)
 
         # Finished lanes ride along bit-identically frozen.
         frozen = jax.tree_util.tree_map(

@@ -35,6 +35,7 @@ from repro.fed.scenarios import (
 )
 from repro.fed.server import FedConfig, rescale_f, sample_cohort
 from repro.fleet.lanes import build_fleet_scan
+from repro.obs import runtime as obs_runtime
 from repro.optim import Optimizer, sgd
 from repro.rounds import cadence_boundaries, split_segments, stack_rounds
 
@@ -199,7 +200,7 @@ def bucket_key(job: FleetJob, *, chunk: Optional[int] = None) -> tuple:
             c.agg.gm_iters, c.agg.gm_eps,
             c.agg.transport_dtype, c.agg.sketch_dim,
             c.agg.backend, _mesh_sig(),
-            c.track_kappa_hat,
+            c.track_kappa_hat, c.taps,
             job.loss_fn, job.optimizer,
             _tree_sig(job.params), _tree_sig(probe), chunk)
 
@@ -285,9 +286,12 @@ class FleetRunner:
         cache_key = (bucket.key, len(bucket.jobs))
         if cache_key not in self._compiled:
             job0 = bucket.jobs[0]
+            lanes = len(bucket.jobs)
 
             def bump():
                 self.trace_count += 1
+                obs_runtime.event("fleet.trace", lanes=lanes,
+                                  trace_count=self.trace_count)
 
             self._compiled[cache_key] = build_fleet_scan(
                 job0.loss_fn, job0.optimizer, job0.cfg, on_trace=bump)
@@ -403,7 +407,9 @@ class FleetRunner:
         seg_metrics: list[dict] = []
         for start, end in split_segments(max_rounds, self.chunk, boundaries):
             seg_ops = jax.tree_util.tree_map(lambda a: a[start:end], operands)
-            state, metrics = fleet_scan(state, seg_ops)
+            with obs_runtime.span("fleet.segment", start=start, end=end,
+                                  lanes=len(jobs)):
+                state, metrics = fleet_scan(state, seg_ops)
             seg_metrics.append(metrics)
             for k, job in enumerate(jobs):
                 if (job.eval_fn is not None and job.eval_every
@@ -417,9 +423,14 @@ class FleetRunner:
                     evals[k].append((end, job.eval_fn(lane_params)))
 
         # Demux: one host transfer for the whole run's metrics + evals.
+        obs_runtime.inc("fleet.transfers")
         fetched = jax.device_get(seg_metrics)
         metrics_np = jax.tree_util.tree_map(
             lambda *xs: np.concatenate(xs, axis=0), *fetched)
+        # Tap leaves arrive round-and-lane-stacked (R, B, ...): per-lane
+        # demux slices [r][k] like every other metric column.
+        tap_cols = metrics_np["taps"].to_dict() \
+            if "taps" in metrics_np else None
         evals = [[(r, float(v)) for r, v in lane] for lane in evals]
         for r, (attacks, etas_raw, cohorts) in enumerate(round_meta):
             for k, job in enumerate(jobs):
@@ -431,9 +442,12 @@ class FleetRunner:
                                     metrics_np["direction_norm"][r][k]}
                 if "kappa_hat" in metrics_np:
                     lane_metrics["kappa_hat"] = metrics_np["kappa_hat"][r][k]
+                lane_taps = {f: v[r][k] for f, v in tap_cols.items()} \
+                    if tap_cols is not None else None
                 hists[k].record(lane_metrics, cohort=cohorts[k],
                                 attack=attacks[k], eta=etas_raw[k],
-                                m_byz=m_byzs[k], f_round=m_byzs[k])
+                                m_byz=m_byzs[k], f_round=m_byzs[k],
+                                taps=lane_taps)
 
         out = []
         for k, job in enumerate(jobs):

@@ -28,8 +28,10 @@ Every dispatch decision — including jnp-oracle fallbacks (meamed, sketch
 grams) and a "pallas_sharded" request degrading to the leaf-streamed XLA
 path because no multi-device mesh exists — is recorded on a
 :class:`DispatchRecord` (with its ``mesh_devices`` / ``mesh_axis``
-resolution) queryable via :func:`last_dispatch`, so a requested kernel
-path that quietly ran XLA is detectable.
+resolution) kept in a bounded ring — :func:`dispatch_history` for the
+trail, :func:`last_dispatch` for the head, both re-exported through
+``repro.obs.runtime`` — so a requested kernel path that quietly ran XLA
+is detectable, and not just for the very last dispatch.
 
 Decisions are **static** per (spec, shapes): they are taken while tracing,
 so under ``jax.jit`` the record reflects the most recent TRACE, not the
@@ -40,6 +42,7 @@ baked into the compiled executable.
 from __future__ import annotations
 
 import dataclasses
+from collections import deque
 from typing import Any, Optional
 
 import jax
@@ -162,13 +165,35 @@ class DispatchRecord:
         return "\n".join(parts)
 
 
-_LAST: Optional[DispatchRecord] = None
+#: Bounded dispatch-record ring (most recent DISPATCH_HISTORY_LIMIT
+#: traces).  Queryable here and re-exported through ``repro.obs.runtime``.
+DISPATCH_HISTORY_LIMIT = 256
+
+_HISTORY: deque = deque(maxlen=DISPATCH_HISTORY_LIMIT)
+_OPENED = 0                 # lifetime records opened (the ring may drop)
 
 
 def last_dispatch() -> Optional[DispatchRecord]:
-    """The most recently OPENED dispatch record (trace-time semantics — see
-    module docstring).  None until the first backend-routed aggregation."""
-    return _LAST
+    """The most recently OPENED dispatch record — the head of the ring
+    (trace-time semantics — see module docstring).  None until the first
+    backend-routed aggregation."""
+    return _HISTORY[-1] if _HISTORY else None
+
+
+def dispatch_history(limit: Optional[int] = None) -> list:
+    """The most recent dispatch records, oldest first (bounded by
+    :data:`DISPATCH_HISTORY_LIMIT`); ``limit`` keeps only the newest N."""
+    records = list(_HISTORY)
+    if limit is not None:
+        records = records[-limit:]
+    return records
+
+
+def dispatch_count() -> int:
+    """Monotone count of records ever opened in this process — lets callers
+    detect "a new trace happened" without relying on ring identity (the
+    bounded ring makes length-based checks unreliable)."""
+    return _OPENED
 
 
 def open_record(*, requested: str, backend: str, rule: str,
@@ -177,18 +202,26 @@ def open_record(*, requested: str, backend: str, rule: str,
                 mesh_axis: Optional[str] = None) -> DispatchRecord:
     """Start a fresh decision record; subsequent primitive dispatches in
     this trace append to it."""
-    global _LAST
-    _LAST = DispatchRecord(requested=requested, backend=backend, rule=rule,
-                           pre=pre, dyn=dyn, mesh_devices=mesh_devices,
-                           mesh_axis=mesh_axis)
-    return _LAST
+    global _OPENED
+    rec = DispatchRecord(requested=requested, backend=backend, rule=rule,
+                         pre=pre, dyn=dyn, mesh_devices=mesh_devices,
+                         mesh_axis=mesh_axis)
+    _HISTORY.append(rec)
+    _OPENED += 1
+    # Mirror into the runtime event ring (lazy import: obs.runtime imports
+    # this module at its tail, so the dependency must stay one-way here).
+    # The args hold the LIVE record — decisions appended later in this
+    # trace are visible at export time (sanitization is lazy).
+    from repro.obs import runtime as _runtime
+    _runtime.event("kernels.dispatch", record=rec)
+    return rec
 
 
 def record_decision(primitive: str, requested: str, used: str,
                     reason: str = "") -> None:
-    if _LAST is not None:
-        _LAST.decisions.append(KernelDecision(primitive, requested, used,
-                                              reason))
+    if _HISTORY:
+        _HISTORY[-1].decisions.append(KernelDecision(primitive, requested,
+                                                     used, reason))
 
 
 def _pallas_used(interpret: bool, sharded: bool = False) -> tuple[str, str]:

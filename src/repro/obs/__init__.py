@@ -1,0 +1,28 @@
+"""Unified telemetry: in-scan health taps + structured runtime tracing.
+
+Two halves, one import surface:
+
+* :mod:`repro.obs.taps` — :class:`HealthTaps`, a pytree of per-round
+  robustness diagnostics computed INSIDE the compiled round (riding the
+  scan-output metrics transfer; toggled by the owners' static ``taps``
+  config flags, which are jit/bucket key material);
+* :mod:`repro.obs.runtime` — the process-wide event registry (counters,
+  timestamped spans, JSONL + Chrome-trace exporters) that absorbs the
+  kernel dispatch ring as a re-export.
+"""
+from repro.obs.runtime import (
+    DispatchRecord, KernelDecision, Runtime, counters, dispatch_count,
+    dispatch_history, event, export_chrome_trace, export_jsonl,
+    get_runtime, history, import_jsonl, inc, last_dispatch, reset, snapshot,
+    span,
+)
+from repro.obs.taps import TAP_FIELDS, HealthTaps, health_taps
+
+__all__ = [
+    "HealthTaps", "health_taps", "TAP_FIELDS",
+    "Runtime", "get_runtime", "event", "span", "inc", "history",
+    "counters", "snapshot", "reset", "export_jsonl", "export_chrome_trace",
+    "import_jsonl",
+    "DispatchRecord", "KernelDecision", "dispatch_count",
+    "dispatch_history", "last_dispatch",
+]

@@ -31,6 +31,8 @@ from typing import Any, Callable, Iterable, Optional
 import jax
 import numpy as np
 
+from repro.obs import runtime as obs_runtime
+
 PyTree = Any
 
 #: ``chunk`` value meaning "the whole run is one segment".
@@ -88,6 +90,10 @@ class RoundEngine:
         self.chunk = chunk
         self.trace_count = 0
         self.chunk_shapes: set[int] = set()
+        #: Host metric fetches this engine performed (one ``device_get``
+        #: per run on either path) — the counter the "taps add no extra
+        #: transfers" contract asserts on.
+        self.transfer_count = 0
         self._scanned = jax.jit(self._make_scanned())
         self._jit_body = jax.jit(body)      # run_loop's per-round program
 
@@ -98,7 +104,10 @@ class RoundEngine:
             # Executes at TRACE time only: one bump per (segment length,
             # operand/state shape) — the compile counter callers gate on.
             self.trace_count += 1
-            self.chunk_shapes.add(_leading_dim(operands))
+            rounds = _leading_dim(operands)
+            self.chunk_shapes.add(rounds)
+            obs_runtime.event("rounds.trace", rounds=rounds,
+                              trace_count=self.trace_count)
             return jax.lax.scan(body, state, operands)
 
         return scanned
@@ -120,10 +129,13 @@ class RoundEngine:
         per_chunk: list[PyTree] = []
         for start, end in split_segments(rounds, self.chunk, boundaries):
             seg_ops = jax.tree_util.tree_map(lambda a: a[start:end], operands)
-            state, metrics = self._scanned(state, seg_ops)
+            with obs_runtime.span("rounds.segment", start=start, end=end):
+                state, metrics = self._scanned(state, seg_ops)
             per_chunk.append(metrics)
             if on_boundary is not None:
                 on_boundary(end, state)
+        self.transfer_count += 1
+        obs_runtime.inc("rounds.transfers")
         fetched = jax.device_get(per_chunk)
         stacked = jax.tree_util.tree_map(
             lambda *xs: np.concatenate(xs, axis=0), *fetched)
@@ -149,6 +161,8 @@ class RoundEngine:
             per_round.append(metrics)
             if on_boundary is not None and (r + 1) in stops:
                 on_boundary(r + 1, state)
+        self.transfer_count += 1
+        obs_runtime.inc("rounds.transfers")
         fetched = jax.device_get(per_round)
         stacked = jax.tree_util.tree_map(
             lambda *xs: np.stack(xs, axis=0), *fetched)

@@ -18,6 +18,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.obs import runtime as obs_runtime
+
 PyTree = Any
 Array = jax.Array
 
@@ -35,6 +37,10 @@ class ServeEngine:
         decode = self.model.decode_step
 
         def prefill_scan(params, cache: PyTree, prompts: Array):
+            # Trace-time event (jit body): one per compiled prompt shape.
+            obs_runtime.event("serve.prefill_trace",
+                              batch=int(prompts.shape[0]),
+                              prompt=int(prompts.shape[1]))
             toks = prompts.T[:, :, None].astype(jnp.int32)      # (P, B, 1)
             pos = jnp.arange(prompts.shape[1], dtype=jnp.int32)
 
@@ -65,7 +71,9 @@ class ServeEngine:
         p = prompts.shape[1]
         if p == 0:                      # the loop's degenerate behavior
             return cache, None, 0
-        cache, logits = self._prefill(self.params, cache, prompts)
+        with obs_runtime.span("serve.prefill", batch=int(prompts.shape[0]),
+                              prompt=p):
+            cache, logits = self._prefill(self.params, cache, prompts)
         return cache, logits, p
 
     def prefill_loop(self, cache: PyTree, prompts: Array
@@ -193,12 +201,16 @@ class FleetService:
         runner = FleetRunner(jobs, max_lanes=self.max_lanes,
                              compile_cache=self._compile_cache,
                              chunk=self.chunk)
-        before = kdispatch.last_dispatch()
-        for i, res in zip(ids, runner.run()):
-            self._tickets[i].status = "done"
-            self._tickets[i].result = res
+        before = kdispatch.dispatch_count()
+        with obs_runtime.span("fleet.drain", jobs=len(ids),
+                              buckets=runner.n_buckets, drain=self.drains):
+            for i, res in zip(ids, runner.run()):
+                self._tickets[i].status = "done"
+                self._tickets[i].result = res
         self.drains += 1
         self.last_trace_count = runner.trace_count
-        after = kdispatch.last_dispatch()
-        self.last_dispatch = after if after is not before else None
+        # New record opened during THIS drain?  The monotone dispatch_count
+        # detects it even though the bounded ring recycles entries.
+        self.last_dispatch = kdispatch.last_dispatch() \
+            if kdispatch.dispatch_count() > before else None
         return ids

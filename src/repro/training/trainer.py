@@ -47,6 +47,11 @@ class TrainerConfig:
     agg: AggregatorSpec = AggregatorSpec()
     byz: ByzantineConfig = ByzantineConfig()
     track_kappa_hat: bool = True
+    #: In-scan robustness health taps (repro.obs.taps): computed inside
+    #: the compiled step as pure side-outputs riding the metrics transfer.
+    #: Static (frozen-dataclass jit key material) — tapped and untapped
+    #: runs never share a compile.
+    taps: bool = False
     worker_axes: Optional[tuple[str, ...]] = None   # spmd axes for vmap
     # Selective robustness (giant MoE; DESIGN.md §Arch-applicability):
     # params whose key-path matches get FSDP mean-gradients (no per-worker
@@ -93,10 +98,13 @@ def init_state(params: PyTree, optimizer: Optimizer, n_workers: int,
     return state
 
 
-def kappa_hat_masked(agg: PyTree, stack: PyTree, n_honest: Array) -> Array:
+def kappa_hat_masked(agg: PyTree, stack: PyTree, n_honest: Array,
+                     internals: Optional[dict] = None) -> Array:
     """Eq. (26) with a TRACED honest count (fleet engine): the honest rows
     are selected by mask (row < n_honest) so per-lane Byzantine budgets can
-    differ inside one compiled round."""
+    differ inside one compiled round.  ``internals`` stashes the per-leaf
+    honest means + squared distance for the health taps, exactly as
+    :func:`repro.core.theory.tree_kappa_hat` does."""
     num = jnp.zeros((), jnp.float32)
     den = jnp.zeros((), jnp.float32)
     cnt = jnp.maximum(n_honest.astype(jnp.float32), 1.0)
@@ -107,9 +115,13 @@ def kappa_hat_masked(agg: PyTree, stack: PyTree, n_honest: Array) -> Array:
         w = (jnp.arange(n) < n_honest).astype(jnp.float32)
         wl = w.reshape((-1,) + (1,) * (x.ndim - 1))
         mbar = (x * wl).sum(axis=0) / cnt
+        if internals is not None:
+            internals.setdefault("honest_mean_leaves", []).append(mbar)
         num += jnp.sum((a.astype(jnp.float32) - mbar) ** 2)
         sq = jnp.sum(((x - mbar) ** 2).reshape(n, -1), axis=1)
         den += (sq * w).sum() / cnt
+    if internals is not None:
+        internals["honest_sq_dist"] = num
     return jnp.sqrt(num / (den + 1e-20))
 
 
@@ -180,7 +192,9 @@ def build_train_step(loss_fn: Callable, optimizer: Optimizer,
         attacked = apply_attack_tree(cfg.byz.attack, stack, cfg.byz.f,
                                      eta=cfg.byz.eta, agg_closure=closure)
 
-        robust_dir = robust_lib.robust_aggregate(attacked, spec, key=agg_key)
+        tap_internals = {} if cfg.taps else None
+        robust_dir = robust_lib.robust_aggregate(attacked, spec, key=agg_key,
+                                                 internals=tap_internals)
         direction = merge_params(robust_dir, list(fsdp_grads), treedef, is_fsdp)
 
         lr = lr_schedule(state["step"])
@@ -201,7 +215,14 @@ def build_train_step(loss_fn: Callable, optimizer: Optimizer,
         }
         if cfg.track_kappa_hat:
             metrics["kappa_hat"] = tree_kappa_hat(robust_dir, attacked,
-                                                  n_honest)
+                                                  n_honest,
+                                                  internals=tap_internals)
+        if cfg.taps:
+            from repro.obs import health_taps
+            metrics["taps"] = health_taps(attacked, robust_dir,
+                                          n_honest=n_honest, f=spec.f,
+                                          rule=spec.rule, pre=spec.pre,
+                                          internals=tap_internals)
         return new_state, metrics
 
     return step
@@ -310,6 +331,10 @@ def train_loop(loss_fn, params, batches, optimizer, cfg: TrainerConfig,
     hist["direction_norm"] = [float(x) for x in metrics["direction_norm"]]
     if "kappa_hat" in metrics:
         hist["kappa_hat"] = [float(x) for x in metrics["kappa_hat"]]
+    if "taps" in metrics:
+        # Aligned per-round tap columns: {field: (steps, ...) array}.
+        hist["taps"] = {k: np.asarray(v)
+                        for k, v in metrics["taps"].to_dict().items()}
     if track_best:
         best["norm"] = float(best_norm)
         best["params"] = best_params
@@ -337,6 +362,7 @@ def _train_loop_loop(loss_fn, params, batches, optimizer, cfg: TrainerConfig,
     hist: dict[str, list] = {"loss": [], "direction_norm": [], "kappa_hat": [],
                              "eval": [], "eval_step": []}
     best = {"norm": np.inf, "params": params, "acc": -np.inf}
+    tap_rows: list = []
     batch = first
     for t in range(steps):
         key, sub = jax.random.split(key)
@@ -347,6 +373,8 @@ def _train_loop_loop(loss_fn, params, batches, optimizer, cfg: TrainerConfig,
         hist["direction_norm"].append(dn)
         if "kappa_hat" in metrics:
             hist["kappa_hat"].append(float(metrics["kappa_hat"]))
+        if "taps" in metrics:
+            tap_rows.append(metrics["taps"].to_dict())
         if track_best and dn < best["norm"]:
             best["norm"], best["params"] = dn, prev_params
         if eval_fn and eval_every and (t + 1) % eval_every == 0:
@@ -356,4 +384,8 @@ def _train_loop_loop(loss_fn, params, batches, optimizer, cfg: TrainerConfig,
             best["acc"] = max(best["acc"], acc)
         if hasattr(batches, "__next__"):
             batch = next(batches)
+    if tap_rows:
+        fetched = jax.device_get(tap_rows)
+        hist["taps"] = {k: np.stack([np.asarray(row[k]) for row in fetched])
+                        for k in fetched[0]}
     return state["params"], {"history": hist, "best": best, "state": state}

@@ -247,8 +247,11 @@ def test_run_rounds_scan_matches_loop(sched, f, kw):
     _tree_equal(s_l, s_s)
     assert h_l.loss == h_s.loss
     assert h_l.direction_norm == h_s.direction_norm
-    assert h_l.kappa_hat == h_s.kappa_hat
-    assert (len(h_s.kappa_hat) > 0) == kw.get("track", True)
+    # NaN placeholders keep kappa_hat round-aligned when untracked, so
+    # compare NaN-tolerantly and check the column length is ALWAYS rounds.
+    np.testing.assert_array_equal(h_l.kappa_hat, h_s.kappa_hat)
+    assert len(h_s.kappa_hat) == rounds
+    assert np.isfinite(h_s.kappa_hat).all() == kw.get("track", True)
     assert h_l.lr == h_s.lr
     assert h_l.attack == h_s.attack and h_l.eta == h_s.eta
     assert h_l.m_byz == h_s.m_byz and h_l.f_round == h_s.f_round
