@@ -19,8 +19,13 @@ end-to-end figure).
 All paths run once to pay compiles, then the median of 3 timed runs
 counts; the bench asserts the fleet traced exactly once per shape bucket.
 
+``--latency-smoke`` instead runs the continuous-batching service under a
+deterministic virtual-time Poisson workload (see :func:`bench_latency`)
+and reports admission-latency facts for the fleet-latency CI gate.
+
   PYTHONPATH=src python benchmarks/bench_fleet.py [--full] [--check]
                                                   [--json-out PATH]
+                                                  [--latency-smoke]
 """
 import argparse
 import json
@@ -160,8 +165,118 @@ def bench_mlp(rounds: int) -> dict:
     return out
 
 
+def _same_result(a, b) -> bool:
+    """Bitwise FleetResult equality (loss trajectory + final state)."""
+    import jax
+    if a.history.loss != b.history.loss:
+        return False
+    if a.history.attack != b.history.attack:
+        return False
+    if not all(np.array_equal(x, y) for x, y in
+               zip(a.history.cohorts, b.history.cohorts)):
+        return False
+    la = jax.tree_util.tree_leaves(a.state)
+    lb = jax.tree_util.tree_leaves(b.state)
+    return len(la) == len(lb) and all(
+        np.array_equal(np.asarray(x), np.asarray(y))
+        for x, y in zip(la, lb))
+
+
+def bench_latency(*, lanes: int = 2, chunk: int = 2, n_jobs: int = 10,
+                  rounds: int = 8, lam: float = 2.0, seed: int = 0) -> dict:
+    """Continuous-batching admission latency under a Poisson workload.
+
+    Arrivals are DETERMINISTIC VIRTUAL TIME: inter-arrival gaps are seeded
+    Poisson draws measured in service chunk boundaries (``svc.steps``), not
+    wall clock, so the gated facts — boundary waits, compile count, parity
+    — are identical on every machine.  Wall-clock submit->first-result and
+    submit->done percentiles ride along as informational numbers.
+
+    ``n_jobs`` jobs churn through a ``lanes``-lane bucket: the service must
+    admit each arrival within one boundary of a slot being (or coming)
+    free, keep the compile count flat while lanes fill/evict/backfill, and
+    — checked separately with every job submitted up-front — reproduce the
+    batch :class:`~repro.fleet.FleetRunner` bit-for-bit.
+    """
+    from repro.serving import FleetService
+
+    # -- churn: Poisson arrivals into a small bucket ----------------------
+    jobs = _quad_jobs(n_jobs, rounds)
+    gaps = np.random.default_rng(seed).poisson(lam, size=n_jobs)
+    gaps[0] = 0
+    arrivals = np.cumsum(gaps)              # submit-at boundary per job
+
+    svc = FleetService(max_lanes=lanes, chunk=chunk)
+    handles: list = []
+    i = 0
+    while i < n_jobs or svc.pending:
+        while i < n_jobs and arrivals[i] <= svc.steps:
+            handles.append(svc.submit(jobs[i]))
+            i += 1
+        svc.step()
+
+    first_ms = [1e3 * (h.first_ts - h.submit_ts) for h in handles]
+    done_ms = [1e3 * (h.done_ts - h.submit_ts) for h in handles]
+    waits = [h.admit_step - h.submit_step for h in handles]
+
+    # -- one-boundary admission with a KNOWN free slot --------------------
+    # The churn waits above include queueing for a full bucket; this is the
+    # contract itself: a mid-run submit into a bucket with a free lane
+    # starts within one chunk boundary.
+    svc2 = FleetService(max_lanes=lanes, chunk=chunk)
+    svc2.submit(_quad_jobs(1, rounds)[0])
+    svc2.step()                             # incumbent running, slot free
+    late = svc2.submit(_quad_jobs(2, rounds)[1])
+    svc2.run_until_idle()
+    one_boundary_ok = int(late.admit_step - late.submit_step <= 1)
+
+    # -- up-front parity vs the batch runner ------------------------------
+    par_jobs = _quad_jobs(lanes, rounds)
+    batch = FleetRunner(par_jobs, chunk=chunk).run()
+    svc3 = FleetService(chunk=chunk)
+    par_handles = [svc3.submit(j) for j in par_jobs]
+    svc3.run_until_idle()
+    parity_ok = int(all(_same_result(h.result(), ref)
+                        for h, ref in zip(par_handles, batch)))
+
+    out = {
+        "latency_lanes": lanes,
+        "latency_chunk": chunk,
+        "latency_jobs": n_jobs,
+        "latency_rounds": rounds,
+        # Informational wall-clock latencies (host-dependent, never gated).
+        "fleet_latency_first_p50_ms": float(np.percentile(first_ms, 50)),
+        "fleet_latency_first_p99_ms": float(np.percentile(first_ms, 99)),
+        "fleet_latency_done_p50_ms": float(np.percentile(done_ms, 50)),
+        "fleet_latency_done_p99_ms": float(np.percentile(done_ms, 99)),
+        # Machine-independent gated facts (virtual-time workload).
+        "first_boundaries_p50": int(np.percentile(waits, 50)),
+        "first_boundaries_p99": int(np.percentile(waits, 99)),
+        "first_within_one_boundary_ok": one_boundary_ok,
+        "compile_count_churn": svc.trace_count,
+        "upfront_parity_ok": parity_ok,
+    }
+    emit(f"fleet_latency_B{lanes}_first",
+         float(np.percentile(first_ms, 50)) * 1e3,
+         f"p99_ms={out['fleet_latency_first_p99_ms']:.1f},"
+         f"wait_boundaries_p99={out['first_boundaries_p99']}")
+    emit(f"fleet_latency_B{lanes}_done",
+         float(np.percentile(done_ms, 50)) * 1e3,
+         f"p99_ms={out['fleet_latency_done_p99_ms']:.1f},"
+         f"compiles={svc.trace_count},parity={parity_ok}")
+    return out
+
+
 def main(fast: bool = True, *, check: bool = False,
-         json_out: str | None = None, with_mlp: bool | None = None) -> dict:
+         json_out: str | None = None, with_mlp: bool | None = None,
+         latency_only: bool = False) -> dict:
+    if latency_only:
+        results = bench_latency()
+        if json_out:
+            with open(json_out, "w") as fh:
+                json.dump(results, fh, indent=2, sort_keys=True)
+            print(f"wrote {json_out}")
+        return results
     rounds = 30 if fast else 100
     results = bench_quad(rounds)
     if with_mlp if with_mlp is not None else not fast:
@@ -185,6 +300,10 @@ if __name__ == "__main__":
     ap.add_argument("--json-out", default=None)
     ap.add_argument("--mlp", action="store_true",
                     help="also run the end-to-end MLP scenario figure")
+    ap.add_argument("--latency-smoke", action="store_true",
+                    help="continuous-batching admission-latency smoke: "
+                         "deterministic Poisson arrivals, boundary waits, "
+                         "compile count under churn, up-front parity")
     args = ap.parse_args()
     main(fast=not args.full, check=args.check, json_out=args.json_out,
-         with_mlp=args.mlp or None)
+         with_mlp=args.mlp or None, latency_only=args.latency_smoke)

@@ -1,10 +1,10 @@
 """Fleet engine demo: a multi-tenant batch of registry scenarios.
 
 Submits every built-in scenario (x `--seeds` replicas) through the serving
-front door (`FleetService.submit` / `poll` / `drain`); the fleet packs the
-jobs into shape buckets and steps each bucket in one vmapped, jitted round
-— watch the compile count stay at the bucket count while the lane count
-grows.
+front door (`FleetService.submit` -> `JobHandle`, docs/serving.md); the
+continuous-batching service packs the jobs into shape buckets and steps
+each bucket in one vmapped, jitted round — watch the compile count stay
+at the bucket count while the lane count grows.
 
   PYTHONPATH=src python examples/fleet_scenarios.py [--seeds 2] [--rounds 12]
   PYTHONPATH=src python examples/fleet_scenarios.py --scenario foe_ramp
@@ -29,25 +29,25 @@ def main():
 
     names = [args.scenario] if args.scenario else list_scenarios()
     svc = FleetService()
-    tickets = {}
+    handles = {}
     for name in names:
         for seed in range(args.seeds):
-            jid = svc.submit(ScenarioSpec(name, seed=seed,
-                                          rounds=args.rounds))
-            tickets[jid] = f"{name}:s{seed}"
+            h = svc.submit(ScenarioSpec(name, seed=seed,
+                                        rounds=args.rounds))
+            handles[h] = f"{name}:s{seed}"
     print(f"submitted {svc.pending} jobs "
           f"({len(names)} scenarios x {args.seeds} seeds)")
 
     t0 = time.time()
-    svc.drain()
+    svc.run_until_idle()
     wall = time.time() - t0
-    lane_rounds = len(tickets) * args.rounds
-    print(f"drained in {wall:.1f}s — {lane_rounds / wall:.1f} aggregate "
-          f"rounds/s, {svc.last_trace_count} compiles\n")
+    lane_rounds = len(handles) * args.rounds
+    print(f"ran in {wall:.1f}s — {lane_rounds / wall:.1f} aggregate "
+          f"rounds/s, {svc.trace_count} compiles\n")
 
     print(f"{'job':34s} {'acc':>6s} {'loss':>7s} {'kappa^':>7s}  attacks")
-    for jid, label in sorted(tickets.items()):
-        res = svc.poll(jid)["result"]
+    for h, label in sorted(handles.items(), key=lambda kv: kv[0].job_id):
+        res = h.result()
         hist = res.history
         acc = res.best_eval
         if acc is None and res.job.eval_fn is not None:

@@ -63,6 +63,19 @@ Observability hard gates (``--obs``; from
 * ``transfers_taps_on``      <= baseline — taps add ZERO host transfers
   (they ride the existing once-per-segment metrics device_get).
 
+Fleet-latency hard gates (``--fleet-latency``; from
+``benchmarks/bench_fleet.py --latency-smoke`` — a deterministic
+virtual-time Poisson workload, so every gated key is machine-independent):
+
+* ``first_boundaries_p99``         <= baseline — p99 chunk boundaries
+  between submit and admission under churn;
+* ``first_within_one_boundary_ok`` >= 1 — a mid-run submit with a free
+  lane starts within one boundary;
+* ``compile_count_churn``          <= baseline (1) — admission/eviction/
+  backfill never retrace the bucket program;
+* ``upfront_parity_ok``            >= 1 — up-front submissions reproduce
+  the batch FleetRunner bit-for-bit.
+
 Interpret-mode quarantine: Pallas timings measured off-TPU live under the
 JSON's ``"interpret"`` key and CANNOT be gated — any gated key found only
 there is a hard configuration error, so interpreter numbers can never
@@ -112,6 +125,27 @@ ROUNDS_GATES = (("compile_count_trainer_scan", "max"),
                 ("compile_count_fed_scan", "max"),
                 ("trainer_scan_speedup", "min_5"),
                 ("fed_scan_speedup", "min_5"))
+
+#: fleet-latency gates (BENCH_fleet_latency.json from bench_fleet.py
+#: --latency-smoke): the continuous-batching service's admission facts
+#: under a DETERMINISTIC virtual-time Poisson workload — arrivals are
+#: keyed to service chunk boundaries, not wall clock, so every gated key
+#: is machine-independent (the wall-clock *_ms percentiles in the same
+#: JSON are informational only and never gated):
+#:
+#: * ``first_boundaries_p99``          <= baseline — p99 boundaries a job
+#:   waits between submit and admission (includes queueing for a full
+#:   bucket; the baseline pins the seeded workload's exact value);
+#: * ``first_within_one_boundary_ok``  >= 1 — a mid-run submit into a
+#:   bucket with a free lane starts within ONE chunk boundary;
+#: * ``compile_count_churn``           <= baseline (1) — lanes filling,
+#:   evicting and backfilling never retrace (occupancy is operand data);
+#: * ``upfront_parity_ok``             >= 1 — jobs all submitted before
+#:   the first step reproduce the batch FleetRunner bit-for-bit.
+FLEET_LATENCY_GATES = (("first_boundaries_p99", "max"),
+                       ("first_within_one_boundary_ok", "min_1"),
+                       ("compile_count_churn", "max"),
+                       ("upfront_parity_ok", "min_1"))
 
 #: observability gates (BENCH_obs.json from bench_convergence.py
 #: --obs-smoke): health taps must stay cheap ON (tapped scan >= 0.9x the
@@ -209,13 +243,18 @@ def main() -> int:
                     help="JSON from bench_convergence.py --obs-smoke")
     ap.add_argument("--obs-baseline",
                     default="benchmarks/baselines/BENCH_obs.json")
+    ap.add_argument("--fleet-latency", default=None,
+                    help="JSON from bench_fleet.py --latency-smoke")
+    ap.add_argument("--fleet-latency-baseline",
+                    default="benchmarks/baselines/BENCH_fleet_latency.json")
     args = ap.parse_args()
 
     if args.current is None and args.agg_cost is None \
             and args.dist_agg is None and args.rounds is None \
-            and args.obs is None:
+            and args.obs is None and args.fleet_latency is None:
         print("perf gate: nothing to check (pass a fleet JSON, --agg-cost, "
-              "--dist-agg, --rounds and/or --obs)", file=sys.stderr)
+              "--dist-agg, --rounds, --obs and/or --fleet-latency)",
+              file=sys.stderr)
         return 2
 
     failures: list = []
@@ -256,6 +295,14 @@ def main() -> int:
         with open(args.obs_baseline) as fh:
             obs_base = json.load(fh)
         check_gate_table(OBS_GATES, obs_cur, obs_base, args.obs, failures)
+
+    if args.fleet_latency is not None:
+        with open(args.fleet_latency) as fh:
+            lat_cur = json.load(fh)
+        with open(args.fleet_latency_baseline) as fh:
+            lat_base = json.load(fh)
+        check_gate_table(FLEET_LATENCY_GATES, lat_cur, lat_base,
+                         args.fleet_latency, failures)
 
     if failures:
         print(f"perf gate FAILED: {', '.join(failures)} regressed",

@@ -39,8 +39,8 @@ from repro.fed.metrics import FedHistory
 from repro.fed.schedules import AttackSchedule, FixedByzantine
 from repro.optim import Optimizer, global_norm
 from repro.rounds import (
-    RoundEngine, iterated_split_keys, resolve_attack_operands,
-    split_segments, stack_rounds,
+    RoundEngine, RoundOptions, iterated_split_keys, resolve_attack_operands,
+    resolve_options, split_segments, stack_rounds,
 )
 from repro.training.trainer import _split_info, merge_params
 
@@ -109,10 +109,16 @@ class FedServer:
     """
 
     def __init__(self, loss_fn: Callable, optimizer: Optimizer,
-                 cfg: FedConfig, lr_schedule: Callable):
+                 cfg: FedConfig, lr_schedule: Callable,
+                 options: Optional[RoundOptions] = None):
         self.loss_fn = loss_fn
         self.optimizer = optimizer
-        self.cfg = cfg
+        #: Unified execution options (repro.rounds.RoundOptions): the
+        #: taps/backend overrides are applied to ``cfg`` here (they are
+        #: jit-key material of every round this server builds); engine and
+        #: chunk become the defaults ``run_rounds`` falls back to.
+        self.options = options if options is not None else RoundOptions()
+        self.cfg = self.options.apply_config(cfg)
         self.lr_schedule = lr_schedule
         self._round_cache: dict[tuple, Callable] = {}
         # Scan engines keyed by (schedule family tuple, m_byz, f_round,
@@ -298,8 +304,11 @@ class FedServer:
 def run_rounds(server: FedServer, state: dict, batch_fn: Callable,
                rounds: int, *,
                schedule: AttackSchedule = AttackSchedule(),
-               byz_identity=None, seed: int = 0, engine: str = "scan",
-               chunk: Optional[int] = None) -> tuple[dict, FedHistory]:
+               byz_identity=None, seed: int = 0,
+               engine: Optional[str] = None,
+               chunk: Optional[int] = None,
+               options: Optional[RoundOptions] = None
+               ) -> tuple[dict, FedHistory]:
     """Drive ``rounds`` federated rounds; returns (state, history).
 
     Args:
@@ -317,7 +326,21 @@ def run_rounds(server: FedServer, state: dict, batch_fn: Callable,
         counters land in ``server.last_scan_report``).  ``"loop"`` is the
         per-round jitted loop (one compile per attack family).
       chunk: scan segment length (None = the whole run in ONE program).
+      options: unified :class:`repro.rounds.RoundOptions`.  Resolution
+        order — explicit ``engine=``/``chunk=`` keywords, then this call's
+        ``options``, then the server's construction-time options.  The
+        taps/backend fields must be applied at server construction (they
+        are compiled-round key material), so a per-call override that
+        disagrees with the server's config raises.
     """
+    opts = resolve_options(options, engine=engine, chunk=chunk)
+    opts = server.options.merged(engine=opts.engine, chunk=opts.chunk,
+                                 taps=opts.taps, backend=opts.backend)
+    if opts.apply_config(server.cfg) is not server.cfg:
+        raise ValueError(
+            "run_rounds cannot override taps/backend per call — they are "
+            "compiled-round key material; pass options to FedServer(...)")
+    engine, chunk = opts.engine_or_default, opts.chunk
     cfg = server.cfg
     if byz_identity is None:
         byz_identity = FixedByzantine(cfg.n_clients, cfg.f)

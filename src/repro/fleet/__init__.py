@@ -16,17 +16,21 @@ produces bit-for-bit the same trajectory (tested), so batching is purely a
 throughput lever — `benchmarks/bench_fleet.py` measures it.
 """
 from repro.fleet.lanes import (
-    LANE_OP_FIELDS, build_fleet_round, build_fleet_scan, build_lane_round,
+    LANE_OP_FIELDS, build_fleet_round, build_fleet_scan, build_lane_admit,
+    build_lane_round, donation_supported,
 )
 from repro.fleet.runner import (
-    FleetJob, FleetResult, FleetRunner, LaneBucket, SCENARIO_OPTIMIZER,
-    ScenarioSpec, bucket_key, job_from_spec, run_fleet,
+    ContinuousBucket, FleetJob, FleetResult, FleetRunner, LaneBucket,
+    LaneSlot, SCENARIO_OPTIMIZER, ScenarioSpec, apply_job_options,
+    bucket_key, init_lane_state, job_from_spec, lane_filler,
+    plan_lane_round, run_fleet,
 )
 
 __all__ = [
     "LANE_OP_FIELDS", "build_fleet_round", "build_fleet_scan",
-    "build_lane_round",
-    "FleetJob", "FleetResult", "FleetRunner", "LaneBucket",
-    "SCENARIO_OPTIMIZER", "ScenarioSpec", "bucket_key", "job_from_spec",
-    "run_fleet",
+    "build_lane_admit", "build_lane_round", "donation_supported",
+    "ContinuousBucket", "FleetJob", "FleetResult", "FleetRunner",
+    "LaneBucket", "LaneSlot", "SCENARIO_OPTIMIZER", "ScenarioSpec",
+    "apply_job_options", "bucket_key", "init_lane_state", "job_from_spec",
+    "lane_filler", "plan_lane_round", "run_fleet",
 ]

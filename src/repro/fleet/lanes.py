@@ -141,10 +141,38 @@ def build_fleet_round(loss_fn: Callable, optimizer: Optimizer,
     return jax.jit(fleet_round)
 
 
+def donation_supported() -> bool:
+    """Whether the active backend honors ``donate_argnums`` (CPU jax
+    ignores it with a warning per call — so the continuous service only
+    requests donation off-CPU)."""
+    return jax.default_backend() != "cpu"
+
+
+def build_lane_admit(*, donate: bool = False) -> Callable:
+    """The continuous service's slot writer: ``admit(state, lane_state,
+    slot) -> state`` overwrites lane ``slot`` of the stacked state with a
+    fresh job's (unstacked) init state.
+
+    ``slot`` is a TRACED index (``lax.dynamic_update_index_in_dim``), so
+    one compile covers every slot of a bucket shape — admission never
+    retraces, which is what keeps mid-run admission O(chunk boundary)
+    instead of O(compile).  With ``donate=True`` the stacked state buffer
+    is donated, so admitting into a multi-MB bucket updates in place
+    rather than reallocating it.
+    """
+    def admit(state: dict, lane_state: dict, slot: Array):
+        return jax.tree_util.tree_map(
+            lambda full, one: jax.lax.dynamic_update_index_in_dim(
+                full, one, slot, 0),
+            state, lane_state)
+
+    return jax.jit(admit, donate_argnums=(0,) if donate else ())
+
+
 def build_fleet_scan(loss_fn: Callable, optimizer: Optimizer,
                      cfg: FedConfig, *,
-                     on_trace: Optional[Callable[[], None]] = None
-                     ) -> Callable:
+                     on_trace: Optional[Callable[[], None]] = None,
+                     donate: bool = False) -> Callable:
     """The scanned fleet program: ``lax.scan`` of the vmapped B-lane round
     over a leading ROUND axis — B lanes x K rounds in one compiled call.
 
@@ -157,6 +185,12 @@ def build_fleet_scan(loss_fn: Callable, optimizer: Optimizer,
     lane (tested) — while collapsing K dispatches + K metric fetches into
     one.  ``on_trace`` fires at TRACE time; each distinct segment length
     K is one trace of this program.
+
+    ``donate=True`` donates the carry state buffer (the continuous
+    service's steady-state: the bucket state is rewritten every chunk, so
+    holding the stale copy alive doubles resident state for nothing).
+    Donation changes buffer aliasing only, never math — the scanned
+    result stays bit-for-bit.
     """
     lane = build_lane_round(loss_fn, optimizer, cfg)
 
@@ -169,4 +203,4 @@ def build_fleet_scan(loss_fn: Callable, optimizer: Optimizer,
 
         return jax.lax.scan(step, state, operands)
 
-    return jax.jit(fleet_scan)
+    return jax.jit(fleet_scan, donate_argnums=(0,) if donate else ())

@@ -37,7 +37,10 @@ from repro.fed.server import FedConfig, rescale_f, sample_cohort
 from repro.fleet.lanes import build_fleet_scan
 from repro.obs import runtime as obs_runtime
 from repro.optim import Optimizer, sgd
-from repro.rounds import cadence_boundaries, split_segments, stack_rounds
+from repro.rounds import (
+    RoundOptions, cadence_boundaries, resolve_options, split_segments,
+    stack_rounds,
+)
 
 PyTree = Any
 
@@ -151,6 +154,99 @@ def job_from_spec(spec: ScenarioSpec, *, dim: int = 48,
         eval_fn=_mlp_eval(xt, yt))
 
 
+def apply_job_options(job: FleetJob, options: RoundOptions) -> FleetJob:
+    """``job`` with the options' taps/backend overrides applied to its
+    config.  Returns the SAME object for the no-op options so bucket keys
+    (which hash the config fields) and any caller-held references agree."""
+    cfg = options.apply_config(job.cfg)
+    return job if cfg is job.cfg else dataclasses.replace(job, cfg=cfg)
+
+
+# ---------------------------------------------------------------------------
+# Per-lane planning/state primitives — shared by the batch runner and the
+# continuous service, so the two paths are the same math by construction.
+# ---------------------------------------------------------------------------
+
+def plan_lane_round(job: FleetJob, r: int, rng: np.random.Generator
+                    ) -> tuple[Any, np.ndarray, dict, tuple]:
+    """HOST: one lane's decisions for its LOCAL round ``r``.
+
+    Consumes ``rng`` exactly like the single-scenario loop (cohort sample,
+    then batch build) — the rng is the LANE's own stream seeded from
+    ``job.seed``, so a lane's plan depends only on its own round index,
+    never on which other lanes share the bucket or when it was admitted.
+    That independence is what makes mid-run admission bit-safe.
+
+    Returns ``(batch, cohort, ops, meta)``; ``meta`` is the
+    ``(attack, raw_eta, cohort)`` triple the history demux records.
+    """
+    cfg = job.cfg
+    m_byz = job.m_byz
+    attack, eta = job.schedule.resolve(r)
+    cohort = sample_cohort(rng, cfg.n_clients, cfg.clients_per_round,
+                           job.byz_identity.ids(r), m_byz)
+    n_flip = m_byz if attack == "lf" else 0
+    batch = job.batch_fn(cohort, n_flip, rng)
+    ops = {"attack_id": dyn_attack_id(attack),
+           "m_byz": m_byz, "f_agg": m_byz,
+           "eta": eta if eta is not None else _ETA_DEFAULTS.get(attack, 0.0),
+           "beta": cfg.client.beta, "local_lr": cfg.client.local_lr,
+           "lr": float(job.lr_fn(r)), "active": r < job.rounds}
+    return batch, cohort, ops, (attack, eta, cohort)
+
+
+def init_lane_state(job: FleetJob) -> dict:
+    """One lane's (unstacked) device state at round 0 — identical to the
+    single-scenario engine's init for the same job."""
+    st = dict(params=job.params,
+              opt_state=job.optimizer.init(job.params),
+              step=jnp.zeros((), jnp.int32),
+              key=jax.random.PRNGKey(job.seed))
+    if job.cfg.client.algorithm == "dshb":
+        st["momentum"] = init_client_momentum(job.params,
+                                              job.cfg.n_clients)
+    return st
+
+
+def lane_filler(job: FleetJob) -> tuple[Any, np.ndarray, dict]:
+    """Per-round operands for an UNOCCUPIED lane slot, shaped like
+    ``job``'s real operands (the slot template job fixes the bucket's
+    shapes): zeroed batch, cohort 0s, attack "none", ``active=False``.
+
+    ``active=False`` freezes the slot's state via ``where``, so whatever
+    the filler computes is discarded elementwise — the values only need
+    to be finite-shaped, not meaningful.  Filler rounds consume NO rng:
+    an empty slot has no lane stream to perturb.
+    """
+    m = job.cfg.clients_per_round
+    probe = job.batch_fn(np.arange(m, dtype=np.int32), 0,
+                         np.random.default_rng(0))
+    batch = jax.tree_util.tree_map(
+        lambda a: np.zeros_like(np.asarray(a)), probe)
+    idx = np.zeros((m,), np.int32)
+    ops = {"attack_id": dyn_attack_id("none"), "m_byz": 0, "f_agg": 0,
+           "eta": 0.0, "beta": 0.0, "local_lr": 0.0, "lr": 0.0,
+           "active": False}
+    return batch, idx, ops
+
+
+#: Lane-operand field dtypes — the packing contract with
+#: :data:`repro.fleet.lanes.LANE_OP_FIELDS`.
+_OP_DTYPES = {"attack_id": np.int32, "m_byz": np.int32, "f_agg": np.int32,
+              "eta": np.float32, "beta": np.float32, "local_lr": np.float32,
+              "lr": np.float32, "active": bool}
+
+
+def _pack_round(batches: list, cohorts: list, ops: dict[str, list]) -> dict:
+    """Stack one round's per-lane plans into the ``(B, ...)`` operand dict
+    the vmapped lane round consumes."""
+    return {
+        "batch": jax.tree_util.tree_map(lambda *xs: np.stack(xs), *batches),
+        "idx": np.stack(cohorts).astype(np.int32),
+        "ops": {f: np.asarray(ops[f], dt) for f, dt in _OP_DTYPES.items()},
+    }
+
+
 # ---------------------------------------------------------------------------
 # Shape bucketing + compile cache.
 # ---------------------------------------------------------------------------
@@ -243,13 +339,22 @@ class FleetRunner:
     def __init__(self, jobs: Sequence[Union[FleetJob, ScenarioSpec]], *,
                  max_lanes: Optional[int] = None,
                  compile_cache: Optional[dict] = None,
-                 chunk: Optional[int] = None):
-        self.jobs = [job_from_spec(j) if isinstance(j, ScenarioSpec) else j
+                 chunk: Optional[int] = None,
+                 options: Optional[RoundOptions] = None):
+        # Unified knob resolution: an explicit ``chunk=`` wins over
+        # ``options.chunk`` (the shim rule); taps/backend overrides are
+        # applied to every job's config BEFORE packing so they land in the
+        # bucket key.  The fleet is scan-only, so ``engine`` is ignored.
+        opts = resolve_options(options, chunk=chunk)
+        self.options = opts
+        self.jobs = [apply_job_options(
+                         job_from_spec(j) if isinstance(j, ScenarioSpec)
+                         else j, opts)
                      for j in jobs]
         if not self.jobs:
             raise ValueError("empty fleet")
         self.max_lanes = max_lanes
-        self.chunk = chunk
+        self.chunk = opts.chunk
         # ``compile_cache`` may be shared across runners (FleetService
         # passes one per service) so later fleets reuse earlier compiles;
         # ``trace_count`` still counts only THIS runner's new tracings
@@ -320,72 +425,34 @@ class FleetRunner:
         cohorts/batches match the stepped engine's sample for sample.
         """
         jobs = bucket.jobs
-        cfg0 = jobs[0].cfg
-        m = cfg0.clients_per_round
         rngs = [np.random.default_rng(job.seed) for job in jobs]
-        m_byzs = [job.m_byz for job in jobs]
         max_rounds = max(job.rounds for job in jobs)
 
         per_round: list[dict] = []
         round_meta: list[tuple[list, list, list]] = []
         for r in range(max_rounds):
             attacks, etas_raw, cohorts, batches = [], [], [], []
-            ops = {k: [] for k in ("attack_id", "m_byz", "f_agg", "eta",
-                                   "beta", "local_lr", "lr", "active")}
+            ops: dict[str, list] = {k: [] for k in _OP_DTYPES}
             for k, job in enumerate(jobs):
-                attack, eta = job.schedule.resolve(r)
-                cohort = sample_cohort(rngs[k], cfg0.n_clients, m,
-                                       job.byz_identity.ids(r), m_byzs[k])
-                n_flip = m_byzs[k] if attack == "lf" else 0
-                batches.append(job.batch_fn(cohort, n_flip, rngs[k]))
+                batch, cohort, lane_ops, (attack, eta, _) = \
+                    plan_lane_round(job, r, rngs[k])
+                batches.append(batch)
                 attacks.append(attack)
                 etas_raw.append(eta)
                 cohorts.append(cohort)
-                ops["attack_id"].append(dyn_attack_id(attack))
-                ops["m_byz"].append(m_byzs[k])
-                ops["f_agg"].append(m_byzs[k])
-                ops["eta"].append(eta if eta is not None
-                                  else _ETA_DEFAULTS.get(attack, 0.0))
-                ops["beta"].append(job.cfg.client.beta)
-                ops["local_lr"].append(job.cfg.client.local_lr)
-                ops["lr"].append(float(job.lr_fn(r)))
-                ops["active"].append(r < job.rounds)
-
-            per_round.append({
-                "batch": jax.tree_util.tree_map(lambda *xs: np.stack(xs),
-                                                *batches),
-                "idx": np.stack(cohorts).astype(np.int32),
-                "ops": {
-                    "attack_id": np.asarray(ops["attack_id"], np.int32),
-                    "m_byz": np.asarray(ops["m_byz"], np.int32),
-                    "f_agg": np.asarray(ops["f_agg"], np.int32),
-                    "eta": np.asarray(ops["eta"], np.float32),
-                    "beta": np.asarray(ops["beta"], np.float32),
-                    "local_lr": np.asarray(ops["local_lr"], np.float32),
-                    "lr": np.asarray(ops["lr"], np.float32),
-                    "active": np.asarray(ops["active"], bool),
-                },
-            })
+                for f in _OP_DTYPES:
+                    ops[f].append(lane_ops[f])
+            per_round.append(_pack_round(batches, cohorts, ops))
             round_meta.append((attacks, etas_raw, cohorts))
         return stack_rounds(per_round), round_meta
 
     def _run_bucket(self, bucket: LaneBucket) -> list[FleetResult]:
         jobs = bucket.jobs
-        cfg0 = jobs[0].cfg
         fleet_scan = self._round_fn(bucket)
 
-        lane_states = []
-        for job in jobs:
-            st = dict(params=job.params,
-                      opt_state=job.optimizer.init(job.params),
-                      step=jnp.zeros((), jnp.int32),
-                      key=jax.random.PRNGKey(job.seed))
-            if cfg0.client.algorithm == "dshb":
-                st["momentum"] = init_client_momentum(job.params,
-                                                      cfg0.n_clients)
-            lane_states.append(st)
-        state = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs),
-                                       *lane_states)
+        state = jax.tree_util.tree_map(
+            lambda *xs: jnp.stack(xs),
+            *[init_lane_state(job) for job in jobs])
 
         m_byzs = [job.m_byz for job in jobs]
         hists = [FedHistory() for _ in jobs]
@@ -460,8 +527,217 @@ class FleetRunner:
         return out
 
 
+# ---------------------------------------------------------------------------
+# Continuous batching: a fixed-capacity bucket stepped chunk-by-chunk, with
+# admission / eviction / backfill at segment boundaries.
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class LaneSlot:
+    """Host-side record of one OCCUPIED slot in a continuous bucket.
+
+    ``local`` is the lane's own round clock (0 at admission), decoupled
+    from the bucket's global ``rounds_executed`` — all planning (schedule
+    resolution, cohort sampling, eval cadence) runs on lane-local rounds,
+    so a job admitted mid-run computes exactly what it would have computed
+    in a fresh bucket."""
+    job: FleetJob
+    token: Any                          # caller's opaque handle
+    rng: np.random.Generator
+    local: int = 0
+    hist: FedHistory = dataclasses.field(default_factory=FedHistory)
+    evals: list = dataclasses.field(default_factory=list)
+
+
+class ContinuousBucket:
+    """One shape bucket run as a service: B fixed lane slots, stepped one
+    scan segment at a time, with jobs entering and leaving at boundaries.
+
+    The compiled program is IDENTICAL to the batch runner's
+    (``build_fleet_scan`` of the same bucket key): occupancy is pure
+    operand data — empty/finished slots get :func:`lane_filler` operands
+    (``active=False`` freezes their state), so admitting, evicting, or
+    backfilling a lane never changes the traced shapes.  That is the
+    one-compile-per-(bucket x segment-length) invariant, now holding
+    under churn.
+
+    Admission writes the new lane's init state into its slot with ONE
+    compiled ``dynamic_update_index_in_dim`` over a traced slot index
+    (:func:`repro.fleet.lanes.build_lane_admit`) — optionally donating
+    the bucket state buffer, so admission updates the resident state in
+    place instead of reallocating it.
+    """
+
+    def __init__(self, key: tuple, template: FleetJob, capacity: int, *,
+                 chunk: Optional[int], fleet_scan: Callable,
+                 admit_fn: Callable):
+        if capacity <= 0:
+            raise ValueError(f"capacity must be positive, got {capacity}")
+        self.key = key
+        self.capacity = capacity
+        self.chunk = chunk
+        self._scan = fleet_scan
+        self._admit = admit_fn
+        self._filler = lane_filler(template)
+        filler_state = init_lane_state(template)
+        self.state = jax.tree_util.tree_map(
+            lambda x: jnp.stack([x] * capacity), filler_state)
+        self.slots: list[Optional[LaneSlot]] = [None] * capacity
+        #: Bucket-global round clock: total scan rounds executed, across
+        #: every lane generation this bucket has hosted.
+        self.rounds_executed = 0
+
+    # -- occupancy --------------------------------------------------------
+    @property
+    def occupied(self) -> int:
+        return sum(1 for s in self.slots if s is not None)
+
+    def free_slot(self) -> Optional[int]:
+        for k, s in enumerate(self.slots):
+            if s is None:
+                return k
+        return None
+
+    def slot_of(self, token: Any) -> Optional[int]:
+        for k, s in enumerate(self.slots):
+            if s is not None and s.token is token:
+                return k
+        return None
+
+    # -- admission / eviction ---------------------------------------------
+    def admit(self, job: FleetJob, token: Any = None) -> int:
+        """Occupy a free slot with ``job`` (effective at the NEXT segment
+        — call only at boundaries, i.e. between :meth:`step` calls)."""
+        k = self.free_slot()
+        if k is None:
+            raise RuntimeError("bucket is full")
+        self.state = self._admit(self.state, init_lane_state(job),
+                                 np.int32(k))
+        self.slots[k] = LaneSlot(job=job, token=token,
+                                 rng=np.random.default_rng(job.seed))
+        obs_runtime.event("fleet.admit", slot=k, label=job.label,
+                          at=self.rounds_executed)
+        return k
+
+    def cancel(self, k: int) -> FleetResult:
+        """Evict a running lane mid-job; returns the PARTIAL result
+        (history and evals up to the last completed boundary).  The slot
+        is immediately free for backfill; the lane's stale device state
+        stays in place, frozen by filler ``active=False`` operands."""
+        s = self.slots[k]
+        if s is None:
+            raise KeyError(f"slot {k} is empty")
+        return self._finalize(k, s)
+
+    def _finalize(self, k: int, s: LaneSlot) -> FleetResult:
+        self.slots[k] = None
+        obs_runtime.event("fleet.evict", slot=k, label=s.job.label,
+                          at=self.rounds_executed, rounds=s.local)
+        evals = [(r, float(v)) for r, v in s.evals]
+        best = max((a for _, a in evals), default=None)
+        return FleetResult(label=s.job.label, job=s.job,
+                           state=self.lane_state(k), history=s.hist,
+                           evals=evals, best_eval=best)
+
+    def lane_state(self, k: int) -> dict:
+        return jax.tree_util.tree_map(lambda leaf: leaf[k], self.state)
+
+    # -- stepping ---------------------------------------------------------
+    def next_seg_len(self, *, hold_for_pending: bool = False) -> int:
+        """Rounds the next segment will scan.
+
+        ``min(max remaining, chunk, every active lane's distance to its
+        next eval multiple)`` — for up-front admissions this reproduces
+        the batch runner's ``split_segments`` cuts exactly (same traces,
+        same carry returns).  With ``hold_for_pending`` the horizon drops
+        to ``min(remaining)``: when a job is waiting on this bucket, the
+        segment ends the moment the soonest lane can finish, so its slot
+        frees at the earliest boundary.
+        """
+        remaining = [s.job.rounds - s.local
+                     for s in self.slots if s is not None]
+        if not remaining:
+            return 0
+        length = min(remaining) if hold_for_pending else max(remaining)
+        if self.chunk is not None:
+            length = min(length, self.chunk)
+        for s in self.slots:
+            if (s is not None and s.job.eval_fn is not None
+                    and s.job.eval_every):
+                length = min(length,
+                             s.job.eval_every - s.local % s.job.eval_every)
+        return max(int(length), 1)
+
+    def step(self, *, hold_for_pending: bool = False
+             ) -> list[tuple[Any, FleetResult]]:
+        """Scan ONE segment; returns ``(token, result)`` for every lane
+        that finished at this boundary (their slots are already free)."""
+        lanes = [(k, s) for k, s in enumerate(self.slots) if s is not None]
+        if not lanes:
+            return []
+        seg = self.next_seg_len(hold_for_pending=hold_for_pending)
+        fill_batch, fill_idx, fill_ops = self._filler
+
+        per_round: list[dict] = []
+        metas: dict[int, list] = {k: [] for k, _ in lanes}
+        for i in range(seg):
+            batches, cohorts = [], []
+            ops: dict[str, list] = {f: [] for f in _OP_DTYPES}
+            for k in range(self.capacity):
+                s = self.slots[k]
+                if s is None or s.local + i >= s.job.rounds:
+                    batch, cohort, lane_ops = fill_batch, fill_idx, fill_ops
+                else:
+                    batch, cohort, lane_ops, meta = plan_lane_round(
+                        s.job, s.local + i, s.rng)
+                    metas[k].append((s.local + i,) + meta)
+                batches.append(batch)
+                cohorts.append(cohort)
+                for f in _OP_DTYPES:
+                    ops[f].append(lane_ops[f])
+            per_round.append(_pack_round(batches, cohorts, ops))
+        operands = stack_rounds(per_round)
+
+        start = self.rounds_executed
+        with obs_runtime.span("fleet.segment", start=start, end=start + seg,
+                              lanes=len(lanes)):
+            self.state, metrics = self._scan(self.state, operands)
+        self.rounds_executed += seg
+
+        obs_runtime.inc("fleet.transfers")
+        fetched = jax.device_get(metrics)
+        tap_cols = fetched["taps"].to_dict() if "taps" in fetched else None
+        finished: list[tuple[Any, FleetResult]] = []
+        for k, s in lanes:
+            for (local_r, attack, eta_raw, cohort) in metas[k]:
+                i = local_r - s.local
+                lane_metrics = {"loss": fetched["loss"][i][k],
+                                "lr": fetched["lr"][i][k],
+                                "direction_norm":
+                                    fetched["direction_norm"][i][k]}
+                if "kappa_hat" in fetched:
+                    lane_metrics["kappa_hat"] = fetched["kappa_hat"][i][k]
+                lane_taps = {f: v[i][k] for f, v in tap_cols.items()} \
+                    if tap_cols is not None else None
+                s.hist.record(lane_metrics, cohort=cohort, attack=attack,
+                              eta=eta_raw, m_byz=s.job.m_byz,
+                              f_round=s.job.m_byz, taps=lane_taps)
+            new_local = min(s.local + seg, s.job.rounds)
+            if (s.job.eval_fn is not None and s.job.eval_every
+                    and new_local != s.local
+                    and new_local % s.job.eval_every == 0):
+                s.evals.append((new_local,
+                                s.job.eval_fn(self.lane_state(k)["params"])))
+            s.local = new_local
+            if s.local >= s.job.rounds:
+                finished.append((s.token, self._finalize(k, s)))
+        return finished
+
+
 def run_fleet(jobs: Sequence[Union[FleetJob, ScenarioSpec]], *,
               max_lanes: Optional[int] = None,
-              chunk: Optional[int] = None) -> list[FleetResult]:
+              chunk: Optional[int] = None,
+              options: Optional[RoundOptions] = None) -> list[FleetResult]:
     """One-shot convenience: pack, run, return per-lane results."""
-    return FleetRunner(jobs, max_lanes=max_lanes, chunk=chunk).run()
+    return FleetRunner(jobs, max_lanes=max_lanes, chunk=chunk,
+                       options=options).run()

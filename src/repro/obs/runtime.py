@@ -77,6 +77,13 @@ class Runtime:
     def _now(self) -> float:
         return time.perf_counter() - self._epoch
 
+    def now(self) -> float:
+        """Seconds since the registry epoch — the timebase every ring
+        event's ``ts`` uses.  Callers stash this to later reconstruct
+        spans whose endpoints they only learn after the fact
+        (:meth:`span_at`)."""
+        return self._now()
+
     # -- emission ---------------------------------------------------------
     def event(self, name: str, **args: Any) -> dict:
         """Record an instant event; returns the (live) event dict."""
@@ -103,6 +110,21 @@ class Runtime:
                 self._seq += 1
                 ev["seq"] = self._seq
                 self._events.append(ev)
+
+    def span_at(self, name: str, start: float, end: Optional[float] = None,
+                **args: Any) -> dict:
+        """Record a span with EXPLICIT endpoints (values from
+        :meth:`now`), for intervals that aren't a ``with`` block — e.g.
+        the fleet service's submit->done job spans, whose start happened
+        turns ago in ``submit()``.  ``end=None`` means "now"."""
+        t1 = self._now() if end is None else end
+        ev = {"name": name, "kind": "span", "ts": start,
+              "dur": max(t1 - start, 0.0), "args": args}
+        with self._lock:
+            self._seq += 1
+            ev["seq"] = self._seq
+            self._events.append(ev)
+        return ev
 
     def inc(self, name: str, value: float = 1.0) -> float:
         """Bump a monotone counter; returns the new value."""
@@ -216,6 +238,15 @@ def span(name: str, **args: Any):
     return _RUNTIME.span(name, **args)
 
 
+def span_at(name: str, start: float, end: Optional[float] = None,
+            **args: Any) -> dict:
+    return _RUNTIME.span_at(name, start, end, **args)
+
+
+def now() -> float:
+    return _RUNTIME.now()
+
+
 def inc(name: str, value: float = 1.0) -> float:
     return _RUNTIME.inc(name, value)
 
@@ -258,7 +289,8 @@ from repro.kernels.dispatch import (   # noqa: E402  (intentional tail import)
 
 __all__ = [
     "DEFAULT_CAPACITY", "Runtime", "get_runtime",
-    "event", "span", "inc", "history", "counters", "snapshot", "reset",
+    "event", "span", "span_at", "now", "inc", "history", "counters",
+    "snapshot", "reset",
     "export_jsonl", "export_chrome_trace", "import_jsonl",
     "DispatchRecord", "KernelDecision", "dispatch_count",
     "dispatch_history", "last_dispatch",

@@ -17,6 +17,7 @@ A scanned run is bit-for-bit the per-round Python loop of the same body
 per-round dispatch + host round-trip, not to change any math.
 """
 from repro.rounds.engine import RoundEngine, WHOLE_RUN, split_segments
+from repro.rounds.options import ENGINES, RoundOptions, resolve_options
 from repro.rounds.plan import (
     cadence_boundaries, iterated_split_keys, resolve_attack_operands,
     schedule_families, stack_rounds,
@@ -24,6 +25,7 @@ from repro.rounds.plan import (
 
 __all__ = [
     "RoundEngine", "WHOLE_RUN", "split_segments",
+    "ENGINES", "RoundOptions", "resolve_options",
     "cadence_boundaries", "iterated_split_keys", "resolve_attack_operands",
     "schedule_families", "stack_rounds",
 ]

@@ -85,7 +85,12 @@ class RoundEngine:
     segments of the same length hit the XLA executable cache.
     """
 
-    def __init__(self, body: Callable, *, chunk: Optional[int] = WHOLE_RUN):
+    def __init__(self, body: Callable, *, chunk: Optional[int] = WHOLE_RUN,
+                 options: Optional["RoundOptions"] = None):  # noqa: F821
+        # ``options`` is the unified knob object (repro.rounds.options);
+        # an explicit ``chunk`` keyword wins over it (the shim rule).
+        if options is not None and chunk is WHOLE_RUN:
+            chunk = options.chunk
         self.body = body
         self.chunk = chunk
         self.trace_count = 0

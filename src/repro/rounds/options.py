@@ -1,0 +1,93 @@
+"""RoundOptions: the one shared "how do I execute rounds" knob set.
+
+Before this module, the same four execution knobs were duplicated across
+every loop owner with slightly different spellings: ``train_loop(engine=,
+chunk=)`` + ``TrainerConfig.taps`` + ``AggregatorSpec.backend``,
+``run_rounds(engine=, chunk=)`` + ``FedConfig.taps``, ``FleetRunner(chunk=)``
+and ``FleetService(chunk=)`` with taps/backend buried in each job's config.
+:class:`RoundOptions` is the single dataclass every surface now accepts
+(``options=``); the old keyword arguments remain as back-compat shims and,
+when given explicitly, win over the options object.
+
+Semantics of ``None`` everywhere: "inherit" — the surface's historical
+default for ``engine``/``chunk`` (scan, whole-run), the config's own
+setting for ``taps``/``backend``.  That makes ``RoundOptions()`` a no-op
+and lets one partially-filled object overlay any config.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+#: Valid ``engine`` values (``None`` = the surface default, "scan").
+ENGINES = ("scan", "loop")
+
+
+@dataclasses.dataclass(frozen=True)
+class RoundOptions:
+    """Execution options shared by trainer, fed, fleet, and the service.
+
+    ``engine``  — "scan" (chunked ``lax.scan`` programs) or "loop" (the
+                  per-round jitted Python loop); ``None`` = surface default
+                  ("scan").  The fleet is scan-only and ignores it.
+    ``chunk``   — scan segment length in rounds (``None`` = whole run /
+                  cut only at eval boundaries).  For the continuous
+                  :class:`~repro.serving.FleetService` this is also the
+                  admission cadence: jobs enter at chunk boundaries.
+    ``taps``    — force in-scan health taps on/off (``None`` = keep the
+                  config's ``taps`` flag).  Static jit-key material.
+    ``backend`` — force the aggregation kernel backend ("xla" | "pallas" |
+                  "pallas_sharded" | "auto"; ``None`` = keep
+                  ``AggregatorSpec.backend``).  Static bucket-key material.
+    """
+    engine: Optional[str] = None
+    chunk: Optional[int] = None
+    taps: Optional[bool] = None
+    backend: Optional[str] = None
+
+    def __post_init__(self):
+        if self.engine is not None and self.engine not in ENGINES:
+            raise ValueError(
+                f"engine must be one of {ENGINES} or None, got {self.engine!r}")
+        if self.chunk is not None and self.chunk <= 0:
+            raise ValueError(f"chunk must be positive or None, got {self.chunk}")
+
+    # -- shim resolution ---------------------------------------------------
+    def merged(self, *, engine: Optional[str] = None,
+               chunk: Optional[int] = None, taps: Optional[bool] = None,
+               backend: Optional[str] = None) -> "RoundOptions":
+        """This options object overlaid with explicitly-passed legacy
+        keywords (the back-compat rule: an explicit keyword always wins)."""
+        return RoundOptions(
+            engine=engine if engine is not None else self.engine,
+            chunk=chunk if chunk is not None else self.chunk,
+            taps=taps if taps is not None else self.taps,
+            backend=backend if backend is not None else self.backend)
+
+    @property
+    def engine_or_default(self) -> str:
+        return self.engine if self.engine is not None else "scan"
+
+    def apply_config(self, cfg):
+        """``cfg`` (TrainerConfig or FedConfig — anything with ``.taps``
+        and ``.agg``) with the taps/backend overrides applied; returns the
+        SAME object when nothing changes, so jit caches keyed on config
+        identity stay warm for the no-op options."""
+        if self.taps is not None and self.taps != cfg.taps:
+            cfg = dataclasses.replace(cfg, taps=self.taps)
+        if self.backend is not None and self.backend != cfg.agg.backend:
+            cfg = dataclasses.replace(
+                cfg, agg=dataclasses.replace(cfg.agg, backend=self.backend))
+        return cfg
+
+
+def resolve_options(options: Optional[RoundOptions] = None, *,
+                    engine: Optional[str] = None,
+                    chunk: Optional[int] = None,
+                    taps: Optional[bool] = None,
+                    backend: Optional[str] = None) -> RoundOptions:
+    """The shim resolver every surface funnels through: start from the
+    given ``options`` (or the all-inherit default), overlay any explicitly
+    passed legacy keywords."""
+    base = options if options is not None else RoundOptions()
+    return base.merged(engine=engine, chunk=chunk, taps=taps, backend=backend)

@@ -1,5 +1,6 @@
 from repro.serving.engine import (
-    FleetService, FleetTicket, ServeEngine, greedy_decode,
+    FleetService, FleetTicket, JobHandle, ServeEngine, greedy_decode,
 )
 
-__all__ = ["FleetService", "FleetTicket", "ServeEngine", "greedy_decode"]
+__all__ = ["FleetService", "FleetTicket", "JobHandle", "ServeEngine",
+           "greedy_decode"]

@@ -4,14 +4,17 @@ Two request planes share this module:
 
 * :class:`ServeEngine` — static-batch prefill + greedy decode over the
   model zoo's cache API (the decode_32k / long_500k dry-run function).
-* :class:`FleetService` — submit/poll over the lane-batched scenario
-  executor (:mod:`repro.fleet`): callers enqueue scenario jobs one at a
-  time; ``drain()`` packs everything queued into shape buckets and runs
-  them as one fleet, amortizing compiles and dispatches across tenants.
+* :class:`FleetService` — continuous batching over the lane-batched
+  scenario executor (:mod:`repro.fleet`): ``submit()`` returns a
+  :class:`JobHandle`; the service steps shape buckets chunk-by-chunk,
+  admitting new jobs into free lane slots at segment boundaries, evicting
+  finished/cancelled lanes, and backfilling their slots — compiles and
+  dispatches amortize across tenants while jobs stream in and out.
 """
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Any, Optional, Union
 
 import jax
@@ -111,45 +114,174 @@ def greedy_decode(model, params, prompts: Array, max_new: int = 32,
 
 
 # ---------------------------------------------------------------------------
-# Fleet scenario service: multi-tenant submit/poll over the lane executor.
+# Fleet scenario service: continuous batching over the lane executor.
 # ---------------------------------------------------------------------------
 
 @dataclasses.dataclass
 class FleetTicket:
-    """One submitted job's lifecycle record."""
+    """Legacy lifecycle record from the pre-:class:`JobHandle` API.  Kept
+    for import compatibility only — the service now tracks handles; the
+    :meth:`FleetService.poll` shim returns the same dict it always did."""
     job_id: int
     label: str
     status: str = "queued"              # queued | done
     result: Any = None                  # FleetResult once done
 
 
+class JobHandle:
+    """What :meth:`FleetService.submit` returns: one job's lifecycle.
+
+    * :meth:`status` — ``"queued"`` (waiting for a lane), ``"running"``
+      (occupying a bucket slot), ``"done"``, or ``"cancelled"``.
+    * :meth:`result` — drives the service until this job finishes and
+      returns its :class:`repro.fleet.FleetResult`; raises
+      ``RuntimeError`` if the job was cancelled.
+    * :meth:`cancel` — dequeues a queued job, or evicts a running lane at
+      the current boundary (its slot backfills immediately); the partial
+      history survives on the handle.
+
+    Handles are **int-compatible** with the legacy id API: ``int(h)`` is
+    the job id and ``h == job_id`` holds, so callers written against the
+    old ``submit() -> int`` contract keep working through the
+    :meth:`FleetService.poll`/:meth:`FleetService.drain` shims.
+    """
+
+    def __init__(self, service: "FleetService", job_id: int, job: Any, *,
+                 deadline: Optional[float] = None):
+        self._service = service
+        self.job_id = job_id
+        self.job = job
+        #: Admission priority: pending jobs are admitted in ascending
+        #: ``(deadline, job_id)`` order (``None`` sorts last).
+        self.deadline = deadline
+        self._status = "queued"
+        self._result = None
+        self.key: Optional[tuple] = None        # bucket key (service fills)
+        # Latency accounting — registry-epoch seconds (obs_runtime.now())
+        # and service boundary counts; bench_fleet's latency smoke reads
+        # these off the handles.
+        self.submit_ts = obs_runtime.now()
+        self.admit_ts: Optional[float] = None
+        self.first_ts: Optional[float] = None
+        self.done_ts: Optional[float] = None
+        self.submit_step = service.steps
+        self.admit_step: Optional[int] = None
+
+    def status(self) -> str:
+        return self._status
+
+    def result(self) -> Any:
+        """The finished :class:`~repro.fleet.FleetResult` — steps the
+        service (admitting/evicting as it goes) until this job is done."""
+        if self._status in ("queued", "running"):
+            self._service._run_until_done(self)
+        if self._status == "cancelled":
+            raise RuntimeError(
+                f"job {self.job_id} ({self.job.label}) was cancelled; "
+                "partial history is on handle.partial_result")
+        return self._result
+
+    def cancel(self) -> bool:
+        """Cancel if not already finished; returns whether anything was
+        cancelled.  A running job is evicted at the current boundary and
+        its slot is immediately reusable."""
+        return self._service._cancel(self)
+
+    @property
+    def partial_result(self) -> Any:
+        """For cancelled jobs: the partial :class:`FleetResult` up to the
+        last completed boundary (``None`` if cancelled while queued)."""
+        return self._result
+
+    # -- legacy int-id compatibility --------------------------------------
+    def __int__(self) -> int:
+        return self.job_id
+
+    def __index__(self) -> int:
+        return self.job_id
+
+    def __eq__(self, other: Any):
+        if isinstance(other, JobHandle):
+            return other is self
+        if isinstance(other, int):
+            return self.job_id == other
+        return NotImplemented
+
+    def __hash__(self) -> int:
+        return hash(self.job_id)
+
+    def __repr__(self) -> str:
+        return (f"JobHandle({self.job_id}, {self.job.label!r}, "
+                f"{self._status})")
+
+
 class FleetService:
-    """Submit/poll API over :class:`repro.fleet.FleetRunner`.
+    """Continuous-batching service over the fleet's lane executor.
 
-    The service is the multi-tenant front door the ROADMAP's "heavy
-    traffic" goal implies: tenants submit scenario jobs independently;
-    the service batches whatever is queued into lane buckets and steps
-    them together.  Execution is synchronous and explicit — ``drain()``
-    runs the queue to completion (a deliberate design: the caller owns
-    the device, so there is no background thread fighting jit).
+    The old service was a batch front door: ``submit()`` queued, ``drain()``
+    packed everything queued into :class:`repro.fleet.FleetRunner` buckets
+    and ran them to completion — a job arriving mid-drain waited for the
+    whole fleet.  This service RUNS instead: each :meth:`step` scans every
+    occupied bucket forward by one chunk segment, and at the segment
+    boundaries jobs are admitted into free lane slots (deadline order),
+    finished/cancelled lanes are evicted, and freed slots are backfilled —
+    so a job submitted mid-run starts within one chunk boundary whenever
+    its bucket has (or frees) a slot.
 
-    ``submit`` accepts a ``repro.fleet.ScenarioSpec`` or a materialized
-    ``repro.fleet.FleetJob``; ``poll`` never blocks.
+    Invariants carried over from the batch engine, now holding under churn:
+
+    * **one compile per (bucket shape x segment length)** — occupancy is
+      operand data (empty slots run :func:`repro.fleet.lane_filler`
+      operands, frozen by ``active=False``), never trace material;
+    * **bit-for-bit parity** — jobs all submitted before the first step
+      produce exactly the batch runner's results (same lane order, same
+      per-lane rng streams, same segment cuts);
+    * admission writes lane state with one donated
+      ``dynamic_update_index_in_dim`` program — no bucket reallocation
+      (donation auto-disables on CPU, where jax ignores it).
+
+    Execution stays synchronous and explicit — the caller owns the device;
+    ``step()`` / ``run_until_idle()`` / ``JobHandle.result()`` drive it.
+    ``poll()``/``drain()`` survive as deprecation shims over the same
+    continuous engine.
     """
 
     def __init__(self, *, max_lanes: Optional[int] = None,
-                 chunk: Optional[int] = None):
+                 chunk: Optional[int] = None,
+                 options: Optional["RoundOptions"] = None,  # noqa: F821
+                 donate: Optional[bool] = None):
+        from repro.rounds import resolve_options
+        #: Unified execution knobs (`repro.rounds.RoundOptions`); the
+        #: legacy ``chunk=`` keyword wins over ``options.chunk``, and the
+        #: taps/backend fields are applied to every submitted job's config.
+        self.options = resolve_options(options, chunk=chunk)
+        #: Bucket capacity: lanes per bucket (None = size each bucket to
+        #: the jobs pending for its key when it is created).
         self.max_lanes = max_lanes
-        #: Scan segment length forwarded to every drain's FleetRunner
-        #: (None = each bucket's whole run is one compiled scan program).
-        self.chunk = chunk
-        self._tickets: dict[int, FleetTicket] = {}
-        self._queue: list[int] = []
-        self._next_id = 0
-        # Shared across drains: a tenant resubmitting the same scenario
-        # shape later must NOT pay the XLA compile again.
+        #: Scan segment length == admission cadence (None = a bucket's
+        #: whole remaining horizon is one segment).
+        self.chunk = self.options.chunk
+        #: Buffer-donation override (None = auto: on unless the backend
+        #: is CPU, which ignores donation).
+        self.donate = donate
+        self._handles: dict[int, JobHandle] = {}
+        self._pending: list[JobHandle] = []
+        self._buckets: dict[tuple, Any] = {}    # key -> ContinuousBucket
+        # Shared across bucket generations: a tenant resubmitting the
+        # same scenario shape later must NOT pay the XLA compile again.
         self._compile_cache: dict = {}
+        self._admit_fn = None
+        self._next_id = 0
+        #: Chunk-boundary counter ("virtual time" for admission latency:
+        #: a mid-run submit must start within one boundary).
+        self.steps = 0
+        #: Total scan rounds executed across all buckets (virtual clock
+        #: for deterministic arrival workloads in benchmarks).
+        self.rounds_executed = 0
         self.drains = 0
+        #: Lifetime round-program traces (fleet.trace events) attributed
+        #: to this service's compile cache.
+        self.trace_count = 0
         self.last_trace_count = 0
         #: Kernel-backend decision record of the latest drain's aggregation
         #: trace (None when the drain hit the compile cache — dispatch is
@@ -160,57 +292,239 @@ class FleetService:
         #: fallback with mesh_devices=1 — never silent.
         self.last_dispatch = None
 
-    def submit(self, job: Union["ScenarioSpec", "FleetJob"]) -> int:  # noqa: F821
-        """Enqueue a job; returns its job_id immediately."""
-        from repro.fleet import FleetJob, ScenarioSpec, job_from_spec
+    # -- submission -------------------------------------------------------
+    def submit(self, job: Union["ScenarioSpec", "FleetJob"], *,  # noqa: F821
+               deadline: Optional[float] = None) -> JobHandle:
+        """Enqueue a job; returns its :class:`JobHandle` immediately.
+
+        ``deadline`` (any comparable float, e.g. seconds or a round
+        budget) orders admission when jobs compete for lane slots:
+        earliest deadline first, ties by submission order.  ``None``
+        sorts after every explicit deadline.
+        """
+        from repro.fed.metrics import FedHistory
+        from repro.fleet import (
+            FleetJob, FleetResult, ScenarioSpec, apply_job_options,
+            bucket_key, init_lane_state, job_from_spec,
+        )
         if isinstance(job, ScenarioSpec):
             job = job_from_spec(job)
         elif not isinstance(job, FleetJob):
             raise TypeError(f"submit wants ScenarioSpec | FleetJob, "
                             f"got {type(job).__name__}")
-        job_id = self._next_id
+        job = apply_job_options(job, self.options)
+        handle = JobHandle(self, self._next_id, job, deadline=deadline)
         self._next_id += 1
-        self._tickets[job_id] = FleetTicket(job_id, job.label)
-        self._tickets[job_id].result = job      # stash until drain
-        self._queue.append(job_id)
-        return job_id
+        self._handles[handle.job_id] = handle
+        handle.key = bucket_key(job, chunk=self.chunk)
+        obs_runtime.event("fleet.submit", job_id=handle.job_id,
+                          label=job.label, deadline=deadline)
+        if job.rounds == 0:
+            # Degenerate zero-round job: done at submission (the batch
+            # runner's behavior), never occupies a lane.
+            handle._result = FleetResult(
+                label=job.label, job=job, state=init_lane_state(job),
+                history=FedHistory(), evals=[])
+            handle._status = "done"
+            now = obs_runtime.now()
+            handle.admit_ts = handle.first_ts = handle.done_ts = now
+            handle.admit_step = self.steps
+        else:
+            self._pending.append(handle)
+        return handle
 
     @property
     def pending(self) -> int:
-        return len(self._queue)
+        """Jobs not yet finished (queued + running)."""
+        return sum(1 for h in self._handles.values()
+                   if h._status in ("queued", "running"))
 
-    def poll(self, job_id: int) -> dict:
-        """Non-blocking status: {'status', 'label', 'result'?}."""
-        if job_id not in self._tickets:
-            raise KeyError(f"unknown job_id {job_id}")
-        t = self._tickets[job_id]
-        out = {"job_id": t.job_id, "status": t.status, "label": t.label}
-        if t.status == "done":
-            out["result"] = t.result
+    # -- the drain loop ---------------------------------------------------
+    def _sorted_pending(self) -> list[JobHandle]:
+        return sorted(self._pending,
+                      key=lambda h: (h.deadline if h.deadline is not None
+                                     else float("inf"), h.job_id))
+
+    def _make_bucket(self, key: tuple, template: Any, capacity: int):
+        from repro.fleet import (
+            ContinuousBucket, build_fleet_scan, build_lane_admit,
+            donation_supported,
+        )
+        donate = self.donate if self.donate is not None \
+            else donation_supported()
+        cache_key = (key, capacity)
+        if cache_key not in self._compile_cache:
+            def bump(lanes=capacity):
+                self.trace_count += 1
+                obs_runtime.event("fleet.trace", lanes=lanes,
+                                  trace_count=self.trace_count)
+            self._compile_cache[cache_key] = build_fleet_scan(
+                template.loss_fn, template.optimizer, template.cfg,
+                on_trace=bump, donate=donate)
+        if self._admit_fn is None:
+            self._admit_fn = build_lane_admit(donate=donate)
+        return ContinuousBucket(key, template, capacity, chunk=self.chunk,
+                                fleet_scan=self._compile_cache[cache_key],
+                                admit_fn=self._admit_fn)
+
+    def _admit_pending(self) -> None:
+        """Admit queued jobs into free slots, earliest deadline first.
+        Creates a bucket for a key that has none (sized to ``max_lanes``,
+        or to the jobs currently pending for that key)."""
+        admitted = []
+        for handle in self._sorted_pending():
+            bucket = self._buckets.get(handle.key)
+            if bucket is None:
+                cap = self.max_lanes or sum(
+                    1 for p in self._pending if p.key == handle.key)
+                bucket = self._make_bucket(handle.key, handle.job, cap)
+                self._buckets[handle.key] = bucket
+            if bucket.free_slot() is None:
+                continue
+            bucket.admit(handle.job, token=handle)
+            handle._status = "running"
+            handle.admit_ts = obs_runtime.now()
+            handle.admit_step = self.steps
+            admitted.append(handle)
+        for handle in admitted:
+            self._pending.remove(handle)
+
+    def step(self) -> bool:
+        """Advance the service by ONE chunk boundary: admit pending jobs
+        (deadline order), scan one segment per occupied bucket, finalize
+        and evict finished lanes, then backfill the freed slots — so a
+        submit landing between boundaries starts within one boundary
+        whenever a slot is (or comes) free.  Returns True while work
+        remains."""
+        self._admit_pending()
+        for key, bucket in list(self._buckets.items()):
+            if bucket.occupied == 0:
+                continue
+            # A pending job aimed at a FULL bucket clips the segment to
+            # the soonest lane finish, freeing its slot at the earliest
+            # possible boundary.
+            hold = any(h.key == key for h in self._pending)
+            before = bucket.rounds_executed
+            for token, res in bucket.step(hold_for_pending=hold):
+                self._finish(token, res)
+            self.rounds_executed += bucket.rounds_executed - before
+            now = obs_runtime.now()
+            for slot in bucket.slots:
+                if (slot is not None and slot.local > 0
+                        and slot.token is not None
+                        and slot.token.first_ts is None):
+                    slot.token.first_ts = now
+        self.steps += 1
+        # Backfill freed slots NOW, not next call: an evicted lane's slot
+        # is reusable at this very boundary.
+        self._admit_pending()
+        # Retire idle buckets nothing is waiting on, so the next wave for
+        # that key sizes its bucket to ITS demand (compiles stay cached).
+        for key in [k for k, b in self._buckets.items() if b.occupied == 0]:
+            if not any(h.key == key for h in self._pending):
+                del self._buckets[key]
+        return bool(self._pending) or any(
+            b.occupied for b in self._buckets.values())
+
+    def run_until_idle(self) -> None:
+        """Step until every submitted job has finished."""
+        while self.step():
+            pass
+
+    def _run_until_done(self, handle: JobHandle) -> None:
+        while handle._status in ("queued", "running"):
+            remaining = self.step()
+            if handle._status in ("done", "cancelled"):
+                return
+            if not remaining:       # pragma: no cover - defensive
+                raise RuntimeError(
+                    f"service went idle with job {handle.job_id} "
+                    f"({handle._status}) unfinished")
+
+    def _finish(self, handle: JobHandle, result: Any) -> None:
+        handle._result = result
+        handle._status = "done"
+        handle.done_ts = obs_runtime.now()
+        if handle.first_ts is None:
+            handle.first_ts = handle.done_ts
+        obs_runtime.span_at(
+            "fleet.job", handle.submit_ts, handle.done_ts,
+            job_id=handle.job_id, label=handle.job.label,
+            rounds=result.history.rounds,
+            wait_steps=(handle.admit_step - handle.submit_step
+                        if handle.admit_step is not None else None))
+
+    def _cancel(self, handle: JobHandle) -> bool:
+        if handle._status == "queued":
+            self._pending.remove(handle)
+            handle._status = "cancelled"
+            handle.done_ts = obs_runtime.now()
+            obs_runtime.event("fleet.cancel", job_id=handle.job_id,
+                              label=handle.job.label, queued=True)
+            return True
+        if handle._status == "running":
+            for bucket in self._buckets.values():
+                k = bucket.slot_of(handle)
+                if k is not None:
+                    handle._result = bucket.cancel(k)       # partial
+                    handle._status = "cancelled"
+                    handle.done_ts = obs_runtime.now()
+                    obs_runtime.event(
+                        "fleet.cancel", job_id=handle.job_id,
+                        label=handle.job.label, queued=False,
+                        rounds=handle._result.history.rounds)
+                    return True
+        return False
+
+    # -- deprecation shims (the pre-JobHandle int-id API) ------------------
+    def poll(self, job_id: Union[int, JobHandle]) -> dict:
+        """DEPRECATED: non-blocking status dict, from the int-id API.
+        Prefer holding the :class:`JobHandle` from :meth:`submit` and
+        using ``.status()`` / ``.result()``."""
+        warnings.warn(
+            "FleetService.poll(job_id) is deprecated; use the JobHandle "
+            "returned by submit(): handle.status() / handle.result()",
+            DeprecationWarning, stacklevel=2)
+        try:
+            jid = int(job_id)
+        except (TypeError, ValueError):
+            raise KeyError(f"unknown job_id {job_id!r}: poll wants a "
+                           "job id or JobHandle") from None
+        handle = self._handles.get(jid)
+        if handle is None:
+            raise KeyError(f"unknown job_id {jid}: never submitted to "
+                           "this service")
+        out = {"job_id": jid, "status": handle._status,
+               "label": handle.job.label}
+        if handle._status == "done":
+            out["result"] = handle._result
         return out
 
-    def drain(self) -> list[int]:
-        """Run everything queued as ONE fleet; returns the finished ids."""
-        from repro.fleet import FleetRunner
+    def drain(self) -> list[JobHandle]:
+        """DEPRECATED: run every unfinished job to completion; returns
+        their handles in submission order (int-comparable with the old
+        id-list return).  Prefer :meth:`run_until_idle` or
+        ``handle.result()``."""
+        warnings.warn(
+            "FleetService.drain() is deprecated; the service is "
+            "continuous — use step()/run_until_idle() and "
+            "JobHandle.result()", DeprecationWarning, stacklevel=2)
         from repro.kernels import dispatch as kdispatch
-        if not self._queue:
+        todo = sorted((h for h in self._handles.values()
+                       if h._status in ("queued", "running")),
+                      key=lambda h: h.job_id)
+        if not todo:
             return []
-        ids = self._queue
-        self._queue = []
-        jobs = [self._tickets[i].result for i in ids]
-        runner = FleetRunner(jobs, max_lanes=self.max_lanes,
-                             compile_cache=self._compile_cache,
-                             chunk=self.chunk)
-        before = kdispatch.dispatch_count()
-        with obs_runtime.span("fleet.drain", jobs=len(ids),
-                              buckets=runner.n_buckets, drain=self.drains):
-            for i, res in zip(ids, runner.run()):
-                self._tickets[i].status = "done"
-                self._tickets[i].result = res
+        before_disp = kdispatch.dispatch_count()
+        before_trace = self.trace_count
+        with obs_runtime.span("fleet.drain", jobs=len(todo),
+                              buckets=len({h.key for h in todo}),
+                              drain=self.drains):
+            self.run_until_idle()
         self.drains += 1
-        self.last_trace_count = runner.trace_count
+        self.last_trace_count = self.trace_count - before_trace
         # New record opened during THIS drain?  The monotone dispatch_count
         # detects it even though the bounded ring recycles entries.
         self.last_dispatch = kdispatch.last_dispatch() \
-            if kdispatch.dispatch_count() > before else None
-        return ids
+            if kdispatch.dispatch_count() > before_disp else None
+        return [h for h in todo if h._status == "done"]

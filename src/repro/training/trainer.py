@@ -27,6 +27,7 @@ from repro.core.attacks import apply_attack_tree
 from repro.core.theory import tree_kappa_hat
 from repro.core.types import AggregatorSpec
 from repro.optim import Optimizer, global_norm
+from repro.rounds.options import RoundOptions, resolve_options
 
 PyTree = Any
 Array = jax.Array
@@ -235,8 +236,9 @@ def build_train_step(loss_fn: Callable, optimizer: Optimizer,
 def train_loop(loss_fn, params, batches, optimizer, cfg: TrainerConfig,
                lr_schedule, steps: int, *, seed: int = 0,
                eval_fn: Optional[Callable] = None, eval_every: int = 0,
-               track_best: bool = True, engine: str = "scan",
-               chunk: Optional[int] = None):
+               track_best: bool = True, engine: Optional[str] = None,
+               chunk: Optional[int] = None,
+               options: Optional[RoundOptions] = None):
     """Runs `steps` iterations; returns (final_params, history dict).
 
     Implements the paper's model selection: for D-GD, theta_hat is the
@@ -251,8 +253,17 @@ def train_loop(loss_fn, params, batches, optimizer, cfg: TrainerConfig,
     ``chunk`` bounds the scan segment length (None = whole run between
     eval boundaries); the scan path also returns a ``"scan_report"`` with
     the engine's compile counters.
+
+    ``options`` is the unified :class:`repro.rounds.RoundOptions` knob
+    object; the ``engine=``/``chunk=`` keywords are back-compat shims that
+    win when passed explicitly, and ``options.taps``/``options.backend``
+    override ``cfg.taps`` / ``cfg.agg.backend``.
     """
     import numpy as np
+
+    opts = resolve_options(options, engine=engine, chunk=chunk)
+    cfg = opts.apply_config(cfg)
+    engine, chunk = opts.engine_or_default, opts.chunk
 
     if engine == "loop":
         return _train_loop_loop(loss_fn, params, batches, optimizer, cfg,

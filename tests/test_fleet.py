@@ -332,8 +332,11 @@ def test_fleet_service_reuses_compiles_across_drains():
     """A tenant resubmitting the same scenario shape (and lane count) in a
     later drain must not pay the XLA compile again — the service's
     amortization contract.  A different lane count is a different vmapped
-    shape and legitimately traces once more."""
-    svc = FleetService()
+    shape and legitimately traces once more.  ``chunk=1`` pins the segment
+    length, so trace counts depend only on (bucket shape, lane count) —
+    the continuous engine otherwise sizes segments to each wave's
+    horizon."""
+    svc = FleetService(chunk=1)
     svc.submit(_job("first", seed=0, rounds=2))
     svc.drain()
     assert svc.last_trace_count == 1

@@ -1,0 +1,318 @@
+"""Continuous-batching fleet service tests.
+
+The load-bearing contracts:
+
+* jobs all submitted up front run BIT-FOR-BIT the batch ``FleetRunner``
+  (continuous batching is a latency lever, never different math);
+* a job submitted mid-run is admitted into a partially-filled bucket
+  within one chunk boundary, and its trajectory equals its solo run —
+  neighbors' churn is invisible to a lane;
+* cancel evicts the lane at the boundary and its slot backfills;
+* admission is deadline-ordered;
+* compiles stay one-per-(bucket shape x segment length) under churn;
+* the legacy int-id ``poll``/``drain`` API survives as deprecation shims;
+* :class:`repro.rounds.RoundOptions` is accepted by every surface with
+  explicit keywords winning.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import AggregatorSpec
+from repro.fed import (
+    ClientConfig, FedConfig, FedServer, constant_attack, run_rounds,
+)
+from repro.fleet import FleetJob, FleetRunner
+from repro.optim import sgd
+from repro.optim.schedules import constant
+from repro.rounds import RoundOptions, resolve_options
+from repro.serving import FleetService, JobHandle
+
+
+def _quad_loss(centers):
+    def loss_fn(params, batch):
+        c = centers[batch["idx"][0]]
+        return 0.5 * jnp.sum((params["theta"] - c) ** 2), {}
+    return loss_fn
+
+
+def _centers(seed, n, d):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.normal(size=(n, d)), jnp.float32)
+
+
+def _idx_batch_fn(cohort, n_flip, rng):
+    return {"idx": np.asarray(cohort)[:, None, None]}
+
+
+_N, _M, _D = 10, 6, 5
+_CENTERS = _centers(0, _N, _D)
+_LOSS = _quad_loss(_CENTERS)
+_OPT = sgd(clip=1.0)
+
+
+def _job(label, *, f=2, schedule=None, seed=0, rounds=5, beta=0.9,
+         eval_every=0, lr=0.1):
+    cfg = FedConfig(n_clients=_N, clients_per_round=_M, f=f,
+                    agg=AggregatorSpec(rule="cwtm", f=f, pre="nnm"),
+                    client=ClientConfig(local_lr=0.05, algorithm="dshb",
+                                        beta=beta))
+    eval_fn = (lambda params: -jnp.sum(params["theta"] ** 2)) \
+        if eval_every else None
+    return FleetJob(label=label, cfg=cfg, loss_fn=_LOSS, optimizer=_OPT,
+                    params={"theta": jnp.zeros((_D,), jnp.float32)},
+                    batch_fn=_idx_batch_fn, rounds=rounds, seed=seed,
+                    schedule=schedule or constant_attack("alie", 2.0),
+                    eval_fn=eval_fn, eval_every=eval_every,
+                    lr_fn=lambda r: lr)
+
+
+def _assert_same_result(a, b):
+    assert a.history.rounds == b.history.rounds
+    assert a.history.loss == b.history.loss
+    assert a.history.direction_norm == b.history.direction_norm
+    assert a.history.attack == b.history.attack
+    for ca, cb in zip(a.history.cohorts, b.history.cohorts):
+        np.testing.assert_array_equal(ca, cb)
+    assert a.evals == b.evals and a.best_eval == b.best_eval
+    for la, lb in zip(jax.tree_util.tree_leaves(a.state),
+                      jax.tree_util.tree_leaves(b.state)):
+        np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+
+
+# ---------------------------------------------------------------------------
+# Parity: continuous service == batch runner for up-front submissions.
+# ---------------------------------------------------------------------------
+
+def test_upfront_submit_bitwise_equals_batch_drain():
+    def jobs():
+        return [_job("a", seed=0, rounds=6, eval_every=2),
+                _job("b", seed=1, rounds=4, eval_every=2),
+                _job("c", seed=2, rounds=6, f=3,
+                     schedule=constant_attack("sf"))]
+
+    batch = FleetRunner(jobs(), chunk=2).run()
+    svc = FleetService(chunk=2)
+    handles = [svc.submit(j) for j in jobs()]
+    svc.run_until_idle()
+    for h, ref in zip(handles, batch):
+        assert h.status() == "done"
+        _assert_same_result(h.result(), ref)
+
+
+def test_upfront_parity_whole_run_chunk():
+    jobs = [_job("a", seed=3, rounds=4), _job("b", seed=4, rounds=4)]
+    batch = FleetRunner(jobs).run()
+    svc = FleetService()
+    handles = [svc.submit(j) for j in jobs]
+    svc.run_until_idle()
+    assert svc.trace_count == 1                 # one program, whole run
+    for h, ref in zip(handles, batch):
+        _assert_same_result(h.result(), ref)
+
+
+# ---------------------------------------------------------------------------
+# Continuous behavior: late admission, cancel/backfill, deadlines.
+# ---------------------------------------------------------------------------
+
+def test_late_submit_admitted_within_one_boundary():
+    svc = FleetService(chunk=2, max_lanes=3)
+    a = svc.submit(_job("a", seed=0, rounds=6))
+    b = svc.submit(_job("b", seed=1, rounds=6))
+    svc.step()
+    assert a.status() == b.status() == "running"
+    late = svc.submit(_job("late", seed=7, rounds=4))
+    assert late.status() == "queued"
+    svc.step()                                  # next boundary: admitted
+    assert late.status() == "running"
+    assert late.admit_step - late.submit_step <= 1
+    svc.run_until_idle()
+    # The mid-run lane computed exactly what it computes alone: admission
+    # into a half-full running bucket is invisible to the job's math.
+    solo = FleetRunner([_job("late", seed=7, rounds=4)], chunk=2).run()[0]
+    _assert_same_result(late.result(), solo)
+    # The incumbents never saw the churn either.
+    solo_a = FleetRunner([_job("a", seed=0, rounds=6)], chunk=2).run()[0]
+    _assert_same_result(a.result(), solo_a)
+
+
+def test_cancel_evicts_and_backfills_slot():
+    svc = FleetService(chunk=2, max_lanes=2)
+    a = svc.submit(_job("a", seed=0, rounds=8))
+    b = svc.submit(_job("b", seed=1, rounds=8))
+    svc.step()
+    waiting = svc.submit(_job("c", seed=2, rounds=4))
+    assert waiting.status() == "queued"         # bucket full
+    assert a.cancel() is True
+    assert a.status() == "cancelled"
+    assert a.partial_result.history.rounds == 2     # one chunk completed
+    svc.step()
+    assert waiting.status() == "running"        # backfilled a's slot
+    assert waiting.admit_step - waiting.submit_step <= 1
+    svc.run_until_idle()
+    with pytest.raises(RuntimeError):
+        a.result()
+    assert a.cancel() is False                  # already cancelled
+    solo_b = FleetRunner([_job("b", seed=1, rounds=8)], chunk=2).run()[0]
+    _assert_same_result(b.result(), solo_b)
+    solo_c = FleetRunner([_job("c", seed=2, rounds=4)], chunk=2).run()[0]
+    _assert_same_result(waiting.result(), solo_c)
+
+
+def test_cancel_queued_job_never_runs():
+    svc = FleetService(chunk=2, max_lanes=1)
+    a = svc.submit(_job("a", seed=0, rounds=2))
+    queued = svc.submit(_job("q", seed=1, rounds=2))
+    assert queued.cancel() is True
+    assert queued.status() == "cancelled" and queued.partial_result is None
+    svc.run_until_idle()
+    assert a.status() == "done" and svc.pending == 0
+
+
+def test_deadline_orders_admission():
+    svc = FleetService(chunk=2, max_lanes=1)
+    first = svc.submit(_job("first", seed=0, rounds=2))          # no deadline
+    loose = svc.submit(_job("loose", seed=1, rounds=2))          # no deadline
+    mid = svc.submit(_job("mid", seed=2, rounds=2), deadline=5.0)
+    tight = svc.submit(_job("tight", seed=3, rounds=2), deadline=1.0)
+    svc.run_until_idle()
+    assert all(h.status() == "done" for h in (first, loose, mid, tight))
+    # Single lane: admission order IS completion order — earliest
+    # deadline first, then deadline-less jobs in submission order.
+    assert tight.admit_step < mid.admit_step < first.admit_step \
+        < loose.admit_step
+
+
+# ---------------------------------------------------------------------------
+# Compile accounting under churn.
+# ---------------------------------------------------------------------------
+
+def test_one_compile_per_shape_under_churn():
+    """Admission, eviction, and backfill are operand data, not trace
+    material: a bucket seeing 5 jobs stream through 2 lanes compiles its
+    scan program ONCE (chunk pinned so every segment is the same
+    length)."""
+    svc = FleetService(chunk=2, max_lanes=2)
+    handles = [svc.submit(_job("a", seed=0, rounds=4)),
+               svc.submit(_job("b", seed=1, rounds=4))]
+    svc.step()
+    handles.append(svc.submit(_job("c", seed=2, rounds=4)))
+    svc.step()
+    handles.append(svc.submit(_job("d", seed=3, rounds=4)))
+    handles.append(svc.submit(_job("e", seed=4, rounds=2)))
+    svc.run_until_idle()
+    assert all(h.status() == "done" for h in handles)
+    assert svc.trace_count == 1
+    for h in handles:
+        assert h.result().history.rounds == h.job.rounds
+
+
+# ---------------------------------------------------------------------------
+# JobHandle API + legacy shims.
+# ---------------------------------------------------------------------------
+
+def test_jobhandle_api_and_int_compat():
+    svc = FleetService(chunk=2)
+    h = svc.submit(_job("x", seed=0, rounds=2))
+    assert isinstance(h, JobHandle)
+    assert int(h) == h.job_id and h == h.job_id and h != h.job_id + 1
+    assert h.status() == "queued"
+    res = h.result()                            # drives the service
+    assert h.status() == "done" and res.history.rounds == 2
+    assert res is h.result()                    # idempotent
+    zero = svc.submit(_job("zero", seed=1, rounds=0))
+    assert zero.status() == "done" and zero.result().history.rounds == 0
+
+
+def test_legacy_poll_drain_shims_warn_and_work():
+    svc = FleetService(chunk=2)
+    a = svc.submit(_job("a", seed=0, rounds=2))
+    b = svc.submit(_job("b", seed=1, rounds=3))
+    with pytest.warns(DeprecationWarning):
+        assert svc.poll(a)["status"] == "queued"
+    with pytest.warns(DeprecationWarning):
+        done = svc.drain()
+    assert done == [a, b] and done == [int(a), int(b)]
+    with pytest.warns(DeprecationWarning):
+        out = svc.poll(int(b))                  # raw legacy int id
+    assert out["status"] == "done" and out["result"].history.rounds == 3
+    with pytest.warns(DeprecationWarning):
+        with pytest.raises(KeyError, match="unknown job_id 999"):
+            svc.poll(999)
+    with pytest.warns(DeprecationWarning):
+        assert svc.drain() == []                # nothing left
+    with pytest.raises(TypeError):
+        svc.submit("not a job")
+
+
+# ---------------------------------------------------------------------------
+# RoundOptions: one knob object accepted by every surface.
+# ---------------------------------------------------------------------------
+
+def test_round_options_validation_and_merge():
+    with pytest.raises(ValueError):
+        RoundOptions(engine="warp")
+    with pytest.raises(ValueError):
+        RoundOptions(chunk=0)
+    base = RoundOptions(engine="loop", chunk=4, taps=True)
+    merged = base.merged(chunk=2)               # explicit keyword wins
+    assert merged == RoundOptions(engine="loop", chunk=2, taps=True)
+    assert resolve_options(None) == RoundOptions()
+    assert resolve_options(base, engine="scan").engine == "scan"
+    assert RoundOptions().engine_or_default == "scan"
+
+
+def _fed_setup():
+    fcfg = FedConfig(n_clients=_N, clients_per_round=_M, f=2,
+                     agg=AggregatorSpec(rule="cwtm", f=2, pre="nnm"),
+                     client=ClientConfig(local_lr=0.05, algorithm="dshb",
+                                         beta=0.9))
+    server = FedServer(_LOSS, sgd(), fcfg, constant(0.1))
+    state = server.init_state({"theta": jnp.zeros((_D,), jnp.float32)})
+    return server, state
+
+
+def test_run_rounds_accepts_options():
+    server, state = _fed_setup()
+    _, hist_kw = run_rounds(server, state, _idx_batch_fn, 4, seed=3,
+                            engine="scan", chunk=2)
+    server2, state2 = _fed_setup()
+    _, hist_opt = run_rounds(server2, state2, _idx_batch_fn, 4, seed=3,
+                             options=RoundOptions(engine="scan", chunk=2))
+    assert hist_kw.loss == hist_opt.loss
+    assert hist_kw.direction_norm == hist_opt.direction_norm
+
+
+def test_run_rounds_rejects_per_call_taps_flip():
+    server, state = _fed_setup()
+    assert not server.cfg.taps
+    with pytest.raises(ValueError, match="taps/backend"):
+        run_rounds(server, state, _idx_batch_fn, 2,
+                   options=RoundOptions(taps=True))
+
+
+def test_fed_server_construction_options_apply_config():
+    fcfg = FedConfig(n_clients=_N, clients_per_round=_M, f=2,
+                     agg=AggregatorSpec(rule="cwtm", f=2, pre="nnm"),
+                     client=ClientConfig(algorithm="dgd"))
+    server = FedServer(_LOSS, sgd(), fcfg, constant(0.1),
+                       options=RoundOptions(taps=True, backend="xla"))
+    assert server.cfg.taps is True and server.cfg.agg.backend == "xla"
+
+
+def test_fleet_runner_and_service_accept_options():
+    jobs = [_job("a", seed=0, rounds=4), _job("b", seed=1, rounds=4)]
+    by_kw = FleetRunner(jobs, chunk=2)
+    by_opt = FleetRunner(jobs, options=RoundOptions(chunk=2))
+    assert by_kw.chunk == by_opt.chunk == 2
+    for a, b in zip(by_kw.run(), by_opt.run()):
+        _assert_same_result(a, b)
+    # Explicit keyword beats the options object, on runner and service.
+    assert FleetRunner(jobs, chunk=1,
+                       options=RoundOptions(chunk=3)).chunk == 1
+    assert FleetService(chunk=1, options=RoundOptions(chunk=3)).chunk == 1
+    svc = FleetService(options=RoundOptions(chunk=2, backend="xla"))
+    h = svc.submit(_job("x", seed=5, rounds=2))
+    assert h.job.cfg.agg.backend == "xla"       # applied at submit
+    assert h.result().history.rounds == 2
