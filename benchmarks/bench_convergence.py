@@ -265,6 +265,123 @@ def obs_smoke(json_out: str | None = None, *, rounds: int = 150,
     return out
 
 
+# ---------------------------------------------------------------------------
+# Resilience overhead smoke: chunk-boundary checkpointing on vs off.
+# ---------------------------------------------------------------------------
+
+def resume_smoke(json_out: str | None = None, *, rounds: int = 150,
+                 d: int = 256, chunk: int = 25) -> dict:
+    """Checkpointing-overhead contract for ``scripts/perf_gate.py --resume``.
+
+    Both candidates are the SAME scanned trainer (d=256: compute-dominated,
+    like the obs smoke); the checkpointed side snapshots carry + metrics at
+    every chunk boundary through the ASYNC double-buffered store (each rep
+    in a fresh directory, ``resume=False``), including the close() drain —
+    so the measured ratio is the full durable-write cost as deployed.  The
+    gate demands:
+
+    * ``resume_overhead_ratio``  >= 0.9 — checkpointing costs <= ~10%
+      rounds/sec even with a durable fsync'd file per boundary
+      (device->host conversion and fsync live in the writer thread; the
+      scan dispatches the next segment while the previous snapshot
+      writes);
+    * one compile on both sides — the snapshot hook is host-side cadence,
+      never trace material;
+    * ``snapshot_count_ok``  — exactly rounds/chunk snapshots were written;
+    * ``resume_parity_ok``   — a kill at boundary 2 + resume reproduces
+      the uninterrupted run bit-for-bit (params and loss history).
+    """
+    import itertools
+    import shutil
+    import tempfile
+
+    from repro.resilience import CheckpointConfig, FaultPlan, \
+        SimulatedPreemption
+    from repro.rounds import RoundOptions
+
+    rng = np.random.default_rng(0)
+    n, f = 12, 3
+    centers = jnp.asarray(rng.normal(size=(n, d)), jnp.float32)
+
+    def loss_fn(params, batch):
+        c = centers[batch["idx"][0]]
+        return 0.5 * jnp.sum((params["theta"] - c) ** 2), {}
+
+    cfg = TrainerConfig(algorithm="dshb",
+                        agg=AggregatorSpec(rule="cwtm", f=f, pre="nnm"),
+                        byz=ByzantineConfig(f=f, attack="alie", eta=3.0))
+    params = {"theta": jnp.zeros((d,), jnp.float32)}
+    batch = {"idx": np.arange(n)[:, None]}
+
+    def run(checkpoint=None):
+        return train_loop(loss_fn, params, batch, sgd(clip=1.0), cfg,
+                          constant(0.1), rounds, seed=0, engine="scan",
+                          chunk=chunk,
+                          options=RoundOptions(checkpoint=checkpoint))
+
+    tmp_root = tempfile.mkdtemp(prefix="bench_resume_")
+    rep = itertools.count()
+    last = {}
+
+    def bare():
+        last["off"] = run()[1]["scan_report"]
+
+    def ckpt():
+        ck = CheckpointConfig(dir=os.path.join(tmp_root, f"rep{next(rep)}"),
+                              resume=False, keep=2)
+        last["on"] = run(checkpoint=ck)[1]["scan_report"]
+
+    t_off, t_on = _timed_interleaved([bare, ckpt])
+
+    # Kill/resume parity against the uninterrupted run.
+    ref_params, ref_out = run()
+    kill_dir = os.path.join(tmp_root, "kill")
+    try:
+        run(checkpoint=CheckpointConfig(dir=kill_dir,
+                                        fault_plan=FaultPlan(kill_at=2)))
+        raise AssertionError("fault plan never fired")
+    except SimulatedPreemption:
+        pass
+    res_params, res_out = run(checkpoint=CheckpointConfig(dir=kill_dir))
+    parity = (np.array_equal(np.asarray(res_params["theta"]),
+                             np.asarray(ref_params["theta"]))
+              and res_out["history"]["loss"] == ref_out["history"]["loss"]
+              and res_out["scan_report"]["resumed_from"] > 0)
+
+    out = {
+        "rounds": rounds,
+        "d": d,
+        "chunk": chunk,
+        "ckpt_rounds_per_s_on": rounds / _median(t_on),
+        "ckpt_rounds_per_s_off": rounds / _median(t_off),
+        # Median of PER-REP off/on ratios: >= 0.9 means snapshots cost
+        # <= ~10% even though every boundary writes a durable file.
+        "resume_overhead_ratio": _median([o / t
+                                          for o, t in zip(t_off, t_on)]),
+        "compile_count_ckpt_on": last["on"]["trace_count"],
+        "compile_count_ckpt_off": last["off"]["trace_count"],
+        "snapshot_count_ok": int(last["on"]["snapshots"] == rounds // chunk),
+        "resume_parity_ok": int(parity),
+    }
+    shutil.rmtree(tmp_root, ignore_errors=True)
+    assert out["compile_count_ckpt_on"] == 1, last["on"]
+    assert out["compile_count_ckpt_off"] == 1, last["off"]
+
+    emit("resume_ckpt_on", _median(t_on) / rounds * 1e6,
+         f"rounds_per_s={out['ckpt_rounds_per_s_on']:.1f}")
+    emit("resume_ckpt_off", _median(t_off) / rounds * 1e6,
+         f"rounds_per_s={out['ckpt_rounds_per_s_off']:.1f}")
+    emit("resume_ratio", 0.0,
+         f"x{out['resume_overhead_ratio']:.3f},snapshots="
+         f"{last['on']['snapshots']},parity={out['resume_parity_ok']}")
+
+    if json_out:
+        with open(json_out, "w") as fh:
+            json.dump(out, fh, indent=2, sort_keys=True)
+        print(f"wrote {json_out}")
+    return out
+
+
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
@@ -273,11 +390,16 @@ if __name__ == "__main__":
                          "--json-out")
     ap.add_argument("--obs-smoke", action="store_true",
                     help="health-tap overhead smoke only; writes --json-out")
+    ap.add_argument("--resume-smoke", action="store_true",
+                    help="checkpoint overhead + kill/resume parity smoke; "
+                         "writes --json-out")
     ap.add_argument("--json-out", default="BENCH_rounds.json")
     args = ap.parse_args()
     if args.smoke:
         rounds_smoke(json_out=args.json_out)
     elif args.obs_smoke:
         obs_smoke(json_out=args.json_out)
+    elif args.resume_smoke:
+        resume_smoke(json_out=args.json_out)
     else:
         main(fast=not args.full)

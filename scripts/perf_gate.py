@@ -76,6 +76,20 @@ virtual-time Poisson workload, so every gated key is machine-independent):
 * ``upfront_parity_ok``            >= 1 — up-front submissions reproduce
   the batch FleetRunner bit-for-bit.
 
+Resilience hard gates (``--resume``; from
+``benchmarks/bench_convergence.py --resume-smoke``):
+
+* ``resume_overhead_ratio``  >= 0.9 — the checkpointed scan keeps at
+  least 90% of the bare rounds/sec even though every chunk boundary
+  writes a durable fsync'd snapshot (async double-buffered writer;
+  absolute floor, machine-normalized);
+* ``compile_count_ckpt_on`` / ``compile_count_ckpt_off`` <= baseline (1)
+  — the snapshot hook is host-side cadence, never trace material;
+* ``snapshot_count_ok``      >= 1 — exactly rounds/chunk snapshots were
+  written (no silently skipped or duplicated boundaries);
+* ``resume_parity_ok``       >= 1 — a killed-then-resumed run reproduces
+  the uninterrupted run bit-for-bit (params and loss history).
+
 Interpret-mode quarantine: Pallas timings measured off-TPU live under the
 JSON's ``"interpret"`` key and CANNOT be gated — any gated key found only
 there is a hard configuration error, so interpreter numbers can never
@@ -157,6 +171,20 @@ OBS_GATES = (("taps_speed_ratio", "min_0.9"),
              ("compile_count_taps_on", "max"),
              ("compile_count_taps_off", "max"),
              ("transfers_taps_on", "max"))
+
+#: resilience gates (BENCH_resume.json from bench_convergence.py
+#: --resume-smoke): chunk-boundary checkpointing must stay cheap (the
+#: checkpointed scan keeps >= 0.9x the bare rounds/sec — the async
+#: double-buffered writer hides the durable fsync'd write behind the next
+#: segment's compute; median of interleaved per-rep ratios, machine-
+#: normalized, so the floor is absolute), never retrace (one compile per
+#: side), write exactly one snapshot per boundary, and a killed-then-
+#: resumed run must reproduce the uninterrupted run bit-for-bit.
+RESUME_GATES = (("resume_overhead_ratio", "min_0.9"),
+                ("compile_count_ckpt_on", "max"),
+                ("compile_count_ckpt_off", "max"),
+                ("snapshot_count_ok", "min_1"),
+                ("resume_parity_ok", "min_1"))
 
 
 def _gated_value(doc: dict, key: str, path: str):
@@ -247,14 +275,19 @@ def main() -> int:
                     help="JSON from bench_fleet.py --latency-smoke")
     ap.add_argument("--fleet-latency-baseline",
                     default="benchmarks/baselines/BENCH_fleet_latency.json")
+    ap.add_argument("--resume", default=None,
+                    help="JSON from bench_convergence.py --resume-smoke")
+    ap.add_argument("--resume-baseline",
+                    default="benchmarks/baselines/BENCH_resume.json")
     args = ap.parse_args()
 
     if args.current is None and args.agg_cost is None \
             and args.dist_agg is None and args.rounds is None \
-            and args.obs is None and args.fleet_latency is None:
+            and args.obs is None and args.fleet_latency is None \
+            and args.resume is None:
         print("perf gate: nothing to check (pass a fleet JSON, --agg-cost, "
-              "--dist-agg, --rounds, --obs and/or --fleet-latency)",
-              file=sys.stderr)
+              "--dist-agg, --rounds, --obs, --fleet-latency and/or "
+              "--resume)", file=sys.stderr)
         return 2
 
     failures: list = []
@@ -303,6 +336,14 @@ def main() -> int:
             lat_base = json.load(fh)
         check_gate_table(FLEET_LATENCY_GATES, lat_cur, lat_base,
                          args.fleet_latency, failures)
+
+    if args.resume is not None:
+        with open(args.resume) as fh:
+            resume_cur = json.load(fh)
+        with open(args.resume_baseline) as fh:
+            resume_base = json.load(fh)
+        check_gate_table(RESUME_GATES, resume_cur, resume_base,
+                         args.resume, failures)
 
     if failures:
         print(f"perf gate FAILED: {', '.join(failures)} regressed",

@@ -3,6 +3,11 @@
 Flattens the pytree with key-path strings; restores into the same treedef.
 On a multi-host pod this would stream per-shard files; here process-local
 gather suffices (the container is single-process).
+
+Typed PRNG keys (``jax.random.key``) cannot pass through ``np.asarray``;
+they are round-tripped via ``jax.random.key_data`` with the impl name
+stored in a companion entry so ``load_checkpoint`` can rebuild the key
+with ``jax.random.wrap_key_data``.
 """
 from __future__ import annotations
 
@@ -16,6 +21,43 @@ from repro.obs import runtime as obs_runtime
 
 PyTree = Any
 _SEP = "::"
+_KEY_IMPL = f"{_SEP}keyimpl{_SEP}"  # companion entry prefix for typed PRNG keys
+
+
+def is_typed_prng_key(leaf: Any) -> bool:
+    dtype = getattr(leaf, "dtype", None)
+    return dtype is not None and jax.dtypes.issubdtype(dtype, jax.dtypes.prng_key)
+
+
+def encode_leaf(leaf: Any) -> tuple[np.ndarray, str | None]:
+    """Host array for ``leaf`` plus the PRNG impl name (None for plain arrays)."""
+    if is_typed_prng_key(leaf):
+        return np.asarray(jax.random.key_data(leaf)), str(jax.random.key_impl(leaf))
+    return np.asarray(leaf), None
+
+
+def decode_leaf(arr: np.ndarray, like_leaf: Any, impl: str | None) -> Any:
+    """Inverse of :func:`encode_leaf`, restoring dtype from ``like_leaf``."""
+    if impl is not None or is_typed_prng_key(like_leaf):
+        if impl is None:
+            impl = str(jax.random.key_impl(like_leaf))
+        return jax.random.wrap_key_data(jax.numpy.asarray(arr), impl=impl)
+    return jax.numpy.asarray(arr, dtype=like_leaf.dtype)
+
+
+def fsync_replace(tmp: str, path: str) -> None:
+    """``os.replace`` that survives power loss: fsync file, rename, fsync dir."""
+    fd = os.open(tmp, os.O_RDONLY)
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
+    os.replace(tmp, path)
+    dfd = os.open(os.path.dirname(os.path.abspath(path)) or ".", os.O_RDONLY)
+    try:
+        os.fsync(dfd)
+    finally:
+        os.close(dfd)
 
 
 def save_checkpoint(path: str, tree: PyTree, step: int | None = None) -> None:
@@ -24,23 +66,45 @@ def save_checkpoint(path: str, tree: PyTree, step: int | None = None) -> None:
                           step=step):
         data = {}
         for keypath, leaf in flat:
-            data[jax.tree_util.keystr(keypath)] = np.asarray(leaf)
+            name = jax.tree_util.keystr(keypath)
+            arr, impl = encode_leaf(leaf)
+            data[name] = arr
+            if impl is not None:
+                data[_KEY_IMPL + name] = np.asarray(impl)
         if step is not None:
             data[f"{_SEP}step"] = np.asarray(step)
         tmp = path + ".tmp"
         os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
         with open(tmp, "wb") as fh:
             np.savez(fh, **data)
-        os.replace(tmp, path)
+            fh.flush()
+            os.fsync(fh.fileno())
+        fsync_replace(tmp, path)
 
 
 def load_checkpoint(path: str, like: PyTree) -> tuple[PyTree, int | None]:
-    """Restore into the structure (and dtypes) of ``like``."""
+    """Restore into the structure (and dtypes) of ``like``.
+
+    The saved key set must match ``like`` exactly; a mismatch raises one
+    ``ValueError`` listing every missing/extra key rather than a bare
+    ``KeyError`` on the first absent leaf.
+    """
     with obs_runtime.span("checkpoint.load", path=path), np.load(path) as data:
         flat, treedef = jax.tree_util.tree_flatten_with_path(like)
+        want = [jax.tree_util.keystr(keypath) for keypath, _ in flat]
+        have = {k for k in data.files
+                if not k.startswith(_KEY_IMPL) and k != f"{_SEP}step"}
+        missing = [k for k in want if k not in have]
+        extra = sorted(have - set(want))
+        if missing or extra:
+            raise ValueError(
+                f"checkpoint {path!r} does not match the `like` structure: "
+                f"missing keys {missing!r}, extra keys {extra!r}"
+            )
         leaves = []
-        for keypath, leaf in flat:
-            arr = data[jax.tree_util.keystr(keypath)]
-            leaves.append(jax.numpy.asarray(arr, dtype=leaf.dtype))
-        step = int(data[f"{_SEP}step"]) if f"{_SEP}step" in data else None
+        for name, (_, leaf) in zip(want, flat):
+            impl_entry = _KEY_IMPL + name
+            impl = str(data[impl_entry]) if impl_entry in data.files else None
+            leaves.append(decode_leaf(data[name], leaf, impl))
+        step = int(data[f"{_SEP}step"]) if f"{_SEP}step" in data.files else None
     return jax.tree_util.tree_unflatten(treedef, leaves), step

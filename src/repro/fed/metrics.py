@@ -82,6 +82,56 @@ class FedHistory:
         return {k: np.stack([t[k] for t in self.taps])
                 for k in self.taps[0]}
 
+    # -- persistence (repro.resilience / FleetService.restore) ------------
+    def pack(self) -> tuple[dict, dict]:
+        """``(arrays, meta)`` snapshot form: numeric columns as arrays
+        (bit-exact float64 of the recorded Python floats), attack/eta as
+        JSON-able lists.  Inverse of :meth:`unpack`."""
+        arrays = {
+            "loss": np.asarray(self.loss, np.float64),
+            "kappa_hat": np.asarray(self.kappa_hat, np.float64),
+            "direction_norm": np.asarray(self.direction_norm, np.float64),
+            "lr": np.asarray(self.lr, np.float64),
+            "m_byz": np.asarray(self.m_byz, np.int64),
+            "f_round": np.asarray(self.f_round, np.int64),
+            "cohorts": (np.stack(self.cohorts) if self.cohorts
+                        else np.zeros((0, 0), np.int32)),
+        }
+        tapped = [t is not None for t in self.taps]
+        if any(tapped):
+            if not all(tapped):
+                raise ValueError(
+                    "cannot pack a FedHistory with mixed tapped/untapped "
+                    "rounds (tap columns would misalign)")
+            for k in self.taps[0]:
+                arrays[f"taps.{k}"] = np.stack([t[k] for t in self.taps])
+        meta = {"attack": list(self.attack),
+                "eta": [None if e is None else float(e) for e in self.eta]}
+        return arrays, meta
+
+    @classmethod
+    def unpack(cls, arrays: dict, meta: dict) -> "FedHistory":
+        h = cls()
+        rounds = len(meta["attack"])
+        h.loss = [float(x) for x in arrays["loss"]]
+        h.kappa_hat = [float(x) for x in arrays["kappa_hat"]]
+        h.direction_norm = [float(x) for x in arrays["direction_norm"]]
+        h.lr = [float(x) for x in arrays["lr"]]
+        h.m_byz = [int(x) for x in arrays["m_byz"]]
+        h.f_round = [int(x) for x in arrays["f_round"]]
+        h.cohorts = [np.asarray(arrays["cohorts"][r])
+                     for r in range(rounds)]
+        h.attack = list(meta["attack"])
+        h.eta = [None if e is None else float(e) for e in meta["eta"]]
+        tap_names = sorted(k[len("taps."):] for k in arrays
+                           if k.startswith("taps."))
+        if tap_names:
+            h.taps = [{n: np.asarray(arrays[f"taps.{n}"][r])
+                       for n in tap_names} for r in range(rounds)]
+        else:
+            h.taps = [None] * rounds
+        return h
+
     def summary(self) -> dict:
         kappa = np.asarray(self.kappa_hat, np.float64)
         tracked = kappa[np.isfinite(kappa)]

@@ -335,12 +335,17 @@ def run_rounds(server: FedServer, state: dict, batch_fn: Callable,
     """
     opts = resolve_options(options, engine=engine, chunk=chunk)
     opts = server.options.merged(engine=opts.engine, chunk=opts.chunk,
-                                 taps=opts.taps, backend=opts.backend)
+                                 taps=opts.taps, backend=opts.backend,
+                                 checkpoint=opts.checkpoint)
     if opts.apply_config(server.cfg) is not server.cfg:
         raise ValueError(
             "run_rounds cannot override taps/backend per call — they are "
             "compiled-round key material; pass options to FedServer(...)")
     engine, chunk = opts.engine_or_default, opts.chunk
+    if opts.checkpoint is not None and engine != "scan":
+        raise ValueError("options.checkpoint requires engine='scan' "
+                         "(the loop path has no chunk boundaries to "
+                         "snapshot at)")
     cfg = server.cfg
     if byz_identity is None:
         byz_identity = FixedByzantine(cfg.n_clients, cfg.f)
@@ -391,21 +396,60 @@ def run_rounds(server: FedServer, state: dict, batch_fn: Callable,
         **attack_ops,
     }
 
+    # Resilience: resume from the last chunk-boundary snapshot (if any) and
+    # keep snapshotting carry + metrics-so-far at every boundary.  The host
+    # plan above is recomputed in full — only the round cursor is durable.
+    from repro.resilience import resolve_checkpoint
+    ckpt_cfg = resolve_checkpoint(opts.checkpoint)
+    checkpointer, start_round, saved_cols = None, 0, {}
+    if ckpt_cfg is not None:
+        from repro.resilience import (
+            CarryCheckpointer, SnapshotStore, check_signature, restore_carry,
+            restored_metrics,
+        )
+        store = SnapshotStore.from_config(ckpt_cfg)
+        signature = {"surface": "fed", "rounds": rounds, "chunk": chunk,
+                     "seed": seed, "families": list(families),
+                     "m_byz": m_byz}
+        snap = store.load_latest() if ckpt_cfg.resume else None
+        if snap is not None:
+            start_round, arrays, snap_meta = snap
+            check_signature(snap_meta["signature"], signature, store.path)
+            state = restore_carry(arrays, snap_meta, state)
+            saved_cols = restored_metrics(arrays)
+        checkpointer = CarryCheckpointer(
+            store, signature=signature, total=rounds, every=ckpt_cfg.every,
+            base_columns=saved_cols)
+
     eng = server.scan_engine(families, m_byz, chunk=chunk)
     traces_before = eng.trace_count
-    state, metrics = eng.run(state, operands)
+    state, metrics = eng.run(
+        state, operands,
+        on_segment=checkpointer.on_segment if checkpointer else None,
+        start=start_round)
+    if checkpointer is not None:
+        checkpointer.close()
     server.last_scan_report = {
         "trace_count": eng.trace_count - traces_before,
         "total_trace_count": eng.trace_count,
         "chunk_shapes": tuple(sorted({end - start for start, end
                                       in split_segments(rounds, chunk)})),
     }
-    tap_cols = metrics["taps"].to_dict() if "taps" in metrics else None
+    if ckpt_cfg is not None:
+        server.last_scan_report["snapshots"] = \
+            checkpointer.store.snapshots_written
+        server.last_scan_report["resumed_from"] = start_round
+
+    from repro.resilience import concat_metrics, metric_columns
+    cols = (dict(saved_cols) if metrics is None
+            else concat_metrics(saved_cols, metric_columns(metrics)))
+    tap_cols = {k[len("taps."):]: v for k, v in cols.items()
+                if k.startswith("taps.")} or None
     for r in range(rounds):
         attack, eta = meta[r]
-        lane = {k: metrics[k][r] for k in ("loss", "lr", "direction_norm")}
-        if "kappa_hat" in metrics:
-            lane["kappa_hat"] = metrics["kappa_hat"][r]
+        lane = {k: cols[k][r] for k in ("loss", "lr", "direction_norm")}
+        if "kappa_hat" in cols:
+            lane["kappa_hat"] = cols["kappa_hat"][r]
         taps = {k: v[r] for k, v in tap_cols.items()} \
             if tap_cols is not None else None
         hist.record(lane, cohort=cohorts[r], attack=attack, eta=eta,

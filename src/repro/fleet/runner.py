@@ -406,8 +406,9 @@ class FleetRunner:
     def run(self) -> list[FleetResult]:
         """Run every job to completion; results in submission order."""
         results: list[Optional[FleetResult]] = [None] * len(self.jobs)
-        for bucket in self._buckets:
-            for idx, res in zip(bucket.indices, self._run_bucket(bucket)):
+        for bi, bucket in enumerate(self._buckets):
+            for idx, res in zip(bucket.indices,
+                                self._run_bucket(bucket, bucket_index=bi)):
                 results[idx] = res
         return results  # type: ignore[return-value]
 
@@ -446,7 +447,8 @@ class FleetRunner:
             round_meta.append((attacks, etas_raw, cohorts))
         return stack_rounds(per_round), round_meta
 
-    def _run_bucket(self, bucket: LaneBucket) -> list[FleetResult]:
+    def _run_bucket(self, bucket: LaneBucket, *,
+                    bucket_index: int = 0) -> list[FleetResult]:
         jobs = bucket.jobs
         fleet_scan = self._round_fn(bucket)
 
@@ -456,7 +458,7 @@ class FleetRunner:
 
         m_byzs = [job.m_byz for job in jobs]
         hists = [FedHistory() for _ in jobs]
-        evals: list[list[tuple[int, float]]] = [[] for _ in jobs]
+        evals: list[list[tuple[int, Any]]] = [[] for _ in jobs]
         max_rounds = max(job.rounds for job in jobs)
         if max_rounds == 0:             # degenerate: nothing to scan
             return [FleetResult(label=job.label, job=job,
@@ -466,6 +468,40 @@ class FleetRunner:
                     for k, job in enumerate(jobs)]
         operands, round_meta = self._plan_bucket(bucket)
 
+        # Resilience: per-bucket snapshot subdir; the host plan above was
+        # recomputed in full, so only the stacked carry + metrics columns +
+        # eval points need restoring.
+        from repro.resilience import resolve_checkpoint
+        ckpt_cfg = resolve_checkpoint(self.options.checkpoint)
+        checkpointer, start_round, saved_cols = None, 0, {}
+        if ckpt_cfg is not None:
+            from repro.resilience import (
+                CarryCheckpointer, SnapshotStore, check_signature,
+                restore_carry, restored_metrics,
+            )
+            store = SnapshotStore.from_config(
+                ckpt_cfg, subdir=f"bucket-{bucket_index:03d}")
+            signature = {"surface": "fleet",
+                         "labels": [j.label for j in jobs],
+                         "rounds": [j.rounds for j in jobs],
+                         "seeds": [j.seed for j in jobs],
+                         "chunk": self.chunk}
+            snap = store.load_latest() if ckpt_cfg.resume else None
+            if snap is not None:
+                start_round, arrays, snap_meta = snap
+                check_signature(snap_meta["signature"], signature, store.path)
+                state = restore_carry(arrays, snap_meta, state)
+                saved_cols = restored_metrics(arrays)
+                for k, lane in enumerate(
+                        snap_meta.get("payload", {}).get("evals", [])):
+                    evals[k] = [(int(r), float(v)) for r, v in lane]
+            checkpointer = CarryCheckpointer(
+                store, signature=signature, total=max_rounds,
+                every=ckpt_cfg.every, base_columns=saved_cols,
+                payload_fn=lambda end: {
+                    "evals": [[(int(r), float(v)) for r, v in lane]
+                              for lane in evals]})
+
         # Scan segments are cut at every eval round so the carry state is
         # back on the host exactly when the stepped loop evaluated it.
         boundaries = cadence_boundaries(
@@ -473,6 +509,8 @@ class FleetRunner:
                           if job.eval_fn is not None and job.eval_every))
         seg_metrics: list[dict] = []
         for start, end in split_segments(max_rounds, self.chunk, boundaries):
+            if end <= start_round:      # already executed before the resume
+                continue
             seg_ops = jax.tree_util.tree_map(lambda a: a[start:end], operands)
             with obs_runtime.span("fleet.segment", start=start, end=end,
                                   lanes=len(jobs)):
@@ -488,27 +526,36 @@ class FleetRunner:
                     # dispatch pipeline per eval (same reason the round
                     # metrics stay on device until the demux below).
                     evals[k].append((end, job.eval_fn(lane_params)))
+            if checkpointer is not None:
+                checkpointer.on_segment(start, end, state, metrics)
+        if checkpointer is not None:
+            checkpointer.close()
 
         # Demux: one host transfer for the whole run's metrics + evals.
-        obs_runtime.inc("fleet.transfers")
-        fetched = jax.device_get(seg_metrics)
-        metrics_np = jax.tree_util.tree_map(
-            lambda *xs: np.concatenate(xs, axis=0), *fetched)
+        from repro.resilience import concat_metrics, metric_columns
+        if seg_metrics:
+            obs_runtime.inc("fleet.transfers")
+            fetched = jax.device_get(seg_metrics)
+            metrics_np = jax.tree_util.tree_map(
+                lambda *xs: np.concatenate(xs, axis=0), *fetched)
+            cols = concat_metrics(saved_cols, metric_columns(metrics_np))
+        else:                           # resumed at the final boundary
+            cols = dict(saved_cols)
         # Tap leaves arrive round-and-lane-stacked (R, B, ...): per-lane
         # demux slices [r][k] like every other metric column.
-        tap_cols = metrics_np["taps"].to_dict() \
-            if "taps" in metrics_np else None
+        tap_cols = {f[len("taps."):]: v for f, v in cols.items()
+                    if f.startswith("taps.")} or None
         evals = [[(r, float(v)) for r, v in lane] for lane in evals]
         for r, (attacks, etas_raw, cohorts) in enumerate(round_meta):
             for k, job in enumerate(jobs):
                 if r >= job.rounds:
                     continue
-                lane_metrics = {"loss": metrics_np["loss"][r][k],
-                                "lr": metrics_np["lr"][r][k],
+                lane_metrics = {"loss": cols["loss"][r][k],
+                                "lr": cols["lr"][r][k],
                                 "direction_norm":
-                                    metrics_np["direction_norm"][r][k]}
-                if "kappa_hat" in metrics_np:
-                    lane_metrics["kappa_hat"] = metrics_np["kappa_hat"][r][k]
+                                    cols["direction_norm"][r][k]}
+                if "kappa_hat" in cols:
+                    lane_metrics["kappa_hat"] = cols["kappa_hat"][r][k]
                 lane_taps = {f: v[r][k] for f, v in tap_cols.items()} \
                     if tap_cols is not None else None
                 hists[k].record(lane_metrics, cohort=cohorts[k],
@@ -605,16 +652,39 @@ class ContinuousBucket:
         return None
 
     # -- admission / eviction ---------------------------------------------
-    def admit(self, job: FleetJob, token: Any = None) -> int:
+    def admit(self, job: FleetJob, token: Any = None, *,
+              lane_state: Optional[dict] = None, local: int = 0,
+              rng: Optional[np.random.Generator] = None,
+              hist: Optional[FedHistory] = None,
+              evals: Optional[list] = None,
+              slot: Optional[int] = None) -> int:
         """Occupy a free slot with ``job`` (effective at the NEXT segment
-        — call only at boundaries, i.e. between :meth:`step` calls)."""
-        k = self.free_slot()
+        — call only at boundaries, i.e. between :meth:`step` calls).
+
+        The keyword-only arguments re-admit a SURVIVING lane from a
+        service snapshot (``FleetService.restore``): mid-run device state,
+        local round clock, rng position, history-so-far — the same compiled
+        admit program writes it into the slot, so a restored lane is
+        indistinguishable from one that never left.
+        """
+        if slot is not None:
+            if self.slots[slot] is not None:
+                raise RuntimeError(f"slot {slot} is occupied")
+            k = slot
+        else:
+            k = self.free_slot()
         if k is None:
             raise RuntimeError("bucket is full")
-        self.state = self._admit(self.state, init_lane_state(job),
-                                 np.int32(k))
-        self.slots[k] = LaneSlot(job=job, token=token,
-                                 rng=np.random.default_rng(job.seed))
+        self.state = self._admit(
+            self.state,
+            lane_state if lane_state is not None else init_lane_state(job),
+            np.int32(k))
+        self.slots[k] = LaneSlot(
+            job=job, token=token,
+            rng=rng if rng is not None else np.random.default_rng(job.seed),
+            local=local,
+            hist=hist if hist is not None else FedHistory(),
+            evals=list(evals) if evals else [])
         obs_runtime.event("fleet.admit", slot=k, label=job.label,
                           at=self.rounds_executed)
         return k

@@ -1,0 +1,33 @@
+"""Preemption-safe resumable experiments.
+
+Chunk-boundary carry checkpoints (async, double-buffered, atomic manifest),
+deterministic fault injection, and restore helpers shared by ``train_loop``,
+``fed.run_rounds``, ``FleetRunner``, and ``FleetService.restore()``.
+See ``docs/resilience.md`` for the snapshot layout and resume contract.
+"""
+from .experiment import (
+    CarryCheckpointer,
+    check_signature,
+    concat_metrics,
+    metric_columns,
+    resolve_checkpoint,
+    restore_carry,
+    restored_metrics,
+)
+from .faults import CheckpointError, FaultPlan, SimulatedPreemption
+from .store import CheckpointConfig, SnapshotStore
+
+__all__ = [
+    "CarryCheckpointer",
+    "CheckpointConfig",
+    "CheckpointError",
+    "FaultPlan",
+    "SimulatedPreemption",
+    "SnapshotStore",
+    "check_signature",
+    "concat_metrics",
+    "metric_columns",
+    "resolve_checkpoint",
+    "restore_carry",
+    "restored_metrics",
+]

@@ -1,0 +1,165 @@
+"""Owner-facing helpers: carry + metrics + cursor snapshots at boundaries.
+
+The three loop owners (``train_loop``, ``fed.run_rounds``, ``FleetRunner``)
+share the same resume shape:
+
+- the **host plan** (batches, cohorts, keys, attack operands) is recomputed
+  deterministically from the seed, so it is never serialized — only the
+  ``round`` cursor is;
+- the **carry** is snapshotted as flat ``carry/NNN`` entries in leaf order
+  against a caller-known ``like`` structure (no treedef serialization);
+- **metrics-so-far** are snapshotted as concatenated ``metrics/<col>``
+  columns, so a resumed run returns histories bit-identical to an
+  uninterrupted one;
+- an owner-specific JSON ``payload`` carries host-side history (eval points,
+  best-accuracy, rng cursors) that already fired before the kill.
+
+A ``signature`` (plan fingerprint: surface, rounds, chunk, seed, ...) is
+stored with every snapshot and validated on resume — resuming a different
+experiment into the same directory is a clean refusal, not silent garbage.
+"""
+from __future__ import annotations
+
+import json
+from typing import Any, Callable, Optional
+
+import jax
+import numpy as np
+
+from repro.checkpoint.npz import decode_leaf
+
+from .faults import CheckpointError
+from .store import CheckpointConfig, SnapshotStore
+
+_CARRY = "carry/"
+_METRIC = "metrics/"
+
+
+def resolve_checkpoint(checkpoint: Any) -> Optional[CheckpointConfig]:
+    """Accept a :class:`CheckpointConfig` or a bare directory path."""
+    if checkpoint is None:
+        return None
+    if isinstance(checkpoint, CheckpointConfig):
+        return checkpoint
+    if isinstance(checkpoint, str):
+        return CheckpointConfig(dir=checkpoint)
+    raise TypeError(
+        f"checkpoint= must be a CheckpointConfig or path, got {checkpoint!r}")
+
+
+def normalize_signature(sig: dict) -> dict:
+    """JSON round-trip so tuples/np ints compare equal after reload."""
+    return json.loads(json.dumps(sig, sort_keys=True, default=str))
+
+
+def check_signature(saved: dict, current: dict, path: str) -> None:
+    saved_n, cur_n = normalize_signature(saved), normalize_signature(current)
+    if saved_n != cur_n:
+        diff = {k: (saved_n.get(k), cur_n.get(k))
+                for k in sorted(set(saved_n) | set(cur_n))
+                if saved_n.get(k) != cur_n.get(k)}
+        raise CheckpointError(
+            f"snapshot in {path!r} belongs to a different experiment plan; "
+            f"mismatched fields (saved, current): {diff}",
+            hint="point checkpoint.dir at a fresh directory, or pass a "
+                 "config matching the saved plan",
+        )
+
+
+def metric_columns(metrics: dict) -> dict[str, Any]:
+    """Flatten a metrics dict to named columns; ``to_dict``-able values
+    (e.g. HealthTaps) expand to ``<key>.<field>``.  No device sync."""
+    out: dict[str, Any] = {}
+    for key, value in metrics.items():
+        if hasattr(value, "to_dict"):
+            for field, arr in value.to_dict().items():
+                out[f"{key}.{field}"] = arr
+        else:
+            out[key] = value
+    return out
+
+
+def restore_carry(arrays: dict, meta: dict, like: Any) -> Any:
+    """Rebuild the carry pytree from flat ``carry/NNN`` entries, taking
+    structure and dtypes (incl. typed PRNG keys) from ``like``."""
+    leaves, treedef = jax.tree_util.tree_flatten(like)
+    impls = meta.get("key_impls", {})
+    out = []
+    for i, leaf in enumerate(leaves):
+        name = f"{_CARRY}{i:03d}"
+        if name not in arrays:
+            raise CheckpointError(
+                f"snapshot is missing carry leaf {name!r} "
+                f"(has {len(leaves)} leaves in the current plan)",
+                hint="the snapshot was written by an incompatible model/"
+                     "optimizer configuration; use a fresh checkpoint dir",
+            )
+        out.append(decode_leaf(arrays[name], leaf, impls.get(name)))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def restored_metrics(arrays: dict) -> dict[str, np.ndarray]:
+    return {k[len(_METRIC):]: np.asarray(v) for k, v in arrays.items()
+            if k.startswith(_METRIC)}
+
+
+def concat_metrics(saved: dict[str, np.ndarray],
+                   new: dict[str, Any]) -> dict[str, np.ndarray]:
+    """Stitch restored columns onto this process's columns (rounds axis 0)."""
+    if not saved:
+        return {k: np.asarray(v) for k, v in new.items()}
+    out = {}
+    for key in new:
+        if key not in saved:
+            raise CheckpointError(
+                f"restored metrics are missing column {key!r}",
+                hint="taps/metrics configuration changed between runs; "
+                     "use a fresh checkpoint dir")
+        out[key] = np.concatenate([saved[key], np.asarray(new[key])], axis=0)
+    return out
+
+
+class CarryCheckpointer:
+    """Accumulates per-segment device metrics and snapshots
+    carry + metrics-so-far + cursor at chunk boundaries.
+
+    Wire :meth:`on_segment` into ``RoundEngine.run(on_segment=...)``.  All
+    device values are handed to the store untouched; host conversion (and
+    hence device sync) happens in the store's writer thread, so the next
+    segment dispatches before the previous snapshot finishes writing.
+    """
+
+    def __init__(self, store: SnapshotStore, *, signature: dict,
+                 total: int, every: int = 1,
+                 base_columns: Optional[dict] = None,
+                 payload_fn: Optional[Callable[[int], dict]] = None):
+        self.store = store
+        self.signature = normalize_signature(signature)
+        self.total = total
+        self.every = max(1, every)
+        self._base = dict(base_columns or {})
+        self._cols: dict[str, list] = {}   # per-column device segments
+        self._boundaries = 0
+        self._payload_fn = payload_fn
+
+    def on_segment(self, start: int, end: int, state: Any,
+                   metrics: Any) -> None:
+        del start
+        for key, value in metric_columns(metrics).items():
+            self._cols.setdefault(key, []).append(value)
+        self._boundaries += 1
+        if (self._boundaries % self.every) and end != self.total:
+            return
+        arrays: dict[str, Any] = {
+            f"{_CARRY}{i:03d}": leaf
+            for i, leaf in enumerate(jax.tree_util.tree_leaves(state))
+        }
+        for key, segs in self._cols.items():
+            base = [self._base[key]] if key in self._base else []
+            arrays[f"{_METRIC}{key}"] = base + list(segs)
+        meta = {"signature": self.signature,
+                "payload": self._payload_fn(end) if self._payload_fn else {}}
+        self.store.save(end, arrays, meta)
+
+    def close(self) -> None:
+        self.store.close()

@@ -1,0 +1,260 @@
+"""Durable chunk-boundary snapshot store (async, double-buffered, atomic).
+
+Layout of a checkpoint directory::
+
+    <dir>/
+      snapshot-00000025.npz   # flat name->array payload for round 25
+      snapshot-00000050.npz
+      MANIFEST.json           # {"format": 1, "latest": {...}, "history": [...]}
+
+Each ``save()`` call enqueues one snapshot on a single background writer
+thread and returns immediately; at most two writes may be in flight
+(double-buffered), so the loop owner can dispatch the next scan segment
+while the previous snapshot is still being written, and a slow disk
+back-pressures instead of queueing unboundedly.  Device arrays are
+converted to host numpy **inside the writer thread** — enqueueing never
+blocks on device compute.
+
+Durability protocol per snapshot: write ``*.tmp`` → fsync → atomic rename
+→ directory fsync, then the manifest via the same dance.  A kill at any
+point leaves the previous manifest (and the complete snapshot it points
+to) intact: restore always finds the last *complete* snapshot.
+
+Array values passed to ``save()`` may be numpy arrays, jax arrays (typed
+PRNG keys included — stored via ``key_data`` with the impl name recorded
+in the manifest entry), or a *list* of arrays to be concatenated along
+axis 0 in the writer thread (used for metrics columns accumulated per
+segment).
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import json
+import os
+from concurrent.futures import Future, ThreadPoolExecutor
+from typing import Any, Optional
+
+import numpy as np
+
+from repro.checkpoint.npz import encode_leaf, fsync_replace
+from repro.obs import runtime as obs_runtime
+
+from .faults import CheckpointError, FaultPlan, SimulatedPreemption
+
+_FORMAT = 1
+MANIFEST = "MANIFEST.json"
+
+
+@dataclasses.dataclass(frozen=True)
+class CheckpointConfig:
+    """Rides on ``RoundOptions.checkpoint`` to enable resumable runs.
+
+    ``dir``        — checkpoint directory (created on first snapshot).
+    ``every``      — snapshot every Nth chunk boundary (1 = all).
+    ``keep``       — retain this many newest snapshot files.
+    ``sync``       — write synchronously in the caller thread (tests).
+    ``resume``     — load the latest manifest before running (set False to
+                     force a fresh run into an existing directory).
+    ``fault_plan`` — optional :class:`FaultPlan` for kill/torn-write drills.
+    """
+
+    dir: str
+    every: int = 1
+    keep: int = 2
+    sync: bool = False
+    resume: bool = True
+    fault_plan: Optional[FaultPlan] = None
+
+
+def _snapshot_name(round_: int) -> str:
+    return f"snapshot-{round_:08d}.npz"
+
+
+class SnapshotStore:
+    """One checkpoint directory: async writer + manifest + restore."""
+
+    def __init__(self, path: str, *, keep: int = 2, sync: bool = False,
+                 fault_plan: Optional[FaultPlan] = None):
+        self.path = path
+        self.keep = max(1, keep)
+        self.sync = sync
+        self.fault_plan = fault_plan
+        self.snapshots_written = 0
+        self._ordinal = 0          # save() calls in this process (fault clock)
+        self._history: list[dict] = []
+        self._pool: Optional[ThreadPoolExecutor] = None
+        self._inflight: collections.deque[Future] = collections.deque()
+
+    @classmethod
+    def from_config(cls, cfg: CheckpointConfig,
+                    subdir: str | None = None) -> "SnapshotStore":
+        path = os.path.join(cfg.dir, subdir) if subdir else cfg.dir
+        return cls(path, keep=cfg.keep, sync=cfg.sync,
+                   fault_plan=cfg.fault_plan)
+
+    # -- write path -------------------------------------------------------
+
+    def save(self, round_: int, arrays: dict[str, Any], meta: dict) -> None:
+        """Enqueue one snapshot; blocks only when two writes are in flight."""
+        ordinal = self._ordinal
+        self._ordinal += 1
+        plan = self.fault_plan
+        if plan is not None and plan.torn_at == ordinal:
+            self.wait()
+            self._write_torn(round_, arrays, meta)
+            raise SimulatedPreemption(ordinal, round_)
+        if plan is not None and plan.kill_at == ordinal:
+            self.wait()
+            self._write(round_, arrays, meta)
+            raise SimulatedPreemption(ordinal, round_)
+        if self.sync:
+            self._write(round_, arrays, meta)
+            return
+        if self._pool is None:
+            self._pool = ThreadPoolExecutor(
+                max_workers=1, thread_name_prefix="snapshot")
+        while len(self._inflight) >= 2:       # double-buffer back-pressure
+            self._inflight.popleft().result()
+        self._inflight.append(
+            self._pool.submit(self._write, round_, arrays, meta))
+
+    def wait(self) -> None:
+        """Drain pending writes, re-raising any writer-thread error."""
+        while self._inflight:
+            self._inflight.popleft().result()
+
+    def close(self) -> None:
+        self.wait()
+        if self._pool is not None:
+            self._pool.shutdown(wait=True)
+            self._pool = None
+
+    def _host_arrays(self, arrays: dict[str, Any]) -> tuple[dict, dict]:
+        """Materialize values to numpy (device sync happens HERE, in the
+        writer thread).  Lists concatenate along axis 0."""
+        out, impls = {}, {}
+        for name, value in arrays.items():
+            if isinstance(value, (list, tuple)):
+                out[name] = np.concatenate(
+                    [np.asarray(v) for v in value], axis=0)
+            else:
+                arr, impl = encode_leaf(value)
+                out[name] = arr
+                if impl is not None:
+                    impls[name] = impl
+        return out, impls
+
+    def _write(self, round_: int, arrays: dict[str, Any], meta: dict) -> None:
+        with obs_runtime.span("resilience.snapshot", path=self.path,
+                              round=round_):
+            host, impls = self._host_arrays(arrays)
+            meta = dict(meta)
+            if impls:
+                meta["key_impls"] = impls
+            os.makedirs(self.path, exist_ok=True)
+            fname = _snapshot_name(round_)
+            fpath = os.path.join(self.path, fname)
+            with open(fpath + ".tmp", "wb") as fh:
+                np.savez(fh, **host)
+                fh.flush()
+                os.fsync(fh.fileno())
+            fsync_replace(fpath + ".tmp", fpath)
+            self._update_manifest({"file": fname, "round": int(round_),
+                                   "meta": meta})
+            self._prune()
+            self.snapshots_written += 1
+
+    def _write_torn(self, round_: int, arrays: dict[str, Any],
+                    meta: dict) -> None:
+        """Half-written snapshot file, manifest untouched — emulates a kill
+        between the data write and the manifest update."""
+        host, _ = self._host_arrays(arrays)
+        os.makedirs(self.path, exist_ok=True)
+        fpath = os.path.join(self.path, _snapshot_name(round_))
+        import io
+        buf = io.BytesIO()
+        np.savez(buf, **host)
+        raw = buf.getvalue()
+        with open(fpath, "wb") as fh:
+            fh.write(raw[: max(1, len(raw) // 2)])
+        obs_runtime.event("resilience.torn_write", path=fpath, round=round_)
+
+    def _update_manifest(self, entry: dict) -> None:
+        self._history.append(entry)
+        self._history = self._history[-self.keep:]
+        manifest = {"format": _FORMAT, "latest": entry,
+                    "history": self._history}
+        mpath = os.path.join(self.path, MANIFEST)
+        with open(mpath + ".tmp", "w") as fh:
+            json.dump(manifest, fh)
+            fh.flush()
+            os.fsync(fh.fileno())
+        fsync_replace(mpath + ".tmp", mpath)
+
+    def _prune(self) -> None:
+        live = {e["file"] for e in self._history}
+        for fname in os.listdir(self.path):
+            if (fname.startswith("snapshot-") and fname.endswith(".npz")
+                    and fname not in live):
+                try:
+                    os.unlink(os.path.join(self.path, fname))
+                except OSError:
+                    pass
+
+    # -- read path --------------------------------------------------------
+
+    def _on_disk(self) -> list[str]:
+        if not os.path.isdir(self.path):
+            return []
+        return sorted(f for f in os.listdir(self.path)
+                      if f.startswith("snapshot-") and f.endswith(".npz"))
+
+    def load_manifest(self) -> Optional[dict]:
+        mpath = os.path.join(self.path, MANIFEST)
+        if not os.path.exists(mpath):
+            return None
+        try:
+            with open(mpath) as fh:
+                manifest = json.load(fh)
+            latest = manifest["latest"]
+            _ = latest["file"], latest["round"]
+        except (json.JSONDecodeError, KeyError, TypeError) as exc:
+            raise CheckpointError(
+                f"checkpoint manifest {mpath!r} is corrupt ({exc!r})",
+                hint=("snapshot files on disk: "
+                      f"{self._on_disk() or 'none'}; delete MANIFEST.json to "
+                      "start fresh, or restore it to point at one of these"),
+            ) from exc
+        return manifest
+
+    def load_latest(self) -> Optional[tuple[int, dict, dict]]:
+        """Return ``(round, arrays, meta)`` for the newest complete snapshot,
+        ``None`` if the directory has no manifest, or raise
+        :class:`CheckpointError` (with a recovery hint) if the manifest is
+        corrupt or points at an unreadable file."""
+        manifest = self.load_manifest()
+        if manifest is None:
+            return None
+        latest = manifest["latest"]
+        fpath = os.path.join(self.path, latest["file"])
+        try:
+            with np.load(fpath) as data:
+                arrays = {k: data[k] for k in data.files}
+        except Exception as exc:
+            older = [e["file"] for e in manifest.get("history", [])
+                     if e["file"] != latest["file"]]
+            raise CheckpointError(
+                f"latest snapshot {fpath!r} is unreadable ({exc!r})",
+                hint=(f"older snapshots in the manifest history: {older}; "
+                      "edit MANIFEST.json's `latest` to one of these, or "
+                      "delete MANIFEST.json to start fresh"
+                      if older else
+                      "no older snapshots remain; delete MANIFEST.json to "
+                      "start fresh"),
+            ) from exc
+        # Seed retention/history from disk so a resumed store keeps pruning.
+        self._history = list(manifest.get("history", []))[-self.keep:]
+        obs_runtime.event("resilience.resume", path=self.path,
+                          round=latest["round"])
+        return int(latest["round"]), arrays, dict(latest["meta"])

@@ -117,28 +117,63 @@ class RoundEngine:
 
         return scanned
 
+    @staticmethod
+    def _skip_to(segs: list[tuple[int, int]], start: int,
+                 rounds: int) -> list[tuple[int, int]]:
+        """Drop segments already executed by a resumed run.  ``start`` must
+        land exactly on a segment boundary — a resume cursor from a snapshot
+        always does, anything else means the plan changed under the snapshot.
+        """
+        if start == 0:
+            return segs
+        valid = {0, *(e for _, e in segs)}
+        if start not in valid:
+            raise ValueError(
+                f"resume start {start} is not a segment boundary of this "
+                f"plan (valid: {sorted(valid)}); the chunk/boundary "
+                "schedule differs from the one that wrote the snapshot")
+        return [(s, e) for s, e in segs if e > start]
+
     def run(self, state: PyTree, operands: PyTree, *,
             boundaries: Iterable[int] = (),
-            on_boundary: Optional[Callable[[int, PyTree], None]] = None
-            ) -> tuple[PyTree, PyTree]:
-        """Runs all rounds; returns (final state, host-side metrics).
+            on_boundary: Optional[Callable[[int, PyTree], None]] = None,
+            on_segment: Optional[Callable[[int, int, PyTree, PyTree],
+                                          None]] = None,
+            start: int = 0) -> tuple[PyTree, PyTree]:
+        """Runs rounds ``[start, R)``; returns (final state, host metrics).
 
         ``operands``: pytree whose every leaf has a leading round axis R.
         ``on_boundary(end_round, state)`` fires after every segment with
         the carry state — the hook for eval/checkpoint/log cadence (cut
         the segments where you need it via ``boundaries`` / ``chunk``).
-        Metrics leaves come back as ``(R, ...)`` numpy arrays, fetched in
-        one transfer per segment, concatenated host-side.
+        ``on_segment(start, end, state, metrics)`` fires after
+        ``on_boundary`` with the segment's DEVICE metrics — the resilience
+        snapshot hook (evals recorded by ``on_boundary`` land in the cursor
+        before the snapshot is taken).
+        ``start`` resumes mid-plan: segments are cut over the FULL round
+        range (so trace shapes match the uninterrupted run exactly) and
+        already-executed ones are skipped; it must equal a segment
+        boundary.  Metrics cover only the rounds actually run.
+        Metrics leaves come back as ``(R - start, ...)`` numpy arrays,
+        fetched in one transfer per run, concatenated host-side; ``None``
+        when no rounds remain.
         """
         rounds = _leading_dim(operands)
+        segs = self._skip_to(split_segments(rounds, self.chunk, boundaries),
+                             start, rounds)
         per_chunk: list[PyTree] = []
-        for start, end in split_segments(rounds, self.chunk, boundaries):
-            seg_ops = jax.tree_util.tree_map(lambda a: a[start:end], operands)
-            with obs_runtime.span("rounds.segment", start=start, end=end):
+        for seg_start, end in segs:
+            seg_ops = jax.tree_util.tree_map(lambda a: a[seg_start:end],
+                                             operands)
+            with obs_runtime.span("rounds.segment", start=seg_start, end=end):
                 state, metrics = self._scanned(state, seg_ops)
             per_chunk.append(metrics)
             if on_boundary is not None:
                 on_boundary(end, state)
+            if on_segment is not None:
+                on_segment(seg_start, end, state, metrics)
+        if not per_chunk:
+            return state, None
         self.transfer_count += 1
         obs_runtime.inc("rounds.transfers")
         fetched = jax.device_get(per_chunk)
@@ -148,24 +183,28 @@ class RoundEngine:
 
     def run_loop(self, state: PyTree, operands: PyTree, *,
                  boundaries: Iterable[int] = (),
-                 on_boundary: Optional[Callable[[int, PyTree], None]] = None
-                 ) -> tuple[PyTree, PyTree]:
+                 on_boundary: Optional[Callable[[int, PyTree], None]] = None,
+                 start: int = 0) -> tuple[PyTree, PyTree]:
         """The per-round Python loop over ``jit(body)`` — the dispatch-bound
         baseline the scan replaces.  Kept first-class for the parity tests
         and the ``bench_convergence`` speedup measurement; honors the same
-        boundary hooks so the two paths are drop-in interchangeable.
+        boundary hooks (and resume ``start``) so the two paths are drop-in
+        interchangeable.  No ``on_segment``: checkpointing is scan-only.
         """
         rounds = _leading_dim(operands)
         jbody = self._jit_body
-        stops = {end for _, end in split_segments(rounds, self.chunk,
-                                                  boundaries)}
+        segs = self._skip_to(split_segments(rounds, self.chunk, boundaries),
+                             start, rounds)
+        stops = {end for _, end in segs}
         per_round: list[PyTree] = []
-        for r in range(rounds):
+        for r in range(start, rounds):
             op = jax.tree_util.tree_map(lambda a: a[r], operands)
             state, metrics = jbody(state, op)
             per_round.append(metrics)
             if on_boundary is not None and (r + 1) in stops:
                 on_boundary(r + 1, state)
+        if not per_round:
+            return state, None
         self.transfer_count += 1
         obs_runtime.inc("rounds.transfers")
         fetched = jax.device_get(per_round)

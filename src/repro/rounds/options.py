@@ -17,7 +17,7 @@ and lets one partially-filled object overlay any config.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+from typing import Any, Optional
 
 #: Valid ``engine`` values (``None`` = the surface default, "scan").
 ENGINES = ("scan", "loop")
@@ -39,11 +39,17 @@ class RoundOptions:
     ``backend`` — force the aggregation kernel backend ("xla" | "pallas" |
                   "pallas_sharded" | "auto"; ``None`` = keep
                   ``AggregatorSpec.backend``).  Static bucket-key material.
+    ``checkpoint`` — a :class:`~repro.resilience.CheckpointConfig` (or bare
+                  directory path) enabling chunk-boundary carry snapshots
+                  and resume; ``None`` = not resumable.  Scan-engine only.
+                  Not jit-key material (typed loosely to keep this module
+                  import-cycle-free).
     """
     engine: Optional[str] = None
     chunk: Optional[int] = None
     taps: Optional[bool] = None
     backend: Optional[str] = None
+    checkpoint: Optional[Any] = None
 
     def __post_init__(self):
         if self.engine is not None and self.engine not in ENGINES:
@@ -55,14 +61,17 @@ class RoundOptions:
     # -- shim resolution ---------------------------------------------------
     def merged(self, *, engine: Optional[str] = None,
                chunk: Optional[int] = None, taps: Optional[bool] = None,
-               backend: Optional[str] = None) -> "RoundOptions":
+               backend: Optional[str] = None,
+               checkpoint: Optional[Any] = None) -> "RoundOptions":
         """This options object overlaid with explicitly-passed legacy
         keywords (the back-compat rule: an explicit keyword always wins)."""
         return RoundOptions(
             engine=engine if engine is not None else self.engine,
             chunk=chunk if chunk is not None else self.chunk,
             taps=taps if taps is not None else self.taps,
-            backend=backend if backend is not None else self.backend)
+            backend=backend if backend is not None else self.backend,
+            checkpoint=checkpoint if checkpoint is not None
+            else self.checkpoint)
 
     @property
     def engine_or_default(self) -> str:
@@ -85,9 +94,11 @@ def resolve_options(options: Optional[RoundOptions] = None, *,
                     engine: Optional[str] = None,
                     chunk: Optional[int] = None,
                     taps: Optional[bool] = None,
-                    backend: Optional[str] = None) -> RoundOptions:
+                    backend: Optional[str] = None,
+                    checkpoint: Optional[Any] = None) -> RoundOptions:
     """The shim resolver every surface funnels through: start from the
     given ``options`` (or the all-inherit default), overlay any explicitly
     passed legacy keywords."""
     base = options if options is not None else RoundOptions()
-    return base.merged(engine=engine, chunk=chunk, taps=taps, backend=backend)
+    return base.merged(engine=engine, chunk=chunk, taps=taps, backend=backend,
+                       checkpoint=checkpoint)

@@ -166,6 +166,16 @@ class JobHandle:
         self.done_ts: Optional[float] = None
         self.submit_step = service.steps
         self.admit_step: Optional[int] = None
+        #: Declarative origin (a ScenarioSpec dict) when the job was
+        #: submitted by registry name — what ``FleetService.restore``
+        #: rematerializes the job from after a process restart.  ``None``
+        #: for raw FleetJob submissions (callables don't serialize; those
+        #: need the ``jobs=`` mapping on restore).
+        self.spec: Optional[dict] = None
+        # Finished results stay in the service snapshot until the caller
+        # actually consumes them via result() — a restart between finish
+        # and delivery must not drop the result.
+        self._consumed = False
 
     def status(self) -> str:
         return self._status
@@ -179,6 +189,7 @@ class JobHandle:
             raise RuntimeError(
                 f"job {self.job_id} ({self.job.label}) was cancelled; "
                 "partial history is on handle.partial_result")
+        self._consumed = True
         return self._result
 
     def cancel(self) -> bool:
@@ -291,6 +302,17 @@ class FleetService:
         #: leaf-streamed XLA path shows up here as a recorded pipeline
         #: fallback with mesh_devices=1 — never silent.
         self.last_dispatch = None
+        # Restart recovery (repro.resilience): with options.checkpoint set,
+        # every step boundary persists the job queue, per-lane carry, lane
+        # clocks, rng positions, and deadlines; FleetService.restore()
+        # rebuilds the service so surviving JobHandles resolve identically.
+        from repro.resilience import resolve_checkpoint
+        self._ckpt_cfg = resolve_checkpoint(self.options.checkpoint)
+        self._store = None
+        if self._ckpt_cfg is not None:
+            from repro.resilience import SnapshotStore
+            self._store = SnapshotStore.from_config(self._ckpt_cfg,
+                                                    subdir="service")
 
     # -- submission -------------------------------------------------------
     def submit(self, job: Union["ScenarioSpec", "FleetJob"], *,  # noqa: F821
@@ -307,13 +329,18 @@ class FleetService:
             FleetJob, FleetResult, ScenarioSpec, apply_job_options,
             bucket_key, init_lane_state, job_from_spec,
         )
+        spec_dict = None
         if isinstance(job, ScenarioSpec):
+            if isinstance(job.scenario, str):
+                spec_dict = {"scenario": job.scenario, "seed": job.seed,
+                             "rounds": job.rounds, "label": job.label}
             job = job_from_spec(job)
         elif not isinstance(job, FleetJob):
             raise TypeError(f"submit wants ScenarioSpec | FleetJob, "
                             f"got {type(job).__name__}")
         job = apply_job_options(job, self.options)
         handle = JobHandle(self, self._next_id, job, deadline=deadline)
+        handle.spec = spec_dict
         self._next_id += 1
         self._handles[handle.job_id] = handle
         handle.key = bucket_key(job, chunk=self.chunk)
@@ -423,8 +450,250 @@ class FleetService:
         for key in [k for k, b in self._buckets.items() if b.occupied == 0]:
             if not any(h.key == key for h in self._pending):
                 del self._buckets[key]
+        if self._store is not None:
+            self._snapshot()
         return bool(self._pending) or any(
             b.occupied for b in self._buckets.values())
+
+    # -- restart recovery (repro.resilience) -------------------------------
+    def _snapshot(self) -> None:
+        """Persist the whole service at this step boundary: job queue,
+        per-lane device carry, lane clocks (local rounds + rng position),
+        histories, and deadlines.  Bucket states are device-copied before
+        enqueueing so the writer thread never races the next segment's
+        donated buffers; host conversion happens off-thread."""
+        arrays: dict[str, Any] = {}
+        buckets_meta = []
+        for bi, bucket in enumerate(self._buckets.values()):
+            state_copy = jax.tree_util.tree_map(jnp.copy, bucket.state)
+            for li, leaf in enumerate(jax.tree_util.tree_leaves(state_copy)):
+                arrays[f"bucket/{bi}/state/{li:03d}"] = leaf
+            slots_meta: list = []
+            for k, s in enumerate(bucket.slots):
+                if s is None:
+                    slots_meta.append(None)
+                    continue
+                h_arrays, h_meta = s.hist.pack()
+                for col, arr in h_arrays.items():
+                    arrays[f"bucket/{bi}/slot/{k}/hist/{col}"] = arr
+                slots_meta.append({
+                    "job_id": (s.token.job_id if s.token is not None
+                               else None),
+                    "local": int(s.local),
+                    "rng": s.rng.bit_generator.state,
+                    "hist": h_meta,
+                    "evals": [[int(r), float(v)] for r, v in s.evals],
+                })
+            buckets_meta.append({"capacity": bucket.capacity,
+                                 "rounds_executed": bucket.rounds_executed,
+                                 "slots": slots_meta})
+        handles_meta = []
+        for h in sorted(self._handles.values(), key=lambda h: h.job_id):
+            if h._status not in ("queued", "running") and not (
+                    h._status == "done" and not h._consumed):
+                continue
+            hm = {"job_id": h.job_id, "label": h.job.label,
+                  "status": h._status, "deadline": h.deadline,
+                  "spec": h.spec, "submit_step": h.submit_step,
+                  "admit_step": h.admit_step}
+            if h._status == "done":
+                # Finished but never delivered: persist the full result so a
+                # restart between finish and result() loses nothing.
+                res = h._result
+                for li, leaf in enumerate(
+                        jax.tree_util.tree_leaves(res.state)):
+                    arrays[f"result/{h.job_id}/state/{li:03d}"] = leaf
+                r_arrays, r_meta = res.history.pack()
+                for col, arr in r_arrays.items():
+                    arrays[f"result/{h.job_id}/hist/{col}"] = arr
+                hm["hist"] = r_meta
+                hm["evals"] = [[int(r), float(v)] for r, v in res.evals]
+                hm["best_eval"] = (None if res.best_eval is None
+                                   else float(res.best_eval))
+            handles_meta.append(hm)
+        meta = {
+            "signature": {"surface": "fleet-service"},
+            "payload": {
+                "service": {"steps": self.steps,
+                            "rounds_executed": self.rounds_executed,
+                            "next_id": self._next_id,
+                            "max_lanes": self.max_lanes,
+                            "chunk": self.chunk,
+                            "taps": self.options.taps,
+                            "backend": self.options.backend,
+                            "donate": self.donate},
+                "buckets": buckets_meta,
+                "handles": handles_meta,
+            },
+        }
+        self._store.save(self.steps, arrays, meta)
+
+    @classmethod
+    def restore(cls, checkpoint: Any, *,
+                jobs: Optional[dict] = None,
+                donate: Optional[bool] = None) -> "FleetService":
+        """Rebuild a service from its last step-boundary snapshot.
+
+        Surviving lanes are re-admitted into the SAME slots with their
+        mid-run device state, local round clocks, rng positions, and
+        histories; queued jobs are re-queued in deadline order — so every
+        pre-kill :class:`JobHandle` (reachable via ``handles()`` /
+        ``handle_of``) resolves identically to the uninterrupted run.
+
+        Jobs submitted by registry name (:class:`ScenarioSpec` with a
+        string scenario) rematerialize automatically; raw
+        :class:`FleetJob` submissions carry callables that cannot be
+        serialized — pass ``jobs={job_id: FleetJob}`` with the original
+        objects for those.  Handles that were already ``done`` are NOT
+        restored (their results were delivered before the kill).
+        """
+        from repro.checkpoint.npz import decode_leaf
+        from repro.fed.metrics import FedHistory
+        from repro.fleet import (
+            FleetResult, ScenarioSpec, apply_job_options, bucket_key,
+            init_lane_state, job_from_spec,
+        )
+        from repro.resilience import (
+            CheckpointError, SnapshotStore, check_signature, resolve_checkpoint,
+        )
+        from repro.rounds import RoundOptions
+
+        cfg = resolve_checkpoint(checkpoint)
+        store = SnapshotStore.from_config(cfg, subdir="service")
+        snap = store.load_latest()
+        if snap is None:
+            raise CheckpointError(
+                f"no service snapshot in {store.path!r}",
+                hint="the service persists at step boundaries only when "
+                     "constructed with options=RoundOptions(checkpoint=...)")
+        _, arrays, meta = snap
+        check_signature(meta["signature"], {"surface": "fleet-service"},
+                        store.path)
+        payload = meta["payload"]
+        svc_meta = payload["service"]
+        options = RoundOptions(chunk=svc_meta["chunk"],
+                               taps=svc_meta["taps"],
+                               backend=svc_meta["backend"],
+                               checkpoint=cfg)
+        svc = cls(max_lanes=svc_meta["max_lanes"], options=options,
+                  donate=donate if donate is not None
+                  else svc_meta["donate"])
+        # Reuse the already-seeded store (manifest history loaded) so
+        # retention keeps pruning correctly across the restart.
+        svc._store = store
+        svc.steps = int(svc_meta["steps"])
+        svc.rounds_executed = int(svc_meta["rounds_executed"])
+        svc._next_id = int(svc_meta["next_id"])
+
+        key_impls = meta.get("key_impls", {})
+
+        def decode_state(prefix: str, like: Any) -> Any:
+            leaves, treedef = jax.tree_util.tree_flatten(like)
+            out = []
+            for li, leaf in enumerate(leaves):
+                name = f"{prefix}{li:03d}"
+                if name not in arrays:
+                    raise CheckpointError(
+                        f"service snapshot is missing {name!r}",
+                        hint="the snapshot was written by an incompatible "
+                             "configuration; use a fresh checkpoint dir")
+                out.append(decode_leaf(arrays[name], leaf,
+                                       key_impls.get(name)))
+            return jax.tree_util.tree_unflatten(treedef, out)
+
+        def hist_from(prefix: str, h_meta: dict) -> FedHistory:
+            return FedHistory.unpack(
+                {n[len(prefix):]: a for n, a in arrays.items()
+                 if n.startswith(prefix)}, h_meta)
+
+        missing = []
+        id2handle: dict[int, JobHandle] = {}
+        for hm in payload["handles"]:
+            if hm["spec"] is not None:
+                job = job_from_spec(ScenarioSpec(**hm["spec"]))
+            elif jobs is not None and hm["job_id"] in jobs:
+                job = jobs[hm["job_id"]]
+            else:
+                missing.append(hm["job_id"])
+                continue
+            job = apply_job_options(job, svc.options)
+            handle = JobHandle(svc, hm["job_id"], job,
+                               deadline=hm["deadline"])
+            handle.spec = hm["spec"]
+            handle._status = hm["status"]
+            handle.key = bucket_key(job, chunk=svc.chunk)
+            handle.submit_step = hm["submit_step"]
+            handle.admit_step = hm["admit_step"]
+            svc._handles[handle.job_id] = handle
+            id2handle[handle.job_id] = handle
+            if hm["status"] == "queued":
+                svc._pending.append(handle)
+            elif hm["status"] == "done":
+                # Finished pre-kill but never delivered: reconstitute the
+                # result so handle.result() returns it as if nothing died.
+                handle._result = FleetResult(
+                    label=job.label, job=job,
+                    state=decode_state(f"result/{hm['job_id']}/state/",
+                                       init_lane_state(job)),
+                    history=hist_from(f"result/{hm['job_id']}/hist/",
+                                      hm["hist"]),
+                    evals=[(int(r), float(v)) for r, v in hm["evals"]],
+                    best_eval=hm["best_eval"])
+        if missing:
+            raise CheckpointError(
+                f"cannot rematerialize jobs {missing}: they were submitted "
+                "as raw FleetJob objects (their callables do not serialize)",
+                hint="pass jobs={job_id: FleetJob} to restore() with the "
+                     "original job objects for these ids")
+
+        for bi, bm in enumerate(payload["buckets"]):
+            occupied = [(k, sm) for k, sm in enumerate(bm["slots"])
+                        if sm is not None]
+            if not occupied:
+                continue
+            template = id2handle[occupied[0][1]["job_id"]]
+            bucket = svc._make_bucket(template.key, template.job,
+                                      int(bm["capacity"]))
+            bucket.rounds_executed = int(bm["rounds_executed"])
+            for k, sm in occupied:
+                handle = id2handle[sm["job_id"]]
+                like = init_lane_state(handle.job)
+                leaves, treedef = jax.tree_util.tree_flatten(like)
+                lane_leaves = []
+                for li, leaf in enumerate(leaves):
+                    name = f"bucket/{bi}/state/{li:03d}"
+                    if name not in arrays:
+                        raise CheckpointError(
+                            f"service snapshot is missing {name!r}",
+                            hint="the snapshot was written by an "
+                                 "incompatible configuration; use a fresh "
+                                 "checkpoint dir")
+                    lane_leaves.append(decode_leaf(arrays[name][k], leaf,
+                                                   key_impls.get(name)))
+                lane_state = jax.tree_util.tree_unflatten(treedef,
+                                                          lane_leaves)
+                hist = hist_from(f"bucket/{bi}/slot/{k}/hist/", sm["hist"])
+                rng = np.random.default_rng(handle.job.seed)
+                rng.bit_generator.state = sm["rng"]
+                bucket.admit(handle.job, token=handle,
+                             lane_state=lane_state, local=int(sm["local"]),
+                             rng=rng, hist=hist,
+                             evals=[(int(r), float(v))
+                                    for r, v in sm["evals"]],
+                             slot=k)
+            svc._buckets[template.key] = bucket
+        obs_runtime.event("resilience.service_restore",
+                          step=svc.steps, handles=len(id2handle),
+                          buckets=len(svc._buckets))
+        return svc
+
+    def handles(self) -> list[JobHandle]:
+        """Every handle this service knows, in job-id order (after
+        ``restore()``: the surviving pre-kill handles)."""
+        return [self._handles[i] for i in sorted(self._handles)]
+
+    def handle_of(self, job_id: int) -> JobHandle:
+        return self._handles[int(job_id)]
 
     def run_until_idle(self) -> None:
         """Step until every submitted job has finished."""

@@ -265,6 +265,10 @@ def train_loop(loss_fn, params, batches, optimizer, cfg: TrainerConfig,
     cfg = opts.apply_config(cfg)
     engine, chunk = opts.engine_or_default, opts.chunk
 
+    if opts.checkpoint is not None and engine != "scan":
+        raise ValueError("options.checkpoint requires engine='scan' "
+                         "(the loop path has no chunk boundaries to "
+                         "snapshot at)")
     if engine == "loop":
         return _train_loop_loop(loss_fn, params, batches, optimizer, cfg,
                                 lr_schedule, steps, seed=seed,
@@ -333,24 +337,67 @@ def train_loop(loss_fn, params, batches, optimizer, cfg: TrainerConfig,
 
     eng = RoundEngine(body, chunk=chunk)
     carry0 = (state, jnp.asarray(np.inf, jnp.float32), params)
+
+    # Resilience: resume from the last chunk-boundary snapshot (if any) and
+    # keep snapshotting carry + metrics-so-far at every boundary.
+    from repro.resilience import resolve_checkpoint
+    ckpt_cfg = resolve_checkpoint(opts.checkpoint)
+    checkpointer, start_round, saved_cols = None, 0, {}
+    if ckpt_cfg is not None:
+        from repro.resilience import (
+            CarryCheckpointer, SnapshotStore, check_signature, restore_carry,
+            restored_metrics,
+        )
+        store = SnapshotStore.from_config(ckpt_cfg)
+        signature = {"surface": "trainer", "steps": steps, "chunk": chunk,
+                     "seed": seed,
+                     "eval_every": eval_every if eval_fn else 0}
+        snap = store.load_latest() if ckpt_cfg.resume else None
+        if snap is not None:
+            start_round, arrays, meta = snap
+            check_signature(meta["signature"], signature, store.path)
+            carry0 = restore_carry(arrays, meta, carry0)
+            saved_cols = restored_metrics(arrays)
+            payload = meta.get("payload", {})
+            hist["eval"] = list(payload.get("eval", []))
+            hist["eval_step"] = [int(s) for s in payload.get("eval_step", [])]
+            best["acc"] = float(payload.get("best_acc", -np.inf))
+        checkpointer = CarryCheckpointer(
+            store, signature=signature, total=steps, every=ckpt_cfg.every,
+            base_columns=saved_cols,
+            payload_fn=lambda end: {"eval": hist["eval"],
+                                    "eval_step": hist["eval_step"],
+                                    "best_acc": best["acc"]})
+
     (state, best_norm, best_params), metrics = eng.run(
         carry0, {"batch": stacked, "key": keys},
         boundaries=cadence_boundaries(steps, eval_every if eval_fn else 0),
-        on_boundary=on_boundary)
+        on_boundary=on_boundary,
+        on_segment=checkpointer.on_segment if checkpointer else None,
+        start=start_round)
+    if checkpointer is not None:
+        checkpointer.close()
 
-    hist["loss"] = [float(x) for x in metrics["loss"]]
-    hist["direction_norm"] = [float(x) for x in metrics["direction_norm"]]
-    if "kappa_hat" in metrics:
-        hist["kappa_hat"] = [float(x) for x in metrics["kappa_hat"]]
-    if "taps" in metrics:
+    from repro.resilience import concat_metrics, metric_columns
+    cols = (dict(saved_cols) if metrics is None
+            else concat_metrics(saved_cols, metric_columns(metrics)))
+    hist["loss"] = [float(x) for x in cols["loss"]]
+    hist["direction_norm"] = [float(x) for x in cols["direction_norm"]]
+    if "kappa_hat" in cols:
+        hist["kappa_hat"] = [float(x) for x in cols["kappa_hat"]]
+    tap_cols = {k[len("taps."):]: np.asarray(v) for k, v in cols.items()
+                if k.startswith("taps.")}
+    if tap_cols:
         # Aligned per-round tap columns: {field: (steps, ...) array}.
-        hist["taps"] = {k: np.asarray(v)
-                        for k, v in metrics["taps"].to_dict().items()}
+        hist["taps"] = tap_cols
     if track_best:
         best["norm"] = float(best_norm)
         best["params"] = best_params
     report = {"trace_count": eng.trace_count,
               "chunk_shapes": tuple(sorted(eng.chunk_shapes))}
+    if ckpt_cfg is not None:
+        report["snapshots"] = checkpointer.store.snapshots_written
+        report["resumed_from"] = start_round
     return state["params"], {"history": hist, "best": best, "state": state,
                              "scan_report": report}
 

@@ -1,0 +1,546 @@
+"""Preemption-safe resumable experiments (repro.resilience).
+
+The load-bearing contract: a run killed at ANY chunk boundary — or mid-
+snapshot-write — and resumed from its checkpoint directory produces
+**bit-for-bit** the uninterrupted run's results, on every loop owner
+(``train_loop``, ``fed.run_rounds``, ``FleetRunner``) and on the
+continuous ``FleetService`` (whose restore re-admits surviving lanes and
+re-queues pending jobs so pre-kill ``JobHandle``s resolve identically).
+Corrupt state is a clean refusal with a recovery hint, never silent
+garbage.
+"""
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import load_checkpoint, save_checkpoint
+from repro.core import AggregatorSpec
+from repro.fed import (
+    ClientConfig, FedConfig, FedServer, constant_attack, run_rounds,
+)
+from repro.fleet import FleetJob, FleetRunner
+from repro.optim import sgd
+from repro.optim.schedules import constant
+from repro.resilience import (
+    CarryCheckpointer, CheckpointConfig, CheckpointError, FaultPlan,
+    SimulatedPreemption, SnapshotStore, resolve_checkpoint,
+)
+from repro.rounds import RoundOptions
+from repro.serving import FleetService
+from repro.training import ByzantineConfig, TrainerConfig, train_loop
+
+_N, _M, _D = 10, 6, 5
+
+
+def _centers(seed, n, d):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.normal(size=(n, d)), jnp.float32)
+
+
+def _quad_loss(centers):
+    def loss_fn(params, batch):
+        c = centers[batch["idx"][0]]
+        return 0.5 * jnp.sum((params["theta"] - c) ** 2), {}
+    return loss_fn
+
+
+def _idx_batch_fn(cohort, n_flip, rng):
+    return {"idx": np.asarray(cohort)[:, None, None]}
+
+
+def _tree_equal(a, b):
+    for x, y in zip(jax.tree_util.tree_leaves(a),
+                    jax.tree_util.tree_leaves(b)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+# ---------------------------------------------------------------------------
+# Snapshot store: atomicity, retention, fault injection, corrupt refusal.
+# ---------------------------------------------------------------------------
+
+def test_store_save_load_roundtrip_including_typed_keys(tmp_path):
+    store = SnapshotStore(str(tmp_path), sync=True)
+    key = jax.random.key(7)          # typed PRNG key, not np-convertible
+    store.save(5, {"carry/000": jnp.arange(3.0),
+                   "carry/001": key,
+                   # list values concatenate along axis 0 in the writer
+                   "metrics/loss": [np.ones(2), np.zeros(3)]},
+               {"signature": {"surface": "t"}, "payload": {"x": 1}})
+    store.close()
+    assert sorted(os.listdir(tmp_path)) == ["MANIFEST.json",
+                                            "snapshot-00000005.npz"]
+    round_, arrays, meta = SnapshotStore(str(tmp_path)).load_latest()
+    assert round_ == 5
+    np.testing.assert_array_equal(arrays["carry/000"], [0.0, 1.0, 2.0])
+    np.testing.assert_array_equal(arrays["metrics/loss"],
+                                  [1, 1, 0, 0, 0])
+    assert meta["payload"] == {"x": 1}
+    # The typed key's impl travels in the meta; the data round-trips.
+    assert meta["key_impls"]["carry/001"] == str(jax.random.key_impl(key))
+    np.testing.assert_array_equal(arrays["carry/001"],
+                                  np.asarray(jax.random.key_data(key)))
+
+
+def test_store_retention_keeps_newest(tmp_path):
+    store = SnapshotStore(str(tmp_path), keep=2, sync=True)
+    for r in (2, 4, 6, 8):
+        store.save(r, {"x": np.asarray([r])}, {"signature": {}})
+    store.close()
+    snaps = sorted(f for f in os.listdir(tmp_path) if f.endswith(".npz"))
+    assert snaps == ["snapshot-00000006.npz", "snapshot-00000008.npz"]
+    round_, arrays, _ = SnapshotStore(str(tmp_path), keep=2).load_latest()
+    assert round_ == 8 and arrays["x"][0] == 8
+
+
+def test_store_async_double_buffered_writes_all(tmp_path):
+    store = SnapshotStore(str(tmp_path), keep=10)       # async path
+    for r in range(6):
+        store.save(r, {"x": jnp.asarray([float(r)])}, {"signature": {}})
+    store.close()
+    assert store.snapshots_written == 6
+    round_, arrays, _ = SnapshotStore(str(tmp_path)).load_latest()
+    assert round_ == 5 and arrays["x"][0] == 5.0
+
+
+def test_fault_kill_completes_write_then_raises(tmp_path):
+    store = SnapshotStore(str(tmp_path), sync=True,
+                          fault_plan=FaultPlan(kill_at=1))
+    store.save(3, {"x": np.zeros(1)}, {"signature": {}})
+    with pytest.raises(SimulatedPreemption) as ei:
+        store.save(6, {"x": np.ones(1)}, {"signature": {}})
+    assert ei.value.ordinal == 1 and ei.value.round == 6
+    # The kill-ordinal write itself is durable (kill lands AFTER the save).
+    round_, _, _ = SnapshotStore(str(tmp_path)).load_latest()
+    assert round_ == 6
+
+
+def test_fault_torn_write_leaves_previous_snapshot_loadable(tmp_path):
+    store = SnapshotStore(str(tmp_path), sync=True,
+                          fault_plan=FaultPlan(torn_at=1))
+    store.save(3, {"x": np.asarray([3.0])}, {"signature": {}})
+    with pytest.raises(SimulatedPreemption):
+        store.save(6, {"x": np.asarray([6.0])}, {"signature": {}})
+    # The half-written snapshot-6 file exists, but the manifest still
+    # points at complete snapshot-3: restore never sees the torn file.
+    assert "snapshot-00000006.npz" in os.listdir(tmp_path)
+    round_, arrays, _ = SnapshotStore(str(tmp_path)).load_latest()
+    assert round_ == 3 and arrays["x"][0] == 3.0
+
+
+def test_corrupt_manifest_is_clean_refusal_with_hint(tmp_path):
+    store = SnapshotStore(str(tmp_path), sync=True)
+    store.save(2, {"x": np.zeros(1)}, {"signature": {}})
+    (tmp_path / "MANIFEST.json").write_text("{ not json !")
+    with pytest.raises(CheckpointError) as ei:
+        SnapshotStore(str(tmp_path)).load_latest()
+    assert "corrupt" in str(ei.value)
+    assert "snapshot-00000002.npz" in str(ei.value)     # recovery hint
+
+
+def test_stale_manifest_pointing_at_missing_file_hints_history(tmp_path):
+    store = SnapshotStore(str(tmp_path), keep=5, sync=True)
+    store.save(2, {"x": np.zeros(1)}, {"signature": {}})
+    store.save(4, {"x": np.ones(1)}, {"signature": {}})
+    os.unlink(tmp_path / "snapshot-00000004.npz")
+    with pytest.raises(CheckpointError) as ei:
+        SnapshotStore(str(tmp_path)).load_latest()
+    assert "unreadable" in str(ei.value)
+    assert "snapshot-00000002.npz" in ei.value.hint
+
+
+def test_fault_plan_and_config_validation(tmp_path):
+    with pytest.raises(ValueError):
+        FaultPlan(kill_at=1, torn_at=2)
+    assert resolve_checkpoint(None) is None
+    assert resolve_checkpoint(str(tmp_path)).dir == str(tmp_path)
+    cfg = CheckpointConfig(dir=str(tmp_path), keep=3)
+    assert resolve_checkpoint(cfg) is cfg
+    with pytest.raises(TypeError):
+        resolve_checkpoint(42)
+
+
+def test_checkpointer_every_snapshots_nth_boundary_and_final(tmp_path):
+    store = SnapshotStore(str(tmp_path), keep=99, sync=True)
+    ck = CarryCheckpointer(store, signature={"surface": "t"}, total=10,
+                           every=2)
+    for start, end in [(0, 3), (3, 6), (6, 9), (9, 10)]:
+        ck.on_segment(start, end, jnp.zeros(2), {"loss": jnp.zeros(end - start)})
+    ck.close()
+    # Boundaries 2 and 4 (every=2) plus the final boundary — rounds 6, 10.
+    snaps = sorted(f for f in os.listdir(tmp_path) if f.endswith(".npz"))
+    assert snaps == ["snapshot-00000006.npz", "snapshot-00000010.npz"]
+
+
+# ---------------------------------------------------------------------------
+# npz checkpoint: typed PRNG keys + key-set validation (the satellites).
+# ---------------------------------------------------------------------------
+
+def test_npz_checkpoint_roundtrips_typed_prng_keys(tmp_path):
+    path = str(tmp_path / "ck.npz")
+    tree = {"params": {"w": jnp.arange(4.0)},
+            "key": jax.random.key(3),
+            "keys": jax.random.split(jax.random.key(9), 5),
+            "legacy": jax.random.PRNGKey(1)}      # raw uint32, no wrapping
+    save_checkpoint(path, tree, step=17)
+    like = {"params": {"w": jnp.zeros(4)},
+            "key": jax.random.key(0),
+            "keys": jax.random.split(jax.random.key(0), 5),
+            "legacy": jax.random.PRNGKey(0)}
+    out, step = load_checkpoint(path, like)
+    assert step == 17
+    assert jax.dtypes.issubdtype(out["key"].dtype, jax.dtypes.prng_key)
+    np.testing.assert_array_equal(jax.random.key_data(out["key"]),
+                                  jax.random.key_data(tree["key"]))
+    np.testing.assert_array_equal(jax.random.key_data(out["keys"]),
+                                  jax.random.key_data(tree["keys"]))
+    np.testing.assert_array_equal(out["legacy"], tree["legacy"])
+    # The restored key is USABLE, not just structurally equal.
+    np.testing.assert_array_equal(
+        np.asarray(jax.random.normal(out["key"], (3,))),
+        np.asarray(jax.random.normal(tree["key"], (3,))))
+
+
+def test_npz_load_rejects_mismatched_key_sets(tmp_path):
+    path = str(tmp_path / "ck.npz")
+    save_checkpoint(path, {"a": jnp.zeros(2), "b": jnp.ones(2)})
+    with pytest.raises(ValueError) as ei:
+        load_checkpoint(path, {"a": jnp.zeros(2), "c": jnp.ones(2)})
+    msg = str(ei.value)
+    assert "missing keys" in msg and "'c'" in msg
+    assert "extra keys" in msg and "'b'" in msg
+
+
+# ---------------------------------------------------------------------------
+# Trainer: killed-and-resumed == uninterrupted, at every boundary.
+# ---------------------------------------------------------------------------
+
+def _trainer_args():
+    loss_fn = _quad_loss(_centers(0, 8, _D))
+    cfg = TrainerConfig(algorithm="dshb",
+                        agg=AggregatorSpec(rule="cwtm", f=2, pre="nnm"),
+                        byz=ByzantineConfig(f=2, attack="alie", eta=2.0),
+                        track_kappa_hat=True, taps=True)
+    params = {"theta": jnp.zeros((_D,), jnp.float32)}
+    batch = {"idx": np.arange(8)[:, None]}
+    return (loss_fn, params, batch, sgd(clip=1.0), cfg, constant(0.1), 8)
+
+
+def _trainer_kw():
+    return dict(seed=3, engine="scan", chunk=2, eval_every=4,
+                eval_fn=lambda p: -jnp.sum(p["theta"] ** 2))
+
+
+def _assert_trainer_equal(out, ref):
+    p, o = out
+    rp, ro = ref
+    _tree_equal(p, rp)
+    for k in ("loss", "kappa_hat", "eval", "eval_step"):
+        assert o["history"][k] == ro["history"][k], k
+    for k, v in ro["history"]["taps"].items():
+        np.testing.assert_array_equal(o["history"]["taps"][k], v)
+    assert o["best"]["acc"] == ro["best"]["acc"]
+    _tree_equal(o["state"], ro["state"])
+
+
+# 8 steps, chunk=2, eval at 4: boundaries at 2, 4, 6, 8 — ordinals 0..3.
+@pytest.mark.parametrize("fault", [FaultPlan(kill_at=0), FaultPlan(kill_at=1),
+                                   FaultPlan(kill_at=2), FaultPlan(kill_at=3),
+                                   FaultPlan(torn_at=1)],
+                         ids=["kill@0", "kill@1", "kill@2", "kill@final",
+                              "torn@1"])
+def test_trainer_kill_resume_bitwise(tmp_path, fault):
+    ref = train_loop(*_trainer_args(), **_trainer_kw())
+    with pytest.raises(SimulatedPreemption):
+        train_loop(*_trainer_args(), **_trainer_kw(),
+                   options=RoundOptions(checkpoint=CheckpointConfig(
+                       dir=str(tmp_path), sync=True, keep=2,
+                       fault_plan=fault)))
+    out = train_loop(*_trainer_args(), **_trainer_kw(),
+                     options=RoundOptions(checkpoint=CheckpointConfig(
+                         dir=str(tmp_path), sync=True, keep=2)))
+    _assert_trainer_equal(out, ref)
+    report = out[1]["scan_report"]
+    # torn@1 rolls back to the previous boundary; kill@k resumed the next.
+    expect = {0: 2, 1: 4, 2: 6, 3: 8}[fault.kill_at] \
+        if fault.kill_at is not None else 2
+    assert report["resumed_from"] == expect
+
+
+def test_trainer_checkpointed_fresh_run_matches_bare(tmp_path):
+    """Checkpointing ON (async writer) changes nothing about the math, and
+    the snapshot count equals the boundary count."""
+    ref = train_loop(*_trainer_args(), **_trainer_kw())
+    out = train_loop(*_trainer_args(), **_trainer_kw(),
+                     options=RoundOptions(checkpoint=CheckpointConfig(
+                         dir=str(tmp_path))))
+    _assert_trainer_equal(out, ref)
+    assert out[1]["scan_report"]["snapshots"] == 4
+    assert out[1]["scan_report"]["resumed_from"] == 0
+
+
+def test_trainer_checkpoint_requires_scan_engine(tmp_path):
+    with pytest.raises(ValueError, match="requires engine='scan'"):
+        train_loop(*_trainer_args(), seed=3, engine="loop",
+                   options=RoundOptions(checkpoint=str(tmp_path)))
+
+
+# ---------------------------------------------------------------------------
+# Fed server: killed-and-resumed == uninterrupted.
+# ---------------------------------------------------------------------------
+
+def _fed_setup():
+    loss_fn = _quad_loss(_centers(0, _N, _D))
+    cfg = FedConfig(n_clients=_N, clients_per_round=_M, f=2,
+                    agg=AggregatorSpec(rule="cwtm", f=2, pre="nnm"),
+                    client=ClientConfig(local_lr=0.05, algorithm="dshb"))
+    server = FedServer(loss_fn, sgd(clip=1.0), cfg, constant(0.1))
+    state = server.init_state({"theta": jnp.zeros((_D,), jnp.float32)})
+    return server, state
+
+
+def _assert_fed_equal(res, ref):
+    (state, hist), (rstate, rhist) = res, ref
+    _tree_equal(state, rstate)
+    assert hist.loss == rhist.loss
+    np.testing.assert_array_equal(hist.kappa_hat, rhist.kappa_hat)
+    assert hist.direction_norm == rhist.direction_norm
+    assert hist.lr == rhist.lr
+    assert hist.attack == rhist.attack and hist.eta == rhist.eta
+    assert hist.m_byz == rhist.m_byz and hist.f_round == rhist.f_round
+    for a, b in zip(hist.cohorts, rhist.cohorts):
+        np.testing.assert_array_equal(a, b)
+
+
+@pytest.mark.parametrize("fault,resumed", [
+    (FaultPlan(kill_at=1), 6), (FaultPlan(torn_at=1), 3),
+    (FaultPlan(kill_at=3), 10)],
+    ids=["kill@1", "torn@1", "kill@final"])
+def test_fed_kill_resume_bitwise(tmp_path, fault, resumed):
+    server, state = _fed_setup()
+    ref = run_rounds(server, state, _idx_batch_fn, 10, seed=7,
+                     schedule=constant_attack("alie", 3.0),
+                     engine="scan", chunk=3)
+    s2, st2 = _fed_setup()
+    with pytest.raises(SimulatedPreemption):
+        run_rounds(s2, st2, _idx_batch_fn, 10, seed=7,
+                   schedule=constant_attack("alie", 3.0), engine="scan",
+                   chunk=3, options=RoundOptions(
+                       checkpoint=CheckpointConfig(
+                           dir=str(tmp_path), sync=True, fault_plan=fault)))
+    s3, st3 = _fed_setup()
+    res = run_rounds(s3, st3, _idx_batch_fn, 10, seed=7,
+                     schedule=constant_attack("alie", 3.0), engine="scan",
+                     chunk=3, options=RoundOptions(
+                         checkpoint=CheckpointConfig(dir=str(tmp_path),
+                                                     sync=True)))
+    assert s3.last_scan_report["resumed_from"] == resumed
+    _assert_fed_equal(res, ref)
+
+
+def test_fed_signature_mismatch_is_clean_refusal(tmp_path):
+    server, state = _fed_setup()
+    run_rounds(server, state, _idx_batch_fn, 6, seed=7, engine="scan",
+               chunk=3, options=RoundOptions(
+                   checkpoint=CheckpointConfig(dir=str(tmp_path), sync=True)))
+    s2, st2 = _fed_setup()
+    with pytest.raises(CheckpointError, match="different experiment plan"):
+        run_rounds(s2, st2, _idx_batch_fn, 6, seed=8, engine="scan",
+                   chunk=3, options=RoundOptions(
+                       checkpoint=CheckpointConfig(dir=str(tmp_path),
+                                                   sync=True)))
+
+
+def test_fed_resume_false_ignores_existing_snapshots(tmp_path):
+    server, state = _fed_setup()
+    ref = run_rounds(server, state, _idx_batch_fn, 6, seed=7, engine="scan",
+                     chunk=3, options=RoundOptions(
+                         checkpoint=CheckpointConfig(dir=str(tmp_path),
+                                                     sync=True)))
+    s2, st2 = _fed_setup()
+    res = run_rounds(s2, st2, _idx_batch_fn, 6, seed=7, engine="scan",
+                     chunk=3, options=RoundOptions(
+                         checkpoint=CheckpointConfig(dir=str(tmp_path),
+                                                     sync=True,
+                                                     resume=False)))
+    assert s2.last_scan_report["resumed_from"] == 0
+    _assert_fed_equal(res, ref)
+
+
+# ---------------------------------------------------------------------------
+# Fleet runner + continuous service: restart recovery.
+# ---------------------------------------------------------------------------
+
+_OPT = sgd(clip=1.0)
+_FLEET_LOSS = _quad_loss(_centers(0, _N, _D))
+
+
+def _job(label, *, f=2, seed=0, rounds=5, eval_every=0):
+    cfg = FedConfig(n_clients=_N, clients_per_round=_M, f=f,
+                    agg=AggregatorSpec(rule="cwtm", f=f, pre="nnm"),
+                    client=ClientConfig(local_lr=0.05, algorithm="dshb",
+                                        beta=0.9))
+    eval_fn = (lambda params: -jnp.sum(params["theta"] ** 2)) \
+        if eval_every else None
+    return FleetJob(label=label, cfg=cfg, loss_fn=_FLEET_LOSS, optimizer=_OPT,
+                    params={"theta": jnp.zeros((_D,), jnp.float32)},
+                    batch_fn=_idx_batch_fn, rounds=rounds, seed=seed,
+                    schedule=constant_attack("alie", 2.0),
+                    eval_fn=eval_fn, eval_every=eval_every,
+                    lr_fn=lambda r: 0.1)
+
+
+def _assert_same_result(a, b):
+    assert a.history.rounds == b.history.rounds
+    assert a.history.loss == b.history.loss
+    assert a.history.direction_norm == b.history.direction_norm
+    for ca, cb in zip(a.history.cohorts, b.history.cohorts):
+        np.testing.assert_array_equal(ca, cb)
+    assert a.evals == b.evals and a.best_eval == b.best_eval
+    _tree_equal(a.state, b.state)
+
+
+def _fleet_jobs():
+    return [_job("a", seed=0, rounds=6, eval_every=2),
+            _job("b", seed=1, rounds=4, eval_every=2),
+            _job("c", seed=2, rounds=6, f=3)]
+
+
+@pytest.mark.parametrize("fault", [FaultPlan(kill_at=0), FaultPlan(kill_at=1),
+                                   FaultPlan(torn_at=1)],
+                         ids=["kill@0", "kill@1", "torn@1"])
+def test_fleet_runner_kill_resume_bitwise(tmp_path, fault):
+    ref = FleetRunner(_fleet_jobs(), chunk=2).run()
+    with pytest.raises(SimulatedPreemption):
+        FleetRunner(_fleet_jobs(), options=RoundOptions(
+            chunk=2, checkpoint=CheckpointConfig(
+                dir=str(tmp_path), sync=True, fault_plan=fault))).run()
+    res = FleetRunner(_fleet_jobs(), options=RoundOptions(
+        chunk=2, checkpoint=CheckpointConfig(dir=str(tmp_path),
+                                             sync=True))).run()
+    for a, b in zip(res, ref):
+        _assert_same_result(a, b)
+
+
+def test_service_restart_resolves_handles_identically(tmp_path):
+    """The tentpole end-to-end: kill the service mid-run, restore, and
+    every surviving JobHandle resolves bitwise-equal to the uninterrupted
+    reference; results delivered before the kill already matched."""
+    def jobs():
+        return [_job("a", seed=0, rounds=6, eval_every=2),
+                _job("b", seed=1, rounds=4, eval_every=2),
+                _job("q1", seed=2, rounds=4),
+                _job("q2", seed=3, rounds=4)]
+
+    svc = FleetService(chunk=2, max_lanes=2)
+    ref_handles = [svc.submit(j) for j in jobs()]
+    svc.run_until_idle()
+    ref = {h.job_id: h.result() for h in ref_handles}
+
+    svc2 = FleetService(max_lanes=2, options=RoundOptions(
+        chunk=2, checkpoint=CheckpointConfig(
+            dir=str(tmp_path), fault_plan=FaultPlan(kill_at=1))))
+    kh = [svc2.submit(j) for j in jobs()]
+    pre_kill_done = {}
+    with pytest.raises(SimulatedPreemption):
+        while svc2.step():
+            for h in kh:
+                if h.status() == "done" and h.job_id not in pre_kill_done:
+                    pre_kill_done[h.job_id] = h.result()
+    # Raw FleetJob submissions need the jobs= mapping (callables don't
+    # serialize); job ids key the original objects.  Results consumed
+    # before the kill are NOT restored (they were delivered); results that
+    # finished but were never consumed ARE — nothing is lost either way.
+    svc3 = FleetService.restore(
+        CheckpointConfig(dir=str(tmp_path)),
+        jobs={h.job_id: j for h, j in zip(kh, jobs())})
+    restored = svc3.handles()
+    assert not ({h.job_id for h in restored} & set(pre_kill_done))
+    assert {h.job_id for h in restored} | set(pre_kill_done) \
+        == {h.job_id for h in kh}
+    svc3.run_until_idle()
+    for h in restored:
+        assert h.status() == "done"
+        _assert_same_result(h.result(), ref[h.job_id])
+    for jid, res in pre_kill_done.items():
+        _assert_same_result(res, ref[jid])
+
+
+def test_service_queued_jobs_survive_restart(tmp_path):
+    svc = FleetService(max_lanes=1, options=RoundOptions(
+        chunk=2, checkpoint=CheckpointConfig(
+            dir=str(tmp_path), sync=True, fault_plan=FaultPlan(kill_at=0))))
+    # deadline=1.0 sorts before the deadline-less job: "dl" takes the
+    # single lane, "nodl" waits in the queue across the restart.
+    nodl = svc.submit(_job("nodl", seed=0, rounds=4))
+    dl = svc.submit(_job("dl", seed=1, rounds=4), deadline=1.0)
+    with pytest.raises(SimulatedPreemption):
+        svc.step()
+    assert dl.status() == "running" and nodl.status() == "queued"
+    svc2 = FleetService.restore(
+        CheckpointConfig(dir=str(tmp_path), sync=True),
+        jobs={nodl.job_id: _job("nodl", seed=0, rounds=4),
+              dl.job_id: _job("dl", seed=1, rounds=4)})
+    h_dl = svc2.handle_of(dl.job_id)
+    h_nodl = svc2.handle_of(nodl.job_id)
+    assert h_dl.status() == "running" and h_nodl.status() == "queued"
+    assert h_dl.deadline == 1.0
+    svc2.run_until_idle()
+    solo = FleetRunner([_job("nodl", seed=0, rounds=4)], chunk=2).run()[0]
+    _assert_same_result(h_nodl.result(), solo)
+
+
+def test_service_undelivered_done_result_survives_restart(tmp_path):
+    """A job that finishes in the killed step — done, but result() never
+    called — is reconstituted by restore(); only consumed results drop
+    out of the snapshot."""
+    ref = FleetRunner([_job("x", seed=0, rounds=2, eval_every=2)],
+                      chunk=2).run()[0]
+    svc = FleetService(options=RoundOptions(
+        chunk=2, checkpoint=CheckpointConfig(
+            dir=str(tmp_path), sync=True, fault_plan=FaultPlan(kill_at=0))))
+    h = svc.submit(_job("x", seed=0, rounds=2, eval_every=2))
+    with pytest.raises(SimulatedPreemption):
+        svc.step()
+    assert h.status() == "done"           # finished, never delivered
+    svc2 = FleetService.restore(
+        CheckpointConfig(dir=str(tmp_path), sync=True),
+        jobs={h.job_id: _job("x", seed=0, rounds=2, eval_every=2)})
+    h2 = svc2.handle_of(h.job_id)
+    assert h2.status() == "done"
+    _assert_same_result(h2.result(), ref)
+
+
+def test_service_restore_without_jobs_mapping_refuses(tmp_path):
+    svc = FleetService(options=RoundOptions(
+        chunk=2, checkpoint=CheckpointConfig(
+            dir=str(tmp_path), sync=True, fault_plan=FaultPlan(kill_at=0))))
+    h = svc.submit(_job("x", seed=0, rounds=4))
+    with pytest.raises(SimulatedPreemption):
+        svc.step()
+    with pytest.raises(CheckpointError, match="raw FleetJob") as ei:
+        FleetService.restore(CheckpointConfig(dir=str(tmp_path), sync=True))
+    assert str(h.job_id) in str(ei.value)
+    assert "jobs=" in ei.value.hint
+
+
+def test_service_restore_empty_dir_refuses_with_hint(tmp_path):
+    with pytest.raises(CheckpointError, match="no service snapshot") as ei:
+        FleetService.restore(CheckpointConfig(dir=str(tmp_path)))
+    assert "checkpoint" in ei.value.hint
+
+
+def test_service_snapshot_meta_is_json_clean(tmp_path):
+    """The manifest must be plain JSON — np types in the payload would
+    crash json.dump inside the writer thread."""
+    svc = FleetService(max_lanes=2, options=RoundOptions(
+        chunk=2, checkpoint=CheckpointConfig(dir=str(tmp_path), sync=True)))
+    svc.submit(_job("a", seed=0, rounds=4, eval_every=2))
+    svc.run_until_idle()
+    manifest = json.loads(
+        (tmp_path / "service" / "MANIFEST.json").read_text())
+    assert manifest["latest"]["meta"]["signature"] == {
+        "surface": "fleet-service"}

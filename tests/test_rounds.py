@@ -67,6 +67,23 @@ def test_split_segments_chunking_and_boundaries():
         split_segments(10, 0)
 
 
+def test_split_segments_boundary_edge_cases():
+    """Resilience leans on these cuts: a resume cursor is only valid if the
+    replanned segments reproduce the snapshot run's boundaries exactly."""
+    # A boundary landing ON a chunk edge adds no extra cut.
+    assert split_segments(10, 5, boundaries=(5,)) == [(0, 5), (5, 10)]
+    # boundaries at 0 / rounds are no-ops (the range edges already cut).
+    assert split_segments(10, 4, boundaries=(0,)) == \
+        split_segments(10, 4, boundaries=(10,)) == \
+        [(0, 4), (4, 8), (8, 10)]
+    # Duplicate boundaries collapse to one cut.
+    assert split_segments(10, 4, boundaries=(4, 4, 4)) == \
+        [(0, 4), (4, 8), (8, 10)]
+    # Unsorted boundary sets are sorted, not taken in caller order.
+    assert split_segments(12, None, boundaries=(9, 3, 9, 6)) == \
+        [(0, 3), (3, 6), (6, 9), (9, 12)]
+
+
 def test_cadence_boundaries():
     assert cadence_boundaries(10, 4) == (4, 8)
     assert cadence_boundaries(10, 4, 5) == (4, 5, 8, 10)
@@ -100,6 +117,57 @@ def test_engine_scan_equals_loop_and_counts_traces():
     assert eng.trace_count == 2 and eng.chunk_shapes == {4, 2}
     eng.run(jnp.float32(1.0), ops)      # same shapes: no retrace
     assert eng.trace_count == 2
+
+
+def test_engine_resume_cursor_skips_executed_segments():
+    """``start=`` resumes mid-plan: segments are cut over the FULL range
+    (trace shapes match the uninterrupted run), executed ones are skipped,
+    and metrics cover only the rounds actually run."""
+    def body(c, op):
+        c = c + op["x"]
+        return c, {"c": c}
+
+    ops = {"x": np.arange(10, dtype=np.float32)}
+    eng = RoundEngine(body, chunk=4)
+    full_state, full_meta = eng.run(jnp.float32(0.0), ops)
+
+    # Carry at round 4 is sum(0..3) = 6; resuming there must replay the
+    # suffix bit-for-bit and trace NOTHING new (same segment lengths).
+    traces = eng.trace_count
+    res_state, res_meta = eng.run(jnp.float32(6.0), ops, start=4)
+    assert float(res_state) == float(full_state)
+    np.testing.assert_array_equal(res_meta["c"], full_meta["c"][4:])
+    assert eng.trace_count == traces
+
+    # The loop path honors the same cursor.
+    loop_state, loop_meta = eng.run_loop(jnp.float32(6.0), ops, start=4)
+    assert float(loop_state) == float(full_state)
+    np.testing.assert_array_equal(loop_meta["c"], full_meta["c"][4:])
+
+    # start == rounds: nothing left; the carry passes through, no metrics.
+    done_state, done_meta = eng.run(jnp.float32(45.0), ops, start=10)
+    assert float(done_state) == 45.0 and done_meta is None
+
+    # A cursor off the segment grid is a plan mismatch, not silent drift.
+    with pytest.raises(ValueError, match="not a segment boundary"):
+        eng.run(jnp.float32(0.0), ops, start=3)
+    with pytest.raises(ValueError, match="not a segment boundary"):
+        eng.run_loop(jnp.float32(0.0), ops, start=5)
+
+
+def test_engine_on_segment_fires_after_boundary_with_device_metrics():
+    order = []
+
+    def body(c, op):
+        return c + op["x"], {"c": c}
+
+    eng = RoundEngine(body, chunk=3)
+    eng.run(jnp.float32(0.0), {"x": np.ones(6, np.float32)},
+            on_boundary=lambda e, c: order.append(("boundary", e)),
+            on_segment=lambda s, e, c, m: order.append(
+                ("segment", s, e, np.asarray(m["c"]).shape)))
+    assert order == [("boundary", 3), ("segment", 0, 3, (3,)),
+                     ("boundary", 6), ("segment", 3, 6, (3,))]
 
 
 def test_engine_boundary_hook_sees_carry_state():
