@@ -1,0 +1,192 @@
+"""Breakdown-frontier + quarantine-guard contracts for the perf gate.
+
+Four facts feed ``scripts/perf_gate.py --breakdown`` via
+``BENCH_breakdown.json``:
+
+* the EMPIRICAL COLLAPSE FRONTIER of every NNM-composed rule in the zoo
+  (cwtm / krum / gm / autogm) under the default attack grid (sf, alie,
+  foe, label-flip poisoning) must not REGRESS: each ``frontier_*`` key is
+  gated ``current >= baseline`` — a defense change that makes any rule
+  collapse at a smaller f than before fails CI.  The undefended
+  ``average`` control rows ride along informationally (they prove the
+  harness can SEE a collapse — foe breaks plain averaging at f=1);
+* ``compile_count_breakdown`` — the whole grid rides the fleet engine as
+  a handful of shape buckets (f / attack / eta / poison rate are traced
+  per-lane operands), so the sweep's compile count is a hard ceiling;
+* ``guard_overhead_ratio`` — the in-round quarantine guard
+  (repro.robustness.guard) on a compute-dominated scanned fed run keeps
+  >= 0.9x the unguarded rounds/sec (median of interleaved per-rep
+  ratios, machine-normalized), with one compile per flavor;
+* ``quarantine_recovery_ok`` / ``guard_noop_parity_ok`` — a run with f
+  workers emitting NaN completes with finite losses and the HealthTaps
+  quarantine count pinned at m_byz every round; and when no fault fires
+  the guarded run reproduces the unguarded run bit-for-bit.
+"""
+import argparse
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, median as _median, \
+    timed_interleaved as _timed_interleaved
+from repro.core import AggregatorSpec
+from repro.fed import ClientConfig, FedConfig, FedServer, constant_attack, \
+    run_rounds
+from repro.optim import sgd
+from repro.optim.schedules import constant
+from repro.robustness import run_breakdown, frontier_table
+from repro.robustness.guard import QuarantineConfig
+
+#: The gated rule rows (the NNM-composed zoo); the undefended average
+#: control stays informational — its frontier is ALLOWED to move.
+GATED_RULES = ("cwtm", "krum", "gm", "autogm")
+
+
+def _frontier_keys(report: dict) -> dict:
+    """Flatten the sweep report into the JSON's ``frontier_*`` keys."""
+    out = {}
+    for cell, front in report["frontier"].items():
+        rk, att = cell.split("|", 1)
+        pre, rule = rk.split("-", 1)
+        out[f"frontier_{rule}_{att}"] = int(front)
+    return out
+
+
+def _fed_pair(*, guard, attack="alie", eta=3.0, n=12, f=3, d=256, seed=0):
+    """A scanned fed run closure over the quadratic-centers toy (same
+    task family as bench_convergence), parameterized on the guard."""
+    rng = np.random.default_rng(seed)
+    centers = jnp.asarray(rng.normal(size=(n, d)), jnp.float32)
+
+    def loss_fn(params, batch):
+        c = centers[batch["idx"][0]]
+        return 0.5 * jnp.sum((params["theta"] - c) ** 2), {}
+
+    def batch_fn(cohort, n_flip, rng):
+        return {"idx": np.asarray(cohort)[:, None, None]}
+
+    cfg = FedConfig(n_clients=n, clients_per_round=n, f=f,
+                    agg=AggregatorSpec(rule="cwtm", f=f, pre="nnm"),
+                    client=ClientConfig(algorithm="dshb", beta=0.9),
+                    guard=guard)
+    server = FedServer(loss_fn, sgd(clip=1.0), cfg, constant(0.1))
+    params = {"theta": jnp.zeros((d,), jnp.float32)}
+    sched = constant_attack(attack, eta)
+
+    def run(rounds):
+        state = server.init_state(params)
+        state, hist = run_rounds(server, state, batch_fn, rounds,
+                                 schedule=sched, seed=seed, engine="scan")
+        jax.block_until_ready(jax.tree_util.tree_leaves(state)[0])
+        return state, hist
+
+    return run, server
+
+
+def guard_smoke(*, rounds: int = 100) -> dict:
+    """Overhead ratio + recovery + no-op parity for the quarantine guard."""
+    run_off, srv_off = _fed_pair(guard=None)
+    run_on, srv_on = _fed_pair(guard=QuarantineConfig())
+    t_off, t_on = _timed_interleaved([lambda: run_off(rounds),
+                                      lambda: run_on(rounds)])
+
+    # No-fault parity: alie emits finite, non-exploded rows, so the guard
+    # must be a bit-for-bit no-op (the where-select keeps original rows).
+    st_off, h_off = run_off(rounds)
+    st_on, h_on = run_on(rounds)
+    parity = (np.array_equal(np.asarray(st_off["params"]["theta"]),
+                             np.asarray(st_on["params"]["theta"]))
+              and h_off.loss == h_on.loss)
+
+    # Recovery: f workers emit NaN every round; the guarded run must stay
+    # finite and the taps must count exactly m_byz quarantined rows.
+    n, f = 10, 2
+    rng = np.random.default_rng(0)
+    centers = jnp.asarray(rng.normal(size=(n, 16)), jnp.float32)
+
+    def loss_fn(params, batch):
+        c = centers[batch["idx"][0]]
+        return 0.5 * jnp.sum((params["theta"] - c) ** 2), {}
+
+    def batch_fn(cohort, n_flip, rng):
+        return {"idx": np.asarray(cohort)[:, None, None]}
+
+    cfg = FedConfig(n_clients=n, clients_per_round=n, f=f,
+                    agg=AggregatorSpec(rule="cwtm", f=f, pre="nnm"),
+                    client=ClientConfig(algorithm="dshb", beta=0.9),
+                    guard=QuarantineConfig(), taps=True)
+    server = FedServer(loss_fn, sgd(clip=1.0), cfg, constant(0.1))
+    state = server.init_state({"theta": jnp.zeros((16,), jnp.float32)})
+    state, hist = run_rounds(server, state, batch_fn, 20,
+                             schedule=constant_attack("nan"), seed=0,
+                             engine="scan")
+    counts = [int(t["quarantined_count"]) for t in hist.taps]
+    recovery = (all(np.isfinite(hist.loss))
+                and np.all(np.isfinite(np.asarray(state["params"]["theta"])))
+                and counts == [f] * 20)
+
+    out = {
+        "guard_rounds_per_s_on": rounds / _median(t_on),
+        "guard_rounds_per_s_off": rounds / _median(t_off),
+        "guard_overhead_ratio": _median([o / t
+                                         for o, t in zip(t_off, t_on)]),
+        "compile_count_guard_on":
+            srv_on.last_scan_report["total_trace_count"],
+        "compile_count_guard_off":
+            srv_off.last_scan_report["total_trace_count"],
+        "guard_noop_parity_ok": int(parity),
+        "quarantine_recovery_ok": int(recovery),
+    }
+    emit("guard_on", _median(t_on) / rounds * 1e6,
+         f"rounds_per_s={out['guard_rounds_per_s_on']:.1f}")
+    emit("guard_off", _median(t_off) / rounds * 1e6,
+         f"rounds_per_s={out['guard_rounds_per_s_off']:.1f}")
+    emit("guard_ratio", 0.0,
+         f"x{out['guard_overhead_ratio']:.3f},parity="
+         f"{out['guard_noop_parity_ok']},recovery="
+         f"{out['quarantine_recovery_ok']}")
+    return out
+
+
+def breakdown_smoke(json_out: str | None = None, *,
+                    rounds: int = 10) -> dict:
+    report = run_breakdown(rounds=rounds)
+    print(frontier_table(report))
+
+    out = {"rounds": rounds, "n_clients": report["n_clients"]}
+    out.update(_frontier_keys(report))
+    out["compile_count_breakdown"] = report["trace_count"]
+    out["breakdown_buckets"] = report["n_buckets"]
+    for key, front in sorted(report["frontier"].items()):
+        rk = key.split("|", 1)[0]
+        emit(f"frontier_{key}", 0.0,
+             f"emp={front},theory={report['predicted'][rk]}")
+    emit("breakdown_compiles", 0.0,
+         f"traces={report['trace_count']},buckets={report['n_buckets']}")
+
+    out.update(guard_smoke())
+
+    if json_out:
+        with open(json_out, "w") as fh:
+            json.dump(out, fh, indent=2, sort_keys=True)
+        print(f"wrote {json_out}")
+    return out
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="frontier grid + guard contracts; writes --json-out")
+    ap.add_argument("--full", action="store_true",
+                    help="same grid at 3x the rounds (slower, sharper "
+                         "collapse separation)")
+    ap.add_argument("--json-out", default="BENCH_breakdown.json")
+    args = ap.parse_args()
+    breakdown_smoke(json_out=args.json_out,
+                    rounds=30 if args.full else 10)

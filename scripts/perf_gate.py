@@ -90,6 +90,23 @@ Resilience hard gates (``--resume``; from
 * ``resume_parity_ok``       >= 1 — a killed-then-resumed run reproduces
   the uninterrupted run bit-for-bit (params and loss history).
 
+Robustness hard gates (``--breakdown``; from
+``benchmarks/bench_breakdown.py --smoke``):
+
+* ``frontier_<rule>_<attack>`` >= baseline — the empirical collapse
+  frontier of each NNM-composed rule (cwtm/krum/gm/autogm x sf/alie/foe/
+  poison_lf) must never regress below the checked-in value (which sits
+  at the theoretical breakdown point ``(n-1)//2``);
+* ``compile_count_breakdown`` <= baseline — the whole rule x attack x f
+  grid rides the fleet as a fixed set of shape buckets;
+* ``guard_overhead_ratio``   >= 0.9 — the in-round quarantine guard
+  keeps at least 90% of the unguarded rounds/sec (absolute floor,
+  machine-normalized), one compile per flavor;
+* ``quarantine_recovery_ok`` >= 1 — f NaN-emitting workers: finite
+  losses, HealthTaps count pinned at m_byz every round;
+* ``guard_noop_parity_ok``   >= 1 — guard enabled but no fault firing is
+  bit-for-bit the unguarded run.
+
 Interpret-mode quarantine: Pallas timings measured off-TPU live under the
 JSON's ``"interpret"`` key and CANNOT be gated — any gated key found only
 there is a hard configuration error, so interpreter numbers can never
@@ -186,6 +203,23 @@ RESUME_GATES = (("resume_overhead_ratio", "min_0.9"),
                 ("snapshot_count_ok", "min_1"),
                 ("resume_parity_ok", "min_1"))
 
+#: robustness gates (BENCH_breakdown.json from bench_breakdown.py
+#: --smoke): the empirical breakdown frontier of every gated rule x
+#: attack cell must not regress ("min" — current >= baseline), the sweep
+#: must stay a fixed set of fleet compiles, and the quarantine guard must
+#: stay cheap, recover from NaN workers, and be a bitwise no-op when no
+#: fault fires.  The undefended average control rows are NOT gated.
+BREAKDOWN_GATES = tuple(
+    (f"frontier_{rule}_{att}", "min")
+    for rule in ("cwtm", "krum", "gm", "autogm")
+    for att in ("sf", "alie", "foe", "poison_lf")
+) + (("compile_count_breakdown", "max"),
+     ("guard_overhead_ratio", "min_0.9"),
+     ("compile_count_guard_on", "max"),
+     ("compile_count_guard_off", "max"),
+     ("quarantine_recovery_ok", "min_1"),
+     ("guard_noop_parity_ok", "min_1"))
+
 
 def _gated_value(doc: dict, key: str, path: str):
     """Fetch a gated key, refusing interpret-quarantined rows."""
@@ -226,8 +260,9 @@ def check_gate_table(gates, cur: dict, base: dict, cur_path: str,
                      failures: list) -> None:
     """Exact/absolute gates shared by the structural benchmark docs.
 
-    Directions: ``"max"`` — current <= baseline (exact); ``"min_N"`` —
-    current >= N regardless of baseline (absolute floor).
+    Directions: ``"max"`` — current <= baseline (exact); ``"min"`` —
+    current >= baseline (exact); ``"min_N"`` — current >= N regardless of
+    baseline (absolute floor).
     """
     for key, direction in gates:
         val = _gated_value(cur, key, cur_path)
@@ -235,6 +270,10 @@ def check_gate_table(gates, cur: dict, base: dict, cur_path: str,
             ref = _gated_value(base, key, "baseline")
             ok = val <= ref
             detail = f"(baseline {ref}, exact)"
+        elif direction == "min":
+            ref = _gated_value(base, key, "baseline")
+            ok = val >= ref
+            detail = f"(baseline {ref}, must not regress)"
         else:  # min_N
             floor = float(direction.removeprefix("min_"))
             ok = val >= floor
@@ -279,15 +318,19 @@ def main() -> int:
                     help="JSON from bench_convergence.py --resume-smoke")
     ap.add_argument("--resume-baseline",
                     default="benchmarks/baselines/BENCH_resume.json")
+    ap.add_argument("--breakdown", default=None,
+                    help="JSON from bench_breakdown.py --smoke")
+    ap.add_argument("--breakdown-baseline",
+                    default="benchmarks/baselines/BENCH_breakdown.json")
     args = ap.parse_args()
 
     if args.current is None and args.agg_cost is None \
             and args.dist_agg is None and args.rounds is None \
             and args.obs is None and args.fleet_latency is None \
-            and args.resume is None:
+            and args.resume is None and args.breakdown is None:
         print("perf gate: nothing to check (pass a fleet JSON, --agg-cost, "
-              "--dist-agg, --rounds, --obs, --fleet-latency and/or "
-              "--resume)", file=sys.stderr)
+              "--dist-agg, --rounds, --obs, --fleet-latency, --resume "
+              "and/or --breakdown)", file=sys.stderr)
         return 2
 
     failures: list = []
@@ -344,6 +387,14 @@ def main() -> int:
             resume_base = json.load(fh)
         check_gate_table(RESUME_GATES, resume_cur, resume_base,
                          args.resume, failures)
+
+    if args.breakdown is not None:
+        with open(args.breakdown) as fh:
+            bd_cur = json.load(fh)
+        with open(args.breakdown_baseline) as fh:
+            bd_base = json.load(fh)
+        check_gate_table(BREAKDOWN_GATES, bd_cur, bd_base,
+                         args.breakdown, failures)
 
     if failures:
         print(f"perf gate FAILED: {', '.join(failures)} regressed",

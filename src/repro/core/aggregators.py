@@ -83,6 +83,19 @@ def geometric_median(x: Array, f: int = 0, iters: int = 8,
     return _gram_rule("gm", x, f, gm_iters=iters, gm_eps=eps)
 
 
+def autogm(x: Array, f: int = 0, lamb: float = 1.0, iters: int = 4,
+           gm_iters: int = 8, eps: float = 1e-8) -> Array:
+    """Adaptively-weighted geometric median (AutoGM).
+
+    Alternates a simplex-projected weight update with a weighted Weiszfeld
+    solve (see :func:`repro.core.gram.autogm_coeff`); ``lamb`` is the
+    scale-free regularization strength and ``iters`` the outer alternating
+    count.  Like GM, never reads f.
+    """
+    return _gram_rule("autogm", x, f, autogm_lamb=lamb, autogm_iters=iters,
+                      gm_iters=gm_iters, gm_eps=eps)
+
+
 def mda(x: Array, f: int) -> Array:
     return _gram_rule("mda", x, f)
 
@@ -92,6 +105,7 @@ RULES = {
     "krum": krum,
     "multikrum": multikrum,
     "gm": geometric_median,
+    "autogm": autogm,
     "cwmed": cwmed,
     "cwtm": cwtm,
     "mda": mda,
@@ -127,4 +141,7 @@ def aggregate(x: Array, spec: AggregatorSpec, *, key: Array | None = None) -> Ar
     rule = spec.rule
     if rule == "gm":
         return geometric_median(x, f, iters=spec.gm_iters, eps=spec.gm_eps)
+    if rule == "autogm":
+        return autogm(x, f, lamb=spec.autogm_lamb, iters=spec.autogm_iters,
+                      gm_iters=spec.gm_iters, eps=spec.gm_eps)
     return get_rule(rule)(x, f)

@@ -29,9 +29,35 @@ Array = jax.Array
 _ETA_GRID = (0.05, 0.1, 0.2, 0.5, 0.8, 1.0, 1.5, 2.0, 3.0, 5.0, 10.0, 20.0)
 
 
+def _finite_row_mask(h: Array) -> Array:
+    """(n,) bool: rows of the (n, ...) stack whose entries are all finite."""
+    return jnp.isfinite(h.reshape(h.shape[0], -1)).all(axis=1)
+
+
+def _finite_moments(h: Array) -> tuple[Array, Array]:
+    """Coordinate-wise (mean, std) of an fp32 stack, excluding non-finite
+    rows.
+
+    A faulty worker emitting nan/inf (the `nan`/`inf` families, fp
+    overflow, bad data) must not poison the moment-based attacks' own
+    statistics — an ALIE row of nan is trivially filtered by any robust
+    rule, which would silently neuter the attack.  When every row is
+    finite, the plain mean/std path is selected, bitwise unchanged.
+    """
+    finite = _finite_row_mask(h)
+    sel = finite.reshape((-1,) + (1,) * (h.ndim - 1))
+    cnt = jnp.maximum(finite.astype(jnp.float32).sum(), 1.0)
+    hz = jnp.where(sel, h, 0.0)
+    mean_m = hz.sum(axis=0) / cnt
+    var_m = jnp.where(sel, (h - mean_m) ** 2, 0.0).sum(axis=0) / cnt
+    all_finite = finite.all()
+    mean = jnp.where(all_finite, h.mean(axis=0), mean_m)
+    std = jnp.where(all_finite, h.std(axis=0), jnp.sqrt(var_m))
+    return mean, std
+
+
 def _mean_std(honest: Array) -> tuple[Array, Array]:
-    h = honest.astype(jnp.float32)
-    return h.mean(axis=0), h.std(axis=0)
+    return _finite_moments(honest.astype(jnp.float32))
 
 
 def alie(honest: Array, f: int, eta: float = 1.0, **_) -> Array:
@@ -106,6 +132,23 @@ def foe_opt(honest: Array, f: int, *, agg_closure: Callable, **kw) -> Array:
     return _optimized(foe, honest, f, agg_closure, **kw)
 
 
+def nan_rows(honest: Array, f: int, **_) -> Array:
+    """Non-finite fault family: f rows of NaN.
+
+    Models a crashed/faulty worker (bad data, fp exceptions) rather than an
+    optimizing adversary — the oracle the in-round quarantine guard
+    (:mod:`repro.robustness.guard`) is tested against.
+    """
+    byz = jnp.full(honest.shape[1:], jnp.nan, jnp.float32)
+    return jnp.broadcast_to(byz, (f,) + byz.shape)
+
+
+def inf_rows(honest: Array, f: int, **_) -> Array:
+    """f rows of +inf (fp overflow fault)."""
+    byz = jnp.full(honest.shape[1:], jnp.inf, jnp.float32)
+    return jnp.broadcast_to(byz, (f,) + byz.shape)
+
+
 ATTACKS: dict[str, Callable] = {
     "alie": alie,
     "foe": foe,
@@ -113,6 +156,8 @@ ATTACKS: dict[str, Callable] = {
     "mimic": mimic,
     "alie_opt": alie_opt,
     "foe_opt": foe_opt,
+    "nan": nan_rows,
+    "inf": inf_rows,
 }
 
 
@@ -177,6 +222,10 @@ def apply_attack_tree(name: str, tree, f: int, *, eta: float | None = None,
             return out.astype(leaf.dtype)
         return jax.tree_util.tree_map(go, tree)
 
+    if name in ("nan", "inf"):
+        fill = jnp.nan if name == "nan" else jnp.inf
+        return leafwise(lambda h: jnp.full(h.shape[1:], fill, jnp.float32))
+
     if name in ("alie", "foe", "sf", "alie_opt", "foe_opt"):
         base = name.split("_")[0]
         if name.endswith("_opt"):
@@ -184,11 +233,14 @@ def apply_attack_tree(name: str, tree, f: int, *, eta: float | None = None,
             best_eta = _tree_eta_search(base, tree, nh, f, agg_closure, eta_grid)
         else:
             best_eta = eta if eta is not None else (1.0 if base == "alie" else 2.0)
+        # _finite_moments (not plain mean/std): an honest row of nan/inf
+        # must not leak into the Byzantine vector — see its docstring.
         if base == "alie":
-            mk = lambda h: h.mean(0) + best_eta * h.std(0)
+            mk = lambda h: (lambda ms: ms[0] + best_eta * ms[1])(
+                _finite_moments(h))
         else:  # foe / sf
             e = 2.0 if name == "sf" else best_eta
-            mk = lambda h: (1.0 - e) * h.mean(0)
+            mk = lambda h: (1.0 - e) * _finite_moments(h)[0]
         return leafwise(mk)
 
     if name == "mimic":
@@ -268,8 +320,9 @@ def apply_attack_scan(families: tuple[str, ...], attack_id: Array, tree,
 # ---------------------------------------------------------------------------
 
 #: switch branch order of :func:`apply_attack_dyn`; "lf" and "none" share
-#: the passthrough branch (LF acts through the data pipeline).
-DYN_ATTACK_FAMILIES = ("none", "alie", "foe", "sf", "mimic")
+#: the passthrough branch (LF acts through the data pipeline).  APPEND-only:
+#: the indices are jit-cache and fleet-operand material.
+DYN_ATTACK_FAMILIES = ("none", "alie", "foe", "sf", "mimic", "nan", "inf")
 
 
 def dyn_attack_id(name: str) -> int:
@@ -287,14 +340,23 @@ def dyn_attack_id(name: str) -> int:
 
 
 def _masked_moments(tree, w, nh: Array):
-    """Per-leaf (mean, std) over the first n-f rows, traced nh = n - f."""
+    """Per-leaf (mean, std) over the first n-f rows, traced nh = n - f.
+
+    Rows are excluded via `jnp.where` row selection rather than
+    multiplication (0.0 * nan = nan), and honest rows containing non-finite
+    entries are dropped from the statistics with the count adjusted — a
+    faulty worker must not propagate nan/inf through the moment-based
+    families (see `_finite_moments`).  For all-finite stacks the selected
+    count equals nh exactly, so the masked arithmetic is unchanged.
+    """
     stats = []
     for leaf in jax.tree_util.tree_leaves(tree):
         h = leaf.astype(jnp.float32)
-        wl = w.reshape((-1,) + (1,) * (h.ndim - 1))
-        cnt = jnp.maximum(nh.astype(jnp.float32), 1.0)
-        mean = (h * wl).sum(0) / cnt
-        var = (wl * (h - mean) ** 2).sum(0) / cnt
+        w_eff = w * _finite_row_mask(h).astype(jnp.float32)
+        sel = (w_eff > 0).reshape((-1,) + (1,) * (h.ndim - 1))
+        cnt = jnp.maximum(w_eff.sum(), 1.0)
+        mean = jnp.where(sel, h, 0.0).sum(0) / cnt
+        var = jnp.where(sel, (h - mean) ** 2, 0.0).sum(0) / cnt
         stats.append((mean, jnp.sqrt(var)))
     return stats
 
@@ -345,8 +407,11 @@ def apply_attack_dyn(attack_id: Array, tree, f: Array, *, eta: Array):
         centered = []
         for leaf, (mean, _) in zip(leaves, stats):
             h = leaf.astype(jnp.float32)
-            wl = w.reshape((-1,) + (1,) * (h.ndim - 1))
-            centered.append((h - mean) * wl)
+            # where-select (not multiply: 0 * nan = nan) and drop non-finite
+            # honest rows, so a faulty row cannot poison the target scores.
+            keep = (w * _finite_row_mask(h).astype(jnp.float32)) > 0
+            sel = keep.reshape((-1,) + (1,) * (h.ndim - 1))
+            centered.append(jnp.where(sel, h - mean, 0.0))
         c = robust_lib.tree_gram(jax.tree_util.tree_unflatten(treedef, centered))
         # Same diag(c) power-iteration seed as the static path (byz rows of
         # the masked centered gram are zero, so their scores stay zero).
@@ -355,8 +420,17 @@ def apply_attack_dyn(attack_id: Array, tree, f: Array, *, eta: Array):
         target = jnp.argmax(scores)
         return from_byz([leaf.astype(jnp.float32)[target] for leaf in leaves])
 
+    def br_nan():
+        return from_byz([jnp.full(leaf.shape[1:], jnp.nan, jnp.float32)
+                         for leaf in leaves])
+
+    def br_inf():
+        return from_byz([jnp.full(leaf.shape[1:], jnp.inf, jnp.float32)
+                         for leaf in leaves])
+
     byz = jax.lax.switch(attack_id,
-                         (br_passthrough, br_alie, br_foe, br_sf, br_mimic))
+                         (br_passthrough, br_alie, br_foe, br_sf, br_mimic,
+                          br_nan, br_inf))
     byz_rows = row >= nh
 
     out_leaves = []

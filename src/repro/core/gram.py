@@ -110,6 +110,72 @@ def gm_coeff(g: Array, f: int, iters: int = 8, eps: float = 1e-8) -> Array:
     return w
 
 
+def project_simplex(v: Array) -> Array:
+    """Euclidean projection of v onto the probability simplex.
+
+    Sort-based algorithm of Duchi et al. (2008) with static shapes: the
+    support size rho is found as the count of active conditions (monotone
+    in the sorted order), so the whole projection is jit- and vmap-safe.
+    """
+    n = v.shape[0]
+    u = jnp.sort(v)[::-1]
+    css = jnp.cumsum(u)
+    idx = jnp.arange(1, n + 1, dtype=jnp.float32)
+    cond = u + (1.0 - css) / idx > 0.0
+    # cond is True on a prefix (u sorted descending), and always at idx=1.
+    rho = jnp.maximum(cond.astype(jnp.int32).sum() - 1, 0)
+    theta = (1.0 - jnp.take(css, rho)) / (rho + 1).astype(jnp.float32)
+    return jnp.maximum(v + theta, 0.0)
+
+
+def autogm_coeff(g: Array, f, *, lamb: float = 1.0, outer_iters: int = 4,
+                 gm_iters: int = 8, gm_eps: float = 1e-8) -> Array:
+    """Adaptively-weighted geometric median (AutoGM), in gram space.
+
+    Alternating minimization of
+
+        sum_i w_i ||z - x_i||  +  lamb' ||w||^2     over  w in simplex, z
+
+    where the z-step is a weighted Weiszfeld solve (distances from G, as in
+    :func:`gm_coeff`) and the w-step is the closed-form simplex projection
+    of -d / (2 lamb').  ``lamb`` is expressed in units of the mean distance
+    to the uniform-weight GM, making the weight solve invariant to gradient
+    scale; lamb -> inf recovers plain GM, lamb -> 0 concentrates all weight
+    on the nearest point.  Everything is fixed-iteration ``lax.scan`` math
+    on the replicated (n, n) Gram matrix, so the rule runs unchanged inside
+    scanned rounds, under vmap (fleet lanes), and with a traced f — which,
+    like GM, it never reads.
+    """
+    del f  # AutoGM adapts weights from distances; kept for uniformity.
+    n = g.shape[0]
+    diag = jnp.diagonal(g)
+
+    def dists(c):
+        gc = g @ c
+        quad = c @ gc
+        return jnp.sqrt(jnp.maximum(diag - 2.0 * gc + quad, 0.0) + gm_eps)
+
+    def weiszfeld(w, c0):
+        def step(c, _):
+            inv = w / dists(c)
+            return inv / jnp.maximum(inv.sum(), gm_eps), None
+        c, _ = jax.lax.scan(step, c0, None, length=gm_iters)
+        return c
+
+    uniform = jnp.full((n,), 1.0 / n, dtype=jnp.float32)
+    c = weiszfeld(uniform, uniform)
+    lamb_eff = jnp.maximum(jnp.float32(lamb) * dists(c).mean(),
+                           jnp.float32(gm_eps))
+
+    def outer(carry, _):
+        _, c = carry
+        w = project_simplex(-dists(c) / (2.0 * lamb_eff))
+        return (w, weiszfeld(w, c)), None
+
+    (_, c), _ = jax.lax.scan(outer, (uniform, c), None, length=outer_iters)
+    return c
+
+
 # ---------------------------------------------------------------------------
 # MDA: minimum-diameter averaging.
 # ---------------------------------------------------------------------------
@@ -154,18 +220,22 @@ def mda_coeff(d2: Array, f: int) -> Array:
 
 
 def coeff_for_rule(rule: str, g: Array, f: int, *, gm_iters: int = 8,
-                   gm_eps: float = 1e-8) -> Array:
+                   gm_eps: float = 1e-8, autogm_lamb: float = 1.0,
+                   autogm_iters: int = 4) -> Array:
     """Dispatch: Gram matrix -> linear-combination coefficients."""
     n = g.shape[0]
     if rule == "average":
         return jnp.full((n,), 1.0 / n, dtype=jnp.float32)
+    if rule == "gm":
+        return gm_coeff(g, f, iters=gm_iters, eps=gm_eps)
+    if rule == "autogm":
+        return autogm_coeff(g, f, lamb=autogm_lamb, outer_iters=autogm_iters,
+                            gm_iters=gm_iters, gm_eps=gm_eps)
     d2 = pdist_sq_from_gram(g)
     if rule == "krum":
         return krum_coeff(d2, f)
     if rule == "multikrum":
         return multikrum_coeff(d2, f)
-    if rule == "gm":
-        return gm_coeff(g, f, iters=gm_iters, eps=gm_eps)
     if rule == "mda":
         return mda_coeff(d2, f)
     raise ValueError(f"{rule!r} is not a gram-space rule")
@@ -221,17 +291,22 @@ def multikrum_coeff_dyn(d2: Array, f: Array) -> Array:
 
 
 def coeff_for_rule_dyn(rule: str, g: Array, f: Array, *, gm_iters: int = 8,
-                       gm_eps: float = 1e-8) -> Array:
+                       gm_eps: float = 1e-8, autogm_lamb: float = 1.0,
+                       autogm_iters: int = 4) -> Array:
     """`coeff_for_rule` with a traced f (rule itself stays static).
 
     MDA is excluded: its exact form enumerates (n-f)-subsets, whose count is
-    shape-level and cannot be traced.
+    shape-level and cannot be traced.  GM and AutoGM never read f, so their
+    static solvers serve the dynamic path directly.
     """
     n = g.shape[0]
     if rule == "average":
         return jnp.full((n,), 1.0 / n, dtype=jnp.float32)
     if rule == "gm":
         return gm_coeff(g, 0, iters=gm_iters, eps=gm_eps)
+    if rule == "autogm":
+        return autogm_coeff(g, 0, lamb=autogm_lamb, outer_iters=autogm_iters,
+                            gm_iters=gm_iters, gm_eps=gm_eps)
     d2 = pdist_sq_from_gram(g)
     if rule == "krum":
         return krum_coeff_dyn(d2, f)

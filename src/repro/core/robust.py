@@ -219,12 +219,24 @@ def _aggregate_flat(work: PyTree, spec: AggregatorSpec, f, *,
         g = gramlib.mixed_gram(g, mix_matrix)
 
     if spec.rule in GRAM_RULES:
+        if spec.rule == "autogm":
+            # The gram and combine stages still run the blocked kernels;
+            # only the adaptive-weight solve itself (replicated O(n^2)
+            # alternating Weiszfeld + simplex projection on G) has no
+            # kernel form.  Recorded so a pallas-requested autogm round is
+            # never silently partial.
+            kdispatch.record_decision(
+                "autogm_coeff", backend, "xla",
+                "autogm adaptive-weight solve is replicated gram-space "
+                "math with no kernel form")
         if dyn:
             coeff = gramlib.coeff_for_rule_dyn(
-                spec.rule, g, f, gm_iters=spec.gm_iters, gm_eps=spec.gm_eps)
+                spec.rule, g, f, gm_iters=spec.gm_iters, gm_eps=spec.gm_eps,
+                autogm_lamb=spec.autogm_lamb, autogm_iters=spec.autogm_iters)
         else:
             coeff = gramlib.coeff_for_rule(
-                spec.rule, g, f, gm_iters=spec.gm_iters, gm_eps=spec.gm_eps)
+                spec.rule, g, f, gm_iters=spec.gm_iters, gm_eps=spec.gm_eps,
+                autogm_lamb=spec.autogm_lamb, autogm_iters=spec.autogm_iters)
         if mix_matrix is not None:
             coeff = coeff @ mix_matrix   # R = c^T (M X) = (c^T M) X
         vec = kdispatch.dispatch_combine(flat, coeff, backend=backend,
@@ -347,7 +359,10 @@ def robust_aggregate(tree: PyTree, spec: AggregatorSpec, *,
 
     if spec.rule in GRAM_RULES:
         coeff = gramlib.coeff_for_rule(spec.rule, g, f,
-                                       gm_iters=spec.gm_iters, gm_eps=spec.gm_eps)
+                                       gm_iters=spec.gm_iters,
+                                       gm_eps=spec.gm_eps,
+                                       autogm_lamb=spec.autogm_lamb,
+                                       autogm_iters=spec.autogm_iters)
         if mix_matrix is not None:
             coeff = coeff @ mix_matrix   # R = c^T (M X) = (c^T M) X
         out = tree_combine(work, coeff)
@@ -483,7 +498,9 @@ def robust_aggregate_dyn(tree: PyTree, spec: AggregatorSpec, f: Array, *,
     if spec.rule in GRAM_RULES:
         coeff = gramlib.coeff_for_rule_dyn(spec.rule, g, f,
                                            gm_iters=spec.gm_iters,
-                                           gm_eps=spec.gm_eps)
+                                           gm_eps=spec.gm_eps,
+                                           autogm_lamb=spec.autogm_lamb,
+                                           autogm_iters=spec.autogm_iters)
         if mix_matrix is not None:
             coeff = coeff @ mix_matrix
         return tree_combine(work, coeff)

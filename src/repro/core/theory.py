@@ -35,6 +35,12 @@ def _kappa_pos(rule: str, n: int, f: int) -> float:
     if rule in ("gm", "cwmed"):
         # Prop. 4/5: 4 (1 + f/(n-2f))^2
         return 4.0 * (1.0 + r) ** 2
+    if rule == "autogm":
+        # AutoGM's stationary point is a weighted GM with simplex weights
+        # adapted toward inliers; its worst-case deviation is bounded by
+        # the uniform-weight GM coefficient (Prop. 4 surrogate), which is
+        # what the composed NNM∘AutoGM kappa-hat accounting uses.
+        return 4.0 * (1.0 + r) ** 2
     if rule == "average":
         return 0.0
     raise ValueError(f"no proved kappa for rule {rule!r}")
@@ -53,6 +59,62 @@ def nnm_kappa(base_kappa: float, n: int, f: int) -> float:
 def nnm_variance_factor(n: int, f: int) -> float:
     """Lemma 5: var(Y_S) + bias^2 <= [8f/(n-f)] var(X_S)."""
     return 8.0 * f / (n - f)
+
+
+def composed_kappa(rule: str, n: int, f: int, pre: str | None = None) -> float:
+    """Kappa of the composed pipeline pre∘rule.
+
+    Lemma 1 for ``pre="nnm"`` (covers every base rule with a proved kappa,
+    including the AutoGM surrogate); the bare Table 1 coefficient otherwise.
+    """
+    base = kappa(rule, n, f)
+    if pre in (None, "none"):
+        return base
+    if pre == "nnm":
+        return nnm_kappa(base, n, f)
+    raise ValueError(f"no composed kappa for pre-aggregation {pre!r}")
+
+
+#: Rules with a finite breakdown point under the paper's n > 2f adaptation.
+ROBUST_RULES = frozenset({"krum", "multikrum", "gm", "autogm", "cwmed",
+                          "cwtm", "mda", "meamed"})
+
+
+def max_tolerable_f(rule: str, n: int, *, pre: str | None = None) -> int:
+    """Largest Byzantine count f* the rule tolerates on n workers.
+
+    Every robust rule in this repo is adapted (paper Appendix 8.1) to keep
+    n - f rows and requires n > 2f, so f* = floor((n-1)/2) across the zoo;
+    NNM composes at the same f (Lemma 1), leaving f* unchanged.  Plain
+    averaging breaks down at a single Byzantine worker (f* = 0).
+    """
+    if pre not in (None, "none", "nnm", "bucketing"):
+        raise ValueError(f"unknown pre-aggregation {pre!r}")
+    if n < 1:
+        raise ValueError(f"need n >= 1, got n={n}")
+    if rule == "average":
+        return 0
+    if rule not in ROBUST_RULES:
+        raise ValueError(f"no breakdown point for rule {rule!r}")
+    return (n - 1) // 2
+
+
+def breakdown_point(rule: str, n: int, f: int = 0, *,
+                    pre: str | None = None) -> float:
+    """Theoretical breakdown point f*/n of ``rule`` on n workers.
+
+    The largest *fraction* of Byzantine workers under which
+    (f, kappa)-robustness still holds — the asymptote the empirical
+    collapse frontier (:mod:`repro.robustness.breakdown`) is swept toward.
+    ``f`` is the current operating budget and is validated against the
+    limit so misconfigured sweeps fail loudly.
+    """
+    fmax = max_tolerable_f(rule, n, pre=pre)
+    if not 0 <= f <= fmax:
+        raise ValueError(
+            f"f={f} outside [0, {fmax}] = tolerable range of {rule!r} "
+            f"(pre={pre!r}) on n={n} workers")
+    return fmax / n
 
 
 # ---------------------------------------------------------------------------

@@ -21,13 +21,18 @@ class AggregatorSpec:
     """Fully describes a robust aggregation pipeline.
 
     Attributes:
-      rule: base rule name ("average", "krum", "multikrum", "gm", "cwmed",
-        "cwtm", "mda", "meamed").
+      rule: base rule name ("average", "krum", "multikrum", "gm", "autogm",
+        "cwmed", "cwtm", "mda", "meamed").
       f: number of Byzantine workers tolerated (f < n/2).
       pre: optional pre-aggregation ("nnm", "bucketing", or None).
       bucket_size: Bucketing bucket size s (defaults to floor(n / 2f)).
-      gm_iters: Weiszfeld iteration count for GM.
+      gm_iters: Weiszfeld iteration count for GM (and AutoGM's inner solve).
       gm_eps: Weiszfeld smoothing epsilon.
+      autogm_lamb: AutoGM weight-regularization strength, in units of the
+        mean distance to the uniform-weight GM (scale-free; large values
+        recover plain GM, small values concentrate weight on inliers).
+      autogm_iters: AutoGM outer alternating iterations (each runs one
+        simplex-projected weight update plus a gm_iters Weiszfeld solve).
       backend: kernel backend for the aggregation hot path.  "xla" is the
         leaf-streamed jnp pipeline (GSPMD-friendly); "pallas" flattens the
         worker stack to one (n, D) buffer and runs the blocked gram /
@@ -48,6 +53,8 @@ class AggregatorSpec:
     bucket_size: Optional[int] = None
     gm_iters: int = 8
     gm_eps: float = 1e-8
+    autogm_lamb: float = 1.0
+    autogm_iters: int = 4
     backend: str = "auto"
     # --- beyond-paper performance options (EXPERIMENTS.md §Perf) ---
     # Transport dtype for the worker-axis all-gathers.  Distance ranks and
@@ -69,11 +76,13 @@ class AggregatorSpec:
 #: Rules whose output is a linear combination coeff @ x with coeff a pure
 #: function of the Gram matrix.  For these the distributed pipeline never
 #: materializes the mixed stack (see DESIGN.md §3).
-GRAM_RULES = frozenset({"average", "krum", "multikrum", "gm", "mda"})
+GRAM_RULES = frozenset({"average", "krum", "multikrum", "gm", "autogm",
+                        "mda"})
 
 #: Rules that operate coordinate-wise on the (optionally mixed) stack.
 COORDINATE_RULES = frozenset({"cwmed", "cwtm", "meamed"})
 
 ALL_RULES = tuple(sorted(GRAM_RULES | COORDINATE_RULES))
 
-ATTACKS = ("none", "alie", "foe", "sf", "lf", "mimic", "alie_opt", "foe_opt")
+ATTACKS = ("none", "alie", "foe", "sf", "lf", "mimic", "alie_opt", "foe_opt",
+           "nan", "inf")

@@ -17,6 +17,7 @@ from repro.fed.clients import (
     scatter_rows,
 )
 from repro.fed.metrics import FedHistory, kappa_hat
+from repro.fed.poison import POISON_KINDS, PoisonConfig, poison_batch
 from repro.fed.schedules import (
     AttackPhase, AttackSchedule, FixedByzantine, RotatingByzantine,
     constant_attack, ramp_eta, switch_attack,
@@ -34,6 +35,7 @@ __all__ = [
     "ClientConfig", "client_updates", "gather_rows", "init_client_momentum",
     "scatter_rows",
     "FedHistory", "kappa_hat",
+    "POISON_KINDS", "PoisonConfig", "poison_batch",
     "AttackPhase", "AttackSchedule", "FixedByzantine", "RotatingByzantine",
     "constant_attack", "ramp_eta", "switch_attack",
     "SCENARIOS", "Scenario", "build_scenario", "cohort_batch_fn",

@@ -1,0 +1,108 @@
+"""Data-poisoning threat models: corruption through the batch, not the
+gradient.
+
+Gradient Byzantine attacks (repro.core.attacks) let the adversary send an
+*arbitrary vector*.  Data poisoning is the strictly weaker — and
+practically more common — model of Farhadkhani et al. (PAPERS.md,
+arxiv 2405.00491): the adversary controls only its *training data* and
+then computes honestly, so the corrupted update stays inside the set of
+realizable gradients.  The repo's LF attack is already this shape (label
+flipping applied host-side in the data pipeline); this module generalizes
+it to configurable rates and feature perturbation, applied **device-side
+inside the compiled round** so the poison rate can be a traced per-lane
+fleet operand.
+
+Conventions shared with the pipeline's ``n_flip`` helper
+(:func:`repro.data.pipeline.sample_worker_batch`): poisoning hits the LAST
+``m_byz`` cohort rows (honest-first ordering), and label flipping maps
+``l -> n_classes - 1 - l`` — a ``rate=1.0`` label-flip poisoning run is
+bit-for-bit identical to scheduling the ``"lf"`` attack (tested).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+POISON_KINDS = ("labelflip", "feature")
+
+
+@dataclasses.dataclass(frozen=True)
+class PoisonConfig:
+    """Static description of a data-poisoning threat model.
+
+    Attributes:
+      kind: "labelflip" (labels ``l -> n_classes-1-l`` on poisoned
+        samples) or "feature" (additive Gaussian noise of scale
+        ``strength`` on poisoned samples' features).
+      rate: fraction of each Byzantine client's samples poisoned per
+        batch (0..1).  Traced on the fleet path (per-lane operand).
+      strength: feature-noise scale, "feature" only.  Traced on the fleet
+        path.
+      labels_key / features_key: batch dict keys the corruption targets.
+      n_classes: label-flip alphabet size.
+
+    ``kind`` and the key/class structure are jit-key and fleet
+    ``bucket_key`` material (they change the compiled round); ``rate`` and
+    ``strength`` are data.
+    """
+
+    kind: str = "labelflip"
+    rate: float = 1.0
+    strength: float = 1.0
+    labels_key: str = "y"
+    features_key: str = "x"
+    n_classes: int = 10
+
+    def __post_init__(self):
+        if self.kind not in POISON_KINDS:
+            raise ValueError(f"unknown poison kind {self.kind!r}; known: "
+                             f"{POISON_KINDS}")
+        if not 0.0 <= self.rate <= 1.0:
+            raise ValueError(f"rate must be in [0, 1], got {self.rate}")
+
+    def static_signature(self) -> tuple:
+        """The compile-relevant fields (fleet bucket_key material)."""
+        return (self.kind, self.labels_key, self.features_key,
+                self.n_classes)
+
+
+def static_signature(cfg: Optional[PoisonConfig]) -> Optional[tuple]:
+    """Bucket-key helper tolerating the no-poisoning case."""
+    return None if cfg is None else cfg.static_signature()
+
+
+def poison_batch(batch: dict, cfg: PoisonConfig, m_byz, *, rate, strength,
+                 key: Array) -> dict:
+    """Corrupt the last ``m_byz`` cohort rows of a (m, L, B, ...) batch.
+
+    ``m_byz`` / ``rate`` / ``strength`` may be traced (fleet lanes); the
+    deterministic "first floor(rate*B) positions of each slice" sample
+    selection keeps the poisoned-sample count exact without consuming rng
+    — with-replacement sampling already randomizes which examples land in
+    those positions.  ``key`` seeds the feature noise only ("labelflip"
+    consumes no randomness).
+    """
+    y = batch[cfg.labels_key]
+    m, _, b = y.shape[:3]
+    byz_row = jnp.arange(m) >= m - m_byz
+    sample_sel = jnp.arange(b) < rate * b
+    mask = byz_row[:, None, None] & sample_sel[None, None, :]
+
+    out = dict(batch)
+    if cfg.kind == "labelflip":
+        flipped = ((cfg.n_classes - 1) - y).astype(y.dtype)
+        out[cfg.labels_key] = jnp.where(mask, flipped, y)
+    else:  # feature
+        x = batch[cfg.features_key]
+        noise = jax.random.normal(key, x.shape, jnp.float32) \
+            * jnp.asarray(strength, jnp.float32)
+        fmask = mask.reshape(mask.shape + (1,) * (x.ndim - 3))
+        xf = x.astype(jnp.float32)
+        out[cfg.features_key] = jnp.where(fmask, xf + noise,
+                                          xf).astype(x.dtype)
+    return out

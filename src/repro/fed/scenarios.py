@@ -27,6 +27,7 @@ from repro.data.pipeline import (
     WorkerDataset, infer_n_classes, sample_worker_batch,
 )
 from repro.fed.clients import ClientConfig
+from repro.fed.poison import PoisonConfig
 from repro.fed.schedules import (
     AttackSchedule, FixedByzantine, RotatingByzantine, constant_attack,
     ramp_eta, switch_attack,
@@ -34,6 +35,7 @@ from repro.fed.schedules import (
 from repro.fed.server import FedConfig, FedServer, run_rounds
 from repro.optim import sgd
 from repro.optim.schedules import constant as constant_lr
+from repro.robustness.guard import QuarantineConfig
 
 
 @dataclasses.dataclass(frozen=True)
@@ -56,6 +58,12 @@ class Scenario:
     # adversary
     attack: AttackSchedule = constant_attack("none")
     rotate_byz_every: Optional[int] = None   # None => fixed last-f identity
+    #: data-poisoning threat model (repro.fed.poison): corruption through
+    #: the Byzantine clients' batches instead of (or on top of) a vector
+    #: attack — the strictly weaker adversary of Farhadkhani et al.
+    poison: Optional[PoisonConfig] = None
+    #: in-round gradient quarantine (repro.robustness.guard)
+    guard: Optional[QuarantineConfig] = None
     # data / optimization
     alpha: float = 0.1                       # Dirichlet heterogeneity
     batch_size: int = 16
@@ -70,7 +78,8 @@ class Scenario:
             agg=AggregatorSpec(rule=self.rule, f=self.f, pre=self.pre),
             client=ClientConfig(local_steps=self.local_steps,
                                 local_lr=self.local_lr,
-                                algorithm=self.algorithm, beta=self.beta))
+                                algorithm=self.algorithm, beta=self.beta),
+            poison=self.poison, guard=self.guard)
 
     def byz_identity(self):
         if self.rotate_byz_every is None:
@@ -240,6 +249,43 @@ register(Scenario(
     rule="cwtm", pre="nnm",
     attack=ramp_eta("foe", 0.5, 20.0, 40),
     alpha=0.3, rounds=60))
+
+register(Scenario(
+    name="poison_labelflip",
+    description="Data poisoning, label-flip flavor: Byzantine clients "
+                "train honestly on batches whose labels are flipped at a "
+                "60% rate device-side — corruption enters through the "
+                "data pipeline, the strictly weaker threat model of "
+                "Farhadkhani et al.",
+    n_clients=17, clients_per_round=17, f=4,
+    rule="cwtm", pre="nnm",
+    attack=constant_attack("none"),
+    poison=PoisonConfig(kind="labelflip", rate=0.6),
+    alpha=0.3, rounds=60))
+
+register(Scenario(
+    name="poison_feature",
+    description="Feature-perturbation poisoning: Gaussian noise at 2x "
+                "data scale on half of each Byzantine client's samples, "
+                "defended by NNM+AutoGM (adaptive weights downweight the "
+                "inflated-gradient clients).",
+    n_clients=17, clients_per_round=17, f=4,
+    rule="autogm", pre="nnm",
+    attack=constant_attack("none"),
+    poison=PoisonConfig(kind="feature", rate=0.5, strength=2.0),
+    alpha=0.3, rounds=60))
+
+register(Scenario(
+    name="faulty_nan_quarantine",
+    description="Non-adversarial fault model: f workers emit NaN updates "
+                "every round; the in-round quarantine guard replaces them "
+                "with the kept-row median so the run degrades gracefully "
+                "instead of destroying every round.",
+    n_clients=17, clients_per_round=17, f=4,
+    rule="cwtm", pre="nnm",
+    attack=constant_attack("nan"),
+    guard=QuarantineConfig(),
+    alpha=0.3, rounds=50))
 
 register(Scenario(
     name="labelflip_partial",

@@ -36,7 +36,9 @@ from repro.fed.clients import (
     scatter_rows,
 )
 from repro.fed.metrics import FedHistory
+from repro.fed.poison import PoisonConfig, poison_batch
 from repro.fed.schedules import AttackSchedule, FixedByzantine
+from repro.robustness.guard import QuarantineConfig, quarantine_stack
 from repro.optim import Optimizer, global_norm
 from repro.rounds import (
     RoundEngine, RoundOptions, iterated_split_keys, resolve_attack_operands,
@@ -61,6 +63,16 @@ class FedConfig:
     #: of the compiled round riding the metrics transfer.  Static — part
     #: of the round's jit key and the fleet bucket key.
     taps: bool = False
+    #: Data-poisoning threat model (repro.fed.poison): the last ``m_byz``
+    #: cohort rows' batches are corrupted DEVICE-side inside the compiled
+    #: round.  The config's kind/keys are jit- and bucket-key material;
+    #: rate/strength are per-lane traced operands on the fleet path.
+    poison: Optional[PoisonConfig] = None
+    #: In-round gradient quarantine (repro.robustness.guard): screen the
+    #: post-attack worker stack for non-finite / norm-exploded rows and
+    #: replace them with an inlier fallback before aggregation.  Static;
+    #: a bitwise no-op on rounds where no screen fires.
+    guard: Optional[QuarantineConfig] = None
 
     def __post_init__(self):
         if not 0 < self.clients_per_round <= self.n_clients:
@@ -72,6 +84,16 @@ class FedConfig:
 def cohort_breakdown(m: int) -> int:
     """Largest tolerable f for an m-row aggregation (f < m/2)."""
     return (m - 1) // 2
+
+
+def _emit_quarantine_event(surface: str, total: int, rounds: int) -> None:
+    """Host-side obs.runtime visibility for guard replacements (the
+    in-round counts are device metrics; this fires once per run/bucket,
+    only when something was actually quarantined)."""
+    if total:
+        from repro.obs import runtime as obs_runtime
+        obs_runtime.event("robustness.quarantine", surface=surface,
+                          total=total, rounds=rounds)
 
 
 def rescale_f(f_total: int, n_total: int, m: int) -> int:
@@ -158,17 +180,29 @@ class FedServer:
             cohort_mom = gather_rows(state["momentum"], idx) \
                 if has_momentum else []
 
+            # agg_key is split up front (pure — same value as splitting
+            # after the client pass) so the poison key can derive from it
+            # identically here and in the scan body.
+            agg_key, key = jax.random.split(key)
+            if cfg.poison is not None:
+                batch = poison_batch(
+                    batch, cfg.poison, m_byz,
+                    rate=jnp.float32(cfg.poison.rate),
+                    strength=jnp.float32(cfg.poison.strength),
+                    key=jax.random.fold_in(agg_key, 7))
             losses, stack, new_cohort_mom = client_updates(
                 loss_fn, params, cohort_mom, batch, ccfg)
             m = losses.shape[0]
             m_honest = m - m_byz
 
-            agg_key, key = jax.random.split(key)
             closure = (lambda t: robust_lib.robust_aggregate(
                 t, spec, key=agg_key)) if attack.endswith("_opt") else None
             attacked = apply_attack_tree(
                 attack, stack, m_byz,
                 eta=eta if use_eta else None, agg_closure=closure)
+            qinfo = None
+            if cfg.guard is not None:
+                attacked, qinfo = quarantine_stack(attacked, cfg.guard)
 
             tap_internals = {} if cfg.taps else None
             robust_dir = robust_lib.robust_aggregate(
@@ -192,6 +226,8 @@ class FedServer:
                 "lr": lr,
                 "direction_norm": global_norm(direction),
             }
+            if qinfo is not None:
+                metrics["quarantined_count"] = qinfo["count"]
             if cfg.track_kappa_hat:
                 metrics["kappa_hat"] = tree_kappa_hat(
                     robust_dir, attacked, m_honest, internals=tap_internals)
@@ -199,7 +235,8 @@ class FedServer:
                 from repro.obs import health_taps
                 metrics["taps"] = health_taps(
                     attacked, robust_dir, n_honest=m_honest, f=f_round,
-                    rule=spec.rule, pre=spec.pre, internals=tap_internals)
+                    rule=spec.rule, pre=spec.pre, internals=tap_internals,
+                    quarantine=qinfo)
             return new_state, metrics
 
         return jax.jit(round_fn)
@@ -243,17 +280,27 @@ class FedServer:
             cohort_mom = gather_rows(state["momentum"], op["idx"]) \
                 if has_momentum else []
 
+            batch = op["batch"]
+            agg_key = jax.random.split(op["key"])[0]
+            if cfg.poison is not None:
+                batch = poison_batch(
+                    batch, cfg.poison, m_byz,
+                    rate=jnp.float32(cfg.poison.rate),
+                    strength=jnp.float32(cfg.poison.strength),
+                    key=jax.random.fold_in(agg_key, 7))
             losses, stack, new_cohort_mom = client_updates(
-                loss_fn, params, cohort_mom, op["batch"], ccfg)
+                loss_fn, params, cohort_mom, batch, ccfg)
             m = losses.shape[0]
             m_honest = m - m_byz
 
-            agg_key = jax.random.split(op["key"])[0]
             closure = (lambda t: robust_lib.robust_aggregate(
                 t, spec, key=agg_key)) if needs_closure else None
             attacked = apply_attack_scan(families, op["attack_id"], stack,
                                          m_byz, eta=op["eta"],
                                          agg_closure=closure)
+            qinfo = None
+            if cfg.guard is not None:
+                attacked, qinfo = quarantine_stack(attacked, cfg.guard)
 
             tap_internals = {} if cfg.taps else None
             robust_dir = robust_lib.robust_aggregate(
@@ -274,6 +321,8 @@ class FedServer:
                 "lr": lr,
                 "direction_norm": global_norm(direction),
             }
+            if qinfo is not None:
+                metrics["quarantined_count"] = qinfo["count"]
             if cfg.track_kappa_hat:
                 metrics["kappa_hat"] = tree_kappa_hat(
                     robust_dir, attacked, m_honest, internals=tap_internals)
@@ -281,7 +330,8 @@ class FedServer:
                 from repro.obs import health_taps
                 metrics["taps"] = health_taps(
                     attacked, robust_dir, n_honest=m_honest, f=f_round,
-                    rule=spec.rule, pre=spec.pre, internals=tap_internals)
+                    rule=spec.rule, pre=spec.pre, internals=tap_internals,
+                    quarantine=qinfo)
             return new_state, metrics
 
         return body
@@ -359,6 +409,7 @@ def run_rounds(server: FedServer, state: dict, batch_fn: Callable,
 
     if engine == "loop":
         key = jax.random.PRNGKey(seed)
+        q_total = 0
         for r in range(rounds):
             attack, eta = schedule.resolve(r)
             cohort = sample_cohort(rng, cfg.n_clients, m,
@@ -370,9 +421,12 @@ def run_rounds(server: FedServer, state: dict, batch_fn: Callable,
             eta_arg = jnp.float32(0.0 if eta is None else eta)
             state, metrics = step(state, batch, jnp.asarray(cohort),
                                   eta_arg, sub)
+            if "quarantined_count" in metrics:
+                q_total += int(metrics["quarantined_count"])
             taps = metrics["taps"].to_dict() if "taps" in metrics else None
             hist.record(metrics, cohort=cohort, attack=attack, eta=eta,
                         m_byz=m_byz, f_round=m_byz, taps=taps)
+        _emit_quarantine_event("fed.loop", q_total, rounds)
         return state, hist
     if engine != "scan":
         raise ValueError(f"engine must be 'scan' or 'loop', got {engine!r}")
@@ -443,6 +497,10 @@ def run_rounds(server: FedServer, state: dict, batch_fn: Callable,
     from repro.resilience import concat_metrics, metric_columns
     cols = (dict(saved_cols) if metrics is None
             else concat_metrics(saved_cols, metric_columns(metrics)))
+    if "quarantined_count" in cols:
+        _emit_quarantine_event(
+            "fed.scan", int(np.asarray(cols["quarantined_count"]).sum()),
+            rounds)
     tap_cols = {k[len("taps."):]: v for k, v in cols.items()
                 if k.startswith("taps.")} or None
     for r in range(rounds):

@@ -29,8 +29,10 @@ import jax.numpy as jnp
 from repro.core import robust as robust_lib
 from repro.core.attacks import apply_attack_dyn
 from repro.fed.clients import client_updates, gather_rows, scatter_rows
+from repro.fed.poison import poison_batch
 from repro.fed.server import FedConfig
 from repro.optim import Optimizer, global_norm
+from repro.robustness.guard import quarantine_stack
 from repro.training.trainer import _split_info, kappa_hat_masked, merge_params
 
 Array = jax.Array
@@ -44,8 +46,11 @@ Array = jax.Array
 #:   local_lr   float32 — client local-SGD step size
 #:   lr         float32 — server learning rate this round
 #:   active     bool   — False freezes the lane's state this round
+#:   poison_rate     float32 — data-poisoning sample rate (0 = clean; the
+#:                             poison KIND is static bucket_key material)
+#:   poison_strength float32 — feature-poisoning noise scale
 LANE_OP_FIELDS = ("attack_id", "m_byz", "f_agg", "eta", "beta", "local_lr",
-                  "lr", "active")
+                  "lr", "active", "poison_rate", "poison_strength")
 
 
 def build_lane_round(loss_fn: Callable, optimizer: Optimizer,
@@ -68,6 +73,15 @@ def build_lane_round(loss_fn: Callable, optimizer: Optimizer,
         cohort_mom = gather_rows(state["momentum"], idx) \
             if has_momentum else []
 
+        if cfg.poison is not None:
+            # Same derived-key convention as repro.fed.server: rate and
+            # strength are traced per-lane operands, only the KIND is
+            # compile-relevant (bucket_key material in the runner).
+            batch = poison_batch(batch, cfg.poison, ops["m_byz"],
+                                 rate=ops["poison_rate"],
+                                 strength=ops["poison_strength"],
+                                 key=jax.random.fold_in(agg_key, 7))
+
         losses, stack, new_cohort_mom = client_updates(
             loss_fn, params, cohort_mom, batch, ccfg,
             beta=ops["beta"], local_lr=ops["local_lr"])
@@ -76,6 +90,9 @@ def build_lane_round(loss_fn: Callable, optimizer: Optimizer,
 
         attacked = apply_attack_dyn(ops["attack_id"], stack, ops["m_byz"],
                                     eta=ops["eta"])
+        qinfo = None
+        if cfg.guard is not None:
+            attacked, qinfo = quarantine_stack(attacked, cfg.guard)
         tap_internals = {} if cfg.taps else None
         robust_dir = robust_lib.robust_aggregate_dyn(attacked, spec,
                                                      ops["f_agg"],
@@ -99,6 +116,8 @@ def build_lane_round(loss_fn: Callable, optimizer: Optimizer,
             "lr": lr,
             "direction_norm": global_norm(direction),
         }
+        if qinfo is not None:
+            metrics["quarantined_count"] = qinfo["count"]
         if cfg.track_kappa_hat:
             metrics["kappa_hat"] = kappa_hat_masked(robust_dir, attacked,
                                                     m_honest,
@@ -110,7 +129,7 @@ def build_lane_round(loss_fn: Callable, optimizer: Optimizer,
             metrics["taps"] = health_taps(
                 attacked, robust_dir, n_honest=m_honest, f=ops["f_agg"],
                 rule=spec.rule, pre=spec.pre, dyn=True,
-                internals=tap_internals)
+                internals=tap_internals, quarantine=qinfo)
 
         # Finished lanes ride along bit-identically frozen.
         frozen = jax.tree_util.tree_map(

@@ -29,6 +29,7 @@ from repro.core.bucketing import default_bucket_size
 from repro.data import build_heterogeneous, make_classification
 from repro.fed.clients import init_client_momentum
 from repro.fed.metrics import FedHistory
+from repro.fed.poison import static_signature as poison_signature
 from repro.fed.schedules import AttackSchedule, FixedByzantine
 from repro.fed.scenarios import (
     Scenario, _mlp_eval, _mlp_init, _mlp_loss, cohort_batch_fn, get_scenario,
@@ -191,7 +192,12 @@ def plan_lane_round(job: FleetJob, r: int, rng: np.random.Generator
            "m_byz": m_byz, "f_agg": m_byz,
            "eta": eta if eta is not None else _ETA_DEFAULTS.get(attack, 0.0),
            "beta": cfg.client.beta, "local_lr": cfg.client.local_lr,
-           "lr": float(job.lr_fn(r)), "active": r < job.rounds}
+           "lr": float(job.lr_fn(r)), "active": r < job.rounds,
+           # Poison rate/strength are per-lane data; the poison KIND is
+           # static (bucket_key).  rate=0 on a poison-compiled bucket is a
+           # clean lane — that is what lets one bucket sweep a rate grid.
+           "poison_rate": cfg.poison.rate if cfg.poison else 0.0,
+           "poison_strength": cfg.poison.strength if cfg.poison else 0.0}
     return batch, cohort, ops, (attack, eta, cohort)
 
 
@@ -226,7 +232,7 @@ def lane_filler(job: FleetJob) -> tuple[Any, np.ndarray, dict]:
     idx = np.zeros((m,), np.int32)
     ops = {"attack_id": dyn_attack_id("none"), "m_byz": 0, "f_agg": 0,
            "eta": 0.0, "beta": 0.0, "local_lr": 0.0, "lr": 0.0,
-           "active": False}
+           "active": False, "poison_rate": 0.0, "poison_strength": 0.0}
     return batch, idx, ops
 
 
@@ -234,7 +240,8 @@ def lane_filler(job: FleetJob) -> tuple[Any, np.ndarray, dict]:
 #: :data:`repro.fleet.lanes.LANE_OP_FIELDS`.
 _OP_DTYPES = {"attack_id": np.int32, "m_byz": np.int32, "f_agg": np.int32,
               "eta": np.float32, "beta": np.float32, "local_lr": np.float32,
-              "lr": np.float32, "active": bool}
+              "lr": np.float32, "active": bool,
+              "poison_rate": np.float32, "poison_strength": np.float32}
 
 
 def _pack_round(batches: list, cohorts: list, ops: dict[str, list]) -> dict:
@@ -294,9 +301,11 @@ def bucket_key(job: FleetJob, *, chunk: Optional[int] = None) -> tuple:
             c.client.local_steps, c.client.algorithm,
             c.agg.rule, c.agg.pre, c.agg.bucket_size,
             c.agg.gm_iters, c.agg.gm_eps,
+            c.agg.autogm_lamb, c.agg.autogm_iters,
             c.agg.transport_dtype, c.agg.sketch_dim,
             c.agg.backend, _mesh_sig(),
             c.track_kappa_hat, c.taps,
+            poison_signature(c.poison), c.guard,
             job.loss_fn, job.optimizer,
             _tree_sig(job.params), _tree_sig(probe), chunk)
 
@@ -541,6 +550,11 @@ class FleetRunner:
             cols = concat_metrics(saved_cols, metric_columns(metrics_np))
         else:                           # resumed at the final boundary
             cols = dict(saved_cols)
+        if "quarantined_count" in cols:
+            q_total = int(np.asarray(cols["quarantined_count"]).sum())
+            if q_total:
+                obs_runtime.event("robustness.quarantine", surface="fleet",
+                                  total=q_total, rounds=max_rounds)
         # Tap leaves arrive round-and-lane-stacked (R, B, ...): per-lane
         # demux slices [r][k] like every other metric column.
         tap_cols = {f[len("taps."):]: v for f, v in cols.items()
@@ -776,6 +790,12 @@ class ContinuousBucket:
 
         obs_runtime.inc("fleet.transfers")
         fetched = jax.device_get(metrics)
+        if "quarantined_count" in fetched:
+            q_total = int(np.asarray(fetched["quarantined_count"]).sum())
+            if q_total:
+                obs_runtime.event("robustness.quarantine",
+                                  surface="fleet.service",
+                                  total=q_total, rounds=seg)
         tap_cols = fetched["taps"].to_dict() if "taps" in fetched else None
         finished: list[tuple[Any, FleetResult]] = []
         for k, s in lanes:

@@ -122,7 +122,11 @@ def pick_block_d(d: int, cap: int = DEFAULT_BLOCK_D) -> int:
 @dataclasses.dataclass
 class KernelDecision:
     """One primitive-level routing decision."""
-    primitive: str          # "gram" | "combine" | "mixtrim" | "pipeline"
+    #: "gram" | "combine" | "mixtrim" | "meamed" | "pipeline", plus
+    #: "autogm_coeff": AutoGM's adaptive-weight solve has no kernel form,
+    #: so pallas-backed autogm pipelines always carry an explicit xla
+    #: decision for it (gram/combine still run the kernels).
+    primitive: str
     requested: str          # backend asked for at this call site
     used: str               # "pallas[-sharded][-interpret]" | "xla"
     reason: str = ""        # why `used` differs from the pallas kernel path

@@ -76,6 +76,14 @@ class HealthTaps(NamedTuple):
     byz_mix_mass: Optional[Any] = None      # scalar, sum over byz rows
     honest_mix_mass: Optional[Any] = None   # scalar, sum over honest rows
     trim_frac: Optional[Any] = None         # (n,) trimmed-coordinate frac
+    # Quarantine-guard taps (present when the round runs with a
+    # repro.robustness.guard screen): how many rows the guard replaced,
+    # split by the honest-first row convention — quarantined *honest* rows
+    # are faults the budget must absorb, quarantined byz rows are attacks
+    # the guard already disarmed.
+    quarantined_count: Optional[Any] = None       # scalar, replaced rows
+    quarantine_mask_honest: Optional[Any] = None  # (n,) quarantined & honest
+    quarantine_mask_byz: Optional[Any] = None     # (n,) quarantined & byz
 
     def to_dict(self) -> dict:
         """Present fields only — the demux/history view."""
@@ -88,7 +96,8 @@ TAP_FIELDS = HealthTaps._fields
 def health_taps(stack: PyTree, aggregate: PyTree, *, n_honest, f,
                 rule: str, pre: Optional[str],
                 dyn: bool = False,
-                internals: Optional[dict] = None) -> HealthTaps:
+                internals: Optional[dict] = None,
+                quarantine: Optional[dict] = None) -> HealthTaps:
     """Compute the taps for one round.
 
     Args:
@@ -106,6 +115,9 @@ def health_taps(stack: PyTree, aggregate: PyTree, *, n_honest, f,
         taps then reuse those intermediates outright and add only O(n^2 +
         nD) reductions.  Without it (standalone use) the NNM matrix,
         mixed stack, and sort are recomputed from ``stack``.
+      quarantine: the guard's info dict (``{"mask", "count"}``, see
+        :func:`repro.robustness.guard.quarantine_stack`) when the round
+        screened the stack — fills the ``quarantined_*`` taps.
 
     NNM taps need ``pre == "nnm"``; trim taps need ``rule == "cwtm"``
     with pre in (None, "nnm") — under pre="bucketing" the trim acts on
@@ -146,6 +158,12 @@ def health_taps(stack: PyTree, aggregate: PyTree, *, n_honest, f,
     cos = dot_acc / (jnp.sqrt(nr_acc) * jnp.sqrt(nh_acc) + _EPS)
 
     taps: dict[str, Any] = {"dist_honest": dist, "cos_honest": cos}
+
+    if quarantine is not None:
+        qm = quarantine["mask"].astype(jnp.float32)
+        taps["quarantined_count"] = quarantine["count"].astype(jnp.float32)
+        taps["quarantine_mask_honest"] = qm * w
+        taps["quarantine_mask_byz"] = qm * (1.0 - w)
 
     m = None
     if pre == "nnm":

@@ -1,0 +1,37 @@
+"""Adversarial-robustness subsystem: quarantine guard + breakdown sweeps.
+
+Two coordinated pieces (docs/robustness.md):
+
+* :mod:`repro.robustness.guard` — in-round gradient quarantine: non-finite
+  / norm-exploded worker updates are detected inside the compiled round,
+  replaced with an inlier fallback, counted against the f budget and
+  surfaced through HealthTaps + obs.runtime events.
+* :mod:`repro.robustness.breakdown` — breakdown-frontier sweeps: push f/n
+  toward each rule's theoretical breakdown point
+  (:func:`repro.core.theory.breakdown_point`) across the rule zoo x attack
+  grid, riding the fleet engine (one sweep = one bucket), and record the
+  empirical collapse frontier the BENCH_breakdown baseline gates.
+
+``breakdown`` is imported lazily: it pulls in the fed/fleet layers, which
+themselves import the guard from here.
+"""
+from repro.robustness.guard import QuarantineConfig, quarantine_stack
+
+__all__ = [
+    "QuarantineConfig",
+    "quarantine_stack",
+    "BreakdownAttack",
+    "DEFAULT_ATTACKS",
+    "frontier_table",
+    "run_breakdown",
+]
+
+_BREAKDOWN_NAMES = ("BreakdownAttack", "DEFAULT_ATTACKS", "frontier_table",
+                    "run_breakdown")
+
+
+def __getattr__(name):
+    if name in _BREAKDOWN_NAMES:
+        from repro.robustness import breakdown
+        return getattr(breakdown, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

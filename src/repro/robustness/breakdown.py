@@ -1,0 +1,213 @@
+"""Breakdown-frontier sweeps: push f/n toward each rule's theoretical
+breakdown point and record where training empirically collapses.
+
+Every robust rule in the zoo has a *theoretical* breakdown point
+(:func:`repro.core.theory.breakdown_point`): the largest Byzantine
+fraction under which its output stays bounded by honest vectors.  The
+paper's claim is that mixing (NNM) preserves that tolerance while fixing
+the heterogeneity constant — so the *empirical* collapse frontier of
+NNM-composed rules should sit at the theory bound, not below it.  This
+module measures that frontier directly:
+
+* grid = rule zoo x attack family x ``f`` rising toward ``(n-1)//2``,
+  with a clean ``f=0`` lane per rule as the collapse reference and plain
+  averaging (predicted frontier 0) as the undefended control;
+* every lane is a :class:`repro.fleet.runner.ScenarioSpec` — ONE sweep
+  rides the fleet engine as a handful of shape buckets (``f``, attack
+  family, eta, and the poison rate are traced per-lane operands; only
+  rule/pre and the poison *kind* split buckets), so the whole grid costs
+  a few compiles rather than one per cell;
+* a cell counts as COLLAPSED when its final-window loss is non-finite or
+  exceeds ``collapse_factor`` x the rule's clean-lane window (measured:
+  defended lanes sit at/below the clean loss, undefended FOE lanes blow
+  up 5-8x within a dozen rounds);
+* the frontier for (rule, attack) is the largest ``f`` with every
+  ``f' <= f`` non-collapsed, reported next to the theory prediction.
+
+``benchmarks/bench_breakdown.py`` snapshots the frontier into
+``BENCH_breakdown.json`` and ``scripts/perf_gate.py --breakdown`` fails
+CI when any gated frontier cell regresses.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence
+
+import numpy as np
+
+from repro.core.theory import max_tolerable_f
+from repro.fed.poison import PoisonConfig
+from repro.fed.scenarios import Scenario
+from repro.fed.schedules import constant_attack
+from repro.fleet.runner import FleetRunner, ScenarioSpec
+
+
+@dataclasses.dataclass(frozen=True)
+class BreakdownAttack:
+    """One column of the breakdown grid: a gradient attack OR a poisoning.
+
+    ``attack``/``eta`` name a :mod:`repro.core.attacks` family (must be
+    fleet-runnable, i.e. in ``DYN_ATTACK_FAMILIES``); ``poison`` instead
+    corrupts the Byzantine clients' *data*
+    (:mod:`repro.fed.poison`) while they compute honestly — the grid's
+    required data-poisoning column.
+    """
+    name: str
+    attack: str = "none"
+    eta: Optional[float] = None
+    poison: Optional[PoisonConfig] = None
+
+    def __post_init__(self):
+        if self.poison is not None and self.attack != "none":
+            raise ValueError(
+                "a BreakdownAttack is either a gradient attack or a "
+                f"poisoning, not both ({self.name!r})")
+
+
+#: The default attack grid: one omniscient-strength column per family
+#: class — sign flip (direction reversal), ALIE (variance-cloaked drift),
+#: FOE (scaled opposition), and full-rate label-flip poisoning (the
+#: strictly weaker data-only adversary).
+DEFAULT_ATTACKS = (
+    BreakdownAttack("sf", attack="sf"),
+    BreakdownAttack("alie", attack="alie", eta=8.0),
+    BreakdownAttack("foe", attack="foe", eta=20.0),
+    BreakdownAttack("poison_lf",
+                    poison=PoisonConfig(kind="labelflip", rate=1.0)),
+)
+
+#: (rule, pre) rows: the NNM-composed zoo the paper certifies, plus plain
+#: averaging as the undefended control (predicted frontier 0) — the row
+#: that shows the harness CAN observe a collapse.
+DEFAULT_RULES = (
+    ("cwtm", "nnm"),
+    ("krum", "nnm"),
+    ("gm", "nnm"),
+    ("autogm", "nnm"),
+    ("average", None),
+)
+
+
+def _rule_key(rule: str, pre: Optional[str]) -> str:
+    return f"{pre or 'none'}-{rule}"
+
+
+def _lane_scenario(rule: str, pre: Optional[str], f: int,
+                   att: Optional[BreakdownAttack], *, n: int, alpha: float,
+                   rounds: int, server_lr: float,
+                   batch_size: int) -> Scenario:
+    return Scenario(
+        name=f"bd-{_rule_key(rule, pre)}-{att.name if att else 'clean'}-f{f}",
+        description="breakdown-frontier sweep lane",
+        n_clients=n, clients_per_round=n, f=f,
+        rule=rule, pre=pre,
+        attack=constant_attack(att.attack, eta=att.eta) if att is not None
+        else constant_attack("none"),
+        poison=att.poison if att is not None else None,
+        alpha=alpha, batch_size=batch_size,
+        server_lr=server_lr, rounds=rounds)
+
+
+def run_breakdown(rules: Sequence[tuple] = DEFAULT_RULES,
+                  attacks: Sequence[BreakdownAttack] = DEFAULT_ATTACKS, *,
+                  n_clients: int = 10, fs: Optional[Sequence[int]] = None,
+                  rounds: int = 12, seed: int = 0, alpha: float = 0.3,
+                  batch_size: int = 16, server_lr: float = 0.2,
+                  collapse_factor: float = 2.0, window: int = 4,
+                  max_lanes: Optional[int] = None) -> dict:
+    """Run the full grid as one fleet and return the frontier report.
+
+    Returns a dict with:
+      ``cells``      — ``{"<pre>-<rule>|<attack>": {"losses": {f: window
+                       mean}, "collapsed": {f: bool}, "frontier": int}}``
+      ``frontier``   — flat ``{cell_key: empirical f*}`` view
+      ``predicted``  — ``{rule_key: theory f*}`` from
+                       :func:`repro.core.theory.max_tolerable_f`
+      ``baseline_loss`` — per rule_key clean-lane window mean
+      ``trace_count`` / ``n_buckets`` — the fleet's compile accounting
+                       (the one-compile-per-bucket contract the bench
+                       gates).
+    """
+    fmax = (n_clients - 1) // 2
+    fs = tuple(fs) if fs is not None else tuple(range(1, fmax + 1))
+    if any(f <= 0 or f > fmax for f in fs):
+        raise ValueError(f"fs must be in [1, {fmax}], got {fs}")
+    fs = tuple(sorted(fs))
+
+    specs: list[ScenarioSpec] = []
+    tags: list[tuple[str, Optional[str], int]] = []
+
+    def add(rule, pre, f, att):
+        rk = _rule_key(rule, pre)
+        sc = _lane_scenario(rule, pre, f, att, n=n_clients, alpha=alpha,
+                            rounds=rounds, server_lr=server_lr,
+                            batch_size=batch_size)
+        label = f"{rk}|{att.name if att else 'clean'}|f{f}"
+        specs.append(ScenarioSpec(scenario=sc, seed=seed, label=label))
+        tags.append((rk, att.name if att else None, f))
+
+    for rule, pre in rules:
+        add(rule, pre, 0, None)                 # collapse reference lane
+        for att in attacks:
+            for f in fs:
+                add(rule, pre, f, att)
+
+    runner = FleetRunner(specs, max_lanes=max_lanes)
+    results = runner.run()
+
+    base_loss: dict[str, float] = {}
+    cell_losses: dict[tuple, dict[int, float]] = {}
+    for (rk, att_name, f), res in zip(tags, results):
+        w = res.history.loss[-min(window, len(res.history.loss)):]
+        m = float(np.mean(w))
+        if att_name is None:
+            base_loss[rk] = m
+        else:
+            cell_losses.setdefault((rk, att_name), {})[f] = m
+
+    cells: dict[str, dict] = {}
+    frontier: dict[str, int] = {}
+    for (rk, att_name), losses in cell_losses.items():
+        ref = base_loss[rk]
+        collapsed = {f: (not np.isfinite(losses[f]))
+                     or losses[f] > collapse_factor * ref for f in fs}
+        front = 0
+        for f in fs:
+            if collapsed[f]:
+                break
+            front = f
+        key = f"{rk}|{att_name}"
+        cells[key] = {"losses": {int(f): losses[f] for f in fs},
+                      "collapsed": {int(f): bool(collapsed[f]) for f in fs},
+                      "frontier": front}
+        frontier[key] = front
+
+    predicted = {_rule_key(rule, pre): max_tolerable_f(rule, n_clients,
+                                                       pre=pre)
+                 for rule, pre in rules}
+    return {"n_clients": n_clients, "fs": [int(f) for f in fs],
+            "rounds": rounds, "seed": seed,
+            "collapse_factor": collapse_factor, "window": window,
+            "cells": cells, "frontier": frontier, "predicted": predicted,
+            "baseline_loss": base_loss,
+            "trace_count": runner.trace_count,
+            "n_buckets": runner.n_buckets}
+
+
+def frontier_table(report: dict) -> str:
+    """Human-readable frontier grid (rules x attacks, ``emp/theory``)."""
+    rks = sorted(report["predicted"])
+    atts = sorted({k.split("|", 1)[1] for k in report["frontier"]})
+    widths = [max(len("rule"), *(len(r) for r in rks))]
+    header = "rule".ljust(widths[0])
+    for a in atts:
+        header += f"  {a:>10s}"
+    lines = [header, "-" * len(header)]
+    for rk in rks:
+        row = rk.ljust(widths[0])
+        for a in atts:
+            emp = report["frontier"].get(f"{rk}|{a}")
+            cell = "-" if emp is None else f"{emp}/{report['predicted'][rk]}"
+            row += f"  {cell:>10s}"
+        lines.append(row)
+    return "\n".join(lines)
