@@ -107,6 +107,24 @@ Robustness hard gates (``--breakdown``; from
 * ``guard_noop_parity_ok``   >= 1 — guard enabled but no fault firing is
   bit-for-bit the unguarded run.
 
+Scale hard gates (``--scale``; from ``bench_agg_cost.py --scale-out`` on
+a forced 8-device host):
+
+* ``compile_count_hier`` / ``compile_count_hier_mesh`` <= baseline (1) —
+  the hierarchical pipeline compiles once across permutation keys AND
+  input data on both the dense-bucketing and the mesh path;
+* ``hier_wide_ops_max``   <= baseline (0) — zero full-width (n, d)
+  dot/sort equations under the mesh at n=10240;
+* ``hier_fallbacks_mesh`` <= baseline (0) — the mesh run is oracle-free;
+* ``hier_parity_ok``      >= 1 — pallas_hier matches the dense-bucketing
+  path at n=10240 (same permutation key);
+* ``hier_s1_bitwise_ok``  >= 1 — bucket_size=1 is a BITWISE no-op;
+* ``hier_wide_ops_xla`` / ``dense_infeasible_n10240`` >= 1 — the dense
+  contrast stays honest (it still holds wide ops at trace level, and its
+  n=10240 one-hot is ~4 TB, never executed);
+* ``hier_speedup_n{256,1024}`` / ``hier_round_ratio_n{4096,10240}`` —
+  absolute machine-normalized throughput floors (see SCALE_GATES).
+
 Interpret-mode quarantine: Pallas timings measured off-TPU live under the
 JSON's ``"interpret"`` key and CANNOT be gated — any gated key found only
 there is a hard configuration error, so interpreter numbers can never
@@ -202,6 +220,33 @@ RESUME_GATES = (("resume_overhead_ratio", "min_0.9"),
                 ("compile_count_ckpt_off", "max"),
                 ("snapshot_count_ok", "min_1"),
                 ("resume_parity_ok", "min_1"))
+
+#: scale gates (BENCH_scale.json from bench_agg_cost.py --scale-out,
+#: forced 8-device host): the hierarchical-aggregation n-scaling table.
+#: Structure: the hier pipeline compiles ONCE per surface across keys
+#: and data (dense-bucketing and pallas_hier mesh paths both), holds
+#: zero full-width (n, d) dot/sort equations and zero fallbacks under
+#: the mesh at n=10240, matches the dense-bucketing oracle there, and
+#: degrades to a BITWISE no-op at s=1.  Honesty rows: the dense XLA
+#: contrast still holds wide ops (trace-level — its n=10240 one-hot is
+#: ~4 TB and is never executed, which ``dense_infeasible_n10240`` pins).
+#: Throughput: medians of interleaved per-rep ratios, machine-
+#: normalized, so the floors are absolute — set 4-8x below the values
+#: measured on a quiet 8-vCPU runner (33x / 450x / 0.85 / 0.39): a
+#: 10k-worker hier round must stay within ~20x of a dense n=256 round
+#: even though its dense counterpart cannot run at all.
+SCALE_GATES = (("compile_count_hier", "max"),
+               ("compile_count_hier_mesh", "max"),
+               ("hier_wide_ops_max", "max"),
+               ("hier_fallbacks_mesh", "max"),
+               ("hier_parity_ok", "min_1"),
+               ("hier_s1_bitwise_ok", "min_1"),
+               ("hier_wide_ops_xla", "min_1"),
+               ("dense_infeasible_n10240", "min_1"),
+               ("hier_speedup_n256", "min_4"),
+               ("hier_speedup_n1024", "min_50"),
+               ("hier_round_ratio_n4096", "min_0.1"),
+               ("hier_round_ratio_n10240", "min_0.05"))
 
 #: robustness gates (BENCH_breakdown.json from bench_breakdown.py
 #: --smoke): the empirical breakdown frontier of every gated rule x
@@ -322,15 +367,21 @@ def main() -> int:
                     help="JSON from bench_breakdown.py --smoke")
     ap.add_argument("--breakdown-baseline",
                     default="benchmarks/baselines/BENCH_breakdown.json")
+    ap.add_argument("--scale", default=None,
+                    help="JSON from bench_agg_cost.py --scale-out "
+                         "(forced 8-device host)")
+    ap.add_argument("--scale-baseline",
+                    default="benchmarks/baselines/BENCH_scale.json")
     args = ap.parse_args()
 
     if args.current is None and args.agg_cost is None \
             and args.dist_agg is None and args.rounds is None \
             and args.obs is None and args.fleet_latency is None \
-            and args.resume is None and args.breakdown is None:
+            and args.resume is None and args.breakdown is None \
+            and args.scale is None:
         print("perf gate: nothing to check (pass a fleet JSON, --agg-cost, "
-              "--dist-agg, --rounds, --obs, --fleet-latency, --resume "
-              "and/or --breakdown)", file=sys.stderr)
+              "--dist-agg, --rounds, --obs, --fleet-latency, --resume, "
+              "--breakdown and/or --scale)", file=sys.stderr)
         return 2
 
     failures: list = []
@@ -395,6 +446,14 @@ def main() -> int:
             bd_base = json.load(fh)
         check_gate_table(BREAKDOWN_GATES, bd_cur, bd_base,
                          args.breakdown, failures)
+
+    if args.scale is not None:
+        with open(args.scale) as fh:
+            scale_cur = json.load(fh)
+        with open(args.scale_baseline) as fh:
+            scale_base = json.load(fh)
+        check_gate_table(SCALE_GATES, scale_cur, scale_base,
+                         args.scale, failures)
 
     if failures:
         print(f"perf gate FAILED: {', '.join(failures)} regressed",

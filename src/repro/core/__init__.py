@@ -5,7 +5,10 @@ from repro.core.aggregators import (
     meamed, multikrum, RULES,
 )
 from repro.core.nnm import nnm, nnm_direct, nnm_matrix_from_stack
-from repro.core.bucketing import bucketing, bucketing_means, default_bucket_size
+from repro.core.bucketing import (
+    bucket_assignment, bucket_matrix, bucketing, bucketing_means,
+    default_bucket_size,
+)
 from repro.core.attacks import apply_attack
 from repro.core.robust import robust_aggregate, tree_gram, tree_combine, tree_mix
 from repro.core import theory
@@ -15,7 +18,8 @@ __all__ = [
     "aggregate", "average", "cwmed", "cwtm", "geometric_median", "get_rule",
     "krum", "mda", "meamed", "multikrum", "RULES",
     "nnm", "nnm_direct", "nnm_matrix_from_stack",
-    "bucketing", "bucketing_means", "default_bucket_size",
+    "bucket_assignment", "bucket_matrix", "bucketing", "bucketing_means",
+    "default_bucket_size",
     "apply_attack", "robust_aggregate", "tree_gram", "tree_combine",
     "tree_mix", "theory",
 ]

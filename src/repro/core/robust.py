@@ -38,7 +38,15 @@ from typing import Any, Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core.bucketing import default_bucket_size as _default_bucket_size
+from repro.core.bucketing import (
+    adjusted_f as _adjusted_f,
+    adjusted_f_dyn as _adjusted_f_dyn,
+    bucket_counts as _bucket_counts,
+    bucket_matrix as _bucket_matrix,
+    clamp_bucket_size as _clamp_bucket_size,
+    default_bucket_size as _default_bucket_size,
+    num_buckets as _num_buckets,
+)
 from repro.core import gram as gramlib
 from repro.core.types import AggregatorSpec, COORDINATE_RULES, GRAM_RULES
 from repro.kernels import dispatch as kdispatch
@@ -152,52 +160,135 @@ def _tree_bucket(tree: PyTree, f: int, key: Array,
     """Bucketing on pytrees: one shared permutation across all leaves.
 
     Ragged tails are handled exactly (paper: n=17, s=2 -> 9 buckets, one
-    singleton): zero-pad and renormalize by true bucket occupancy."""
+    singleton): zero-pad and renormalize by true bucket occupancy.
+    Dtype-preserving like :func:`repro.core.bucketing.bucketing`: means
+    accumulate in (at least) fp32 and cast back to each leaf's dtype."""
     leaves = jax.tree_util.tree_leaves(tree)
     n = leaves[0].shape[0]
-    s = bucket_size if bucket_size is not None else _default_bucket_size(n, f)
-    s = max(1, min(s, n))
+    s = _clamp_bucket_size(n, bucket_size, f)
     perm = jax.random.permutation(key, n)
-    n_buckets = -(-n // s)
+    n_buckets = _num_buckets(n, s)
     pad = n_buckets * s - n
-    counts = jnp.minimum(jnp.full((n_buckets,), s),
-                         n - jnp.arange(n_buckets) * s).astype(jnp.float32)
+    counts = _bucket_counts(n, s)
 
     def bucket(leaf):
-        x = leaf[perm].astype(jnp.float32)
+        acc = jnp.promote_types(leaf.dtype, jnp.float32)
+        x = leaf[perm].astype(acc)
         if pad:
             x = jnp.concatenate(
-                [x, jnp.zeros((pad,) + leaf.shape[1:], jnp.float32)])
+                [x, jnp.zeros((pad,) + leaf.shape[1:], acc)])
         sums = x.reshape((n_buckets, s) + leaf.shape[1:]).sum(axis=1)
-        return sums / counts.reshape((n_buckets,) + (1,) * (leaf.ndim - 1))
+        means = sums / counts.astype(acc).reshape(
+            (n_buckets,) + (1,) * (leaf.ndim - 1))
+        return means.astype(leaf.dtype)
 
-    f_adj = min(f, max(0, (n_buckets - 1) // 2)) if f else 0
-    return jax.tree_util.tree_map(bucket, tree), f_adj
+    return jax.tree_util.tree_map(bucket, tree), _adjusted_f(f, n_buckets)
+
+
+def _hier_active(spec: AggregatorSpec) -> bool:
+    """A hierarchical bucketing stage runs when the spec opts in OR the
+    hierarchical backend is requested (the backend implies the stage)."""
+    return bool(spec.hier) or spec.backend == "pallas_hier"
+
+
+def _validate_hier(spec: AggregatorSpec) -> None:
+    if spec.pre == "bucketing":
+        raise ValueError(
+            "hierarchical aggregation IS a bucketing stage; composing it "
+            "with pre='bucketing' would bucket twice — use pre='nnm' or "
+            "pre=None")
+    if spec.sketch_dim:
+        raise ValueError(
+            "hierarchical aggregation is incompatible with sketch_dim: the "
+            "signed-sketch gram has no reduced-population form (the fused "
+            "bucketgram kernel already removes the wide gram pass)")
+
+
+def _hier_bucket_size(spec: AggregatorSpec, n: int, f, *, dyn: bool) -> int:
+    """Resolve the hierarchical bucket size (static shape material)."""
+    if dyn:
+        if spec.bucket_size is None:
+            raise ValueError(
+                "dynamic-f hierarchical aggregation needs an explicit "
+                "bucket_size (the floor(n/2f) default is shape-level); set "
+                "AggregatorSpec.bucket_size")
+        return max(1, min(int(spec.bucket_size), n))
+    return _clamp_bucket_size(n, spec.bucket_size, f)
+
+
+_HIER_S1_NOTE = "s=1: singleton buckets, identity reduction (skipped)"
+
+
+def _hier_reduce_flat(flat: Array, spec: AggregatorSpec, f, *,
+                      key: Optional[Array], dyn: bool, backend: str,
+                      mesh, worker_axis: Optional[str], axis: Optional[str]
+                      ) -> tuple[Array, Any, Optional[Array]]:
+    """The hierarchical pre-reduction on the flattened (n, D) stack.
+
+    Returns (reduced stack (ceil(n/s), D), adjusted f, reduced fp32 Gram
+    or None).  The permutation rides inside the (n_b, n) assignment matrix
+    built from ``key`` in-graph, so the compiled kernel is key-independent
+    (one compile per fleet shape bucket).  s=1 short-circuits to the
+    identity — singleton buckets make the permutation semantically inert,
+    and skipping it keeps hier(s=1) BITWISE equal to the dense pipeline.
+    """
+    n = flat.shape[0]
+    if key is None:
+        raise ValueError("hierarchical aggregation requires a PRNG key")
+    s = _hier_bucket_size(spec, n, f, dyn=dyn)
+    if s == 1:
+        kdispatch.record_decision("bucketgram", backend, "skipped",
+                                  _HIER_S1_NOTE)
+        return flat, f, None
+    n_b = _num_buckets(n, s)
+    bmat = _bucket_matrix(key, n, s, dtype=jnp.float32)
+    need_gram = spec.rule in GRAM_RULES or spec.pre == "nnm"
+    y, g = kdispatch.dispatch_bucketgram(
+        flat, bmat, backend=backend, with_gram=need_gram, mesh=mesh,
+        worker_axis=worker_axis, axis=axis)
+    f_adj = _adjusted_f_dyn(f, n_b) if dyn else _adjusted_f(f, n_b)
+    return y, f_adj, g
 
 
 def _aggregate_flat(work: PyTree, spec: AggregatorSpec, f, *,
                     key: Optional[Array], return_coeff: bool,
                     dyn: bool, backend: str = "pallas",
                     mesh_ctx: Optional[tuple] = None,
-                    internals: Optional[dict] = None) -> PyTree:
+                    internals: Optional[dict] = None,
+                    hier: bool = False) -> PyTree:
     """Kernel-backend pipeline: pre-aggregated stack -> one contiguous
     (n, D) buffer -> blocked gram -> coeff -> streamed combine / fused
     mixtrim -> aggregated pytree.
 
-    ``backend`` is "pallas" (single device) or "pallas_sharded" (the
+    ``backend`` is "pallas" (single device), "pallas_sharded" (the
     shard_map'd form; ``mesh_ctx`` is its resolved (mesh, axis) — the
     gram psums tiny (n, n) partials and combine/mixtrim run shard-local,
-    while the O(n^2) coefficient/NNM math below stays replicated).  ``f``
-    is a python int when ``dyn=False`` and a traced int32 scalar when
-    ``dyn=True`` (the fleet path; rank-mask kernels keep one compile per
-    shape bucket).  Decisions land on ``kdispatch.last_dispatch()``.
+    while the O(n^2) coefficient/NNM math below stays replicated), or
+    "pallas_hier" (``mesh_ctx`` = (mesh, worker_axis | None, model_axis);
+    the stack shards along workers x D and the fused bucketgram kernel
+    reduces it before everything below runs on the ceil(n/s) population).
+    ``f`` is a python int when ``dyn=False`` and a traced int32 scalar
+    when ``dyn=True`` (the fleet path; rank-mask kernels keep one compile
+    per shape bucket).  Decisions land on ``kdispatch.last_dispatch()``.
     """
     flat, layout = kdispatch.flatten_worker_stack(work)
-    mesh, axis = mesh_ctx if mesh_ctx is not None else (None, None)
+    if backend == "pallas_hier":
+        mesh, worker_axis, axis = mesh_ctx
+    else:
+        mesh, axis = mesh_ctx if mesh_ctx is not None else (None, None)
+        worker_axis = None
+
+    g = None
+    if hier:
+        # The fused reduction emits the reduced stack AND (when a gram
+        # consumer follows) its Gram in the same pass — the gram stage
+        # below is skipped.
+        flat, f, g = _hier_reduce_flat(
+            flat, spec, f, key=key, dyn=dyn, backend=backend, mesh=mesh,
+            worker_axis=worker_axis, axis=axis)
 
     mix_matrix = None
-    g = None
-    if spec.rule in GRAM_RULES or spec.pre == "nnm":
+    if (spec.rule in GRAM_RULES or spec.pre == "nnm") and g is None:
         if spec.sketch_dim and key is not None:
             # The sketch gram folds per-chunk signs per LEAF index — a
             # contract shared with the xla backend — so it stays on the
@@ -272,27 +363,48 @@ def _aggregate_flat(work: PyTree, spec: AggregatorSpec, f, *,
 def _open_routed_record(spec: AggregatorSpec, *, dyn: bool
                         ) -> tuple[str, Optional[tuple]]:
     """Resolve the backend (+ shard mesh), open the dispatch record, and
-    record a degrade when "pallas_sharded" has no multi-device mesh.
+    record a degrade when "pallas_sharded" / "pallas_hier" has no
+    multi-device mesh.
 
     Returns (effective backend, mesh_ctx) where mesh_ctx is the resolved
-    (mesh, axis) for the sharded backend and None otherwise."""
-    backend = kdispatch.resolve_backend(spec.backend)
+    (mesh, axis) for the sharded backend, (mesh, worker_axis, model_axis)
+    for the hierarchical backend, and None otherwise."""
+    hier = _hier_active(spec)
+    backend = kdispatch.resolve_backend(spec.backend, hier=hier)
     mesh_ctx = None
-    degraded = False
-    if backend == "pallas_sharded":
+    degraded = None
+    if backend == "pallas_hier":
+        mesh_ctx = kdispatch.resolve_hier_mesh()
+        if mesh_ctx is None:
+            # The hier STAGE survives the degrade — only the mesh form
+            # does not — so the dense (leaf-streamed) bucketing path runs.
+            backend = "xla"
+            degraded = ("pallas_hier",
+                        "no multi-device mesh: dense bucketing path")
+    elif backend == "pallas_sharded":
         mesh_ctx = kdispatch.resolve_shard_mesh()
         if mesh_ctx is None:
-            backend, degraded = "xla", True
-    mesh_devices = kdispatch.shardlib.axis_size(*mesh_ctx) \
-        if mesh_ctx is not None else 1
+            backend = "xla"
+            degraded = ("pallas_sharded",
+                        "no multi-device mesh: leaf-streamed fallback")
+    if mesh_ctx is None:
+        mesh_devices, mesh_axis, worker_axis = 1, None, None
+    elif len(mesh_ctx) == 3:
+        mesh, worker_axis, mesh_axis = mesh_ctx
+        mesh_devices = kdispatch.shardlib.axis_size(mesh, mesh_axis)
+        if worker_axis is not None:
+            mesh_devices *= kdispatch.shardlib.axis_size(mesh, worker_axis)
+    else:
+        mesh_devices = kdispatch.shardlib.axis_size(*mesh_ctx)
+        mesh_axis, worker_axis = mesh_ctx[1], None
     kdispatch.open_record(
         requested=spec.backend, backend=backend, rule=spec.rule,
         pre=spec.pre, dyn=dyn, mesh_devices=mesh_devices,
-        mesh_axis=mesh_ctx[1] if mesh_ctx is not None else None)
-    if degraded:
-        kdispatch.record_decision(
-            "pipeline", "pallas_sharded", "xla",
-            "no multi-device mesh: leaf-streamed fallback")
+        mesh_axis=mesh_axis, hier=hier, bucket_size=spec.bucket_size,
+        mesh_worker_axis=worker_axis)
+    if degraded is not None:
+        kdispatch.record_decision("pipeline", degraded[0], "xla",
+                                  degraded[1])
     return backend, mesh_ctx
 
 
@@ -323,6 +435,9 @@ def robust_aggregate(tree: PyTree, spec: AggregatorSpec, *,
     f = spec.f
     work = tree
     mix_matrix = None
+    hier = _hier_active(spec)
+    if hier:
+        _validate_hier(spec)
 
     if spec.pre == "bucketing":
         if key is None:
@@ -336,13 +451,29 @@ def robust_aggregate(tree: PyTree, spec: AggregatorSpec, *,
             lambda l: l.astype(jnp.bfloat16), work)
 
     backend, mesh_ctx = _open_routed_record(spec, dyn=False)
-    if backend in ("pallas", "pallas_sharded"):
+    if backend in ("pallas", "pallas_sharded", "pallas_hier"):
         return _aggregate_flat(work, spec, f, key=key,
                                return_coeff=return_coeff, dyn=False,
                                backend=backend, mesh_ctx=mesh_ctx,
-                               internals=internals)
+                               internals=internals, hier=hier)
     kdispatch.record_decision("pipeline", "xla", "xla",
                               "leaf-streamed jnp path (GSPMD-friendly)")
+
+    if hier:
+        # Dense hierarchical stage (gather form), sharing the SAME key —
+        # and so the same bucket grouping — as the fused kernel path.
+        if key is None:
+            raise ValueError("hierarchical aggregation requires a PRNG key")
+        n = jax.tree_util.tree_leaves(work)[0].shape[0]
+        s = _hier_bucket_size(spec, n, f, dyn=False)
+        if s == 1:
+            kdispatch.record_decision("bucketgram", "xla", "skipped",
+                                      _HIER_S1_NOTE)
+        else:
+            kdispatch.record_decision(
+                "bucketgram", "xla", "xla",
+                "dense leaf-streamed bucketing (gather form)")
+            work, f = _tree_bucket(work, f, key, s)
 
     if spec.sketch_dim and key is not None:
         g = tree_sketch_gram(work, spec.sketch_dim, key)
@@ -428,22 +559,22 @@ def _tree_bucket_dyn(tree: PyTree, f: Array, key: Array,
     n = leaves[0].shape[0]
     s = max(1, min(int(bucket_size), n))
     perm = jax.random.permutation(key, n)
-    n_buckets = -(-n // s)
+    n_buckets = _num_buckets(n, s)
     pad = n_buckets * s - n
-    counts = jnp.minimum(jnp.full((n_buckets,), s),
-                         n - jnp.arange(n_buckets) * s).astype(jnp.float32)
+    counts = _bucket_counts(n, s)
 
     def bucket(leaf):
-        x = leaf[perm].astype(jnp.float32)
+        acc = jnp.promote_types(leaf.dtype, jnp.float32)
+        x = leaf[perm].astype(acc)
         if pad:
             x = jnp.concatenate(
-                [x, jnp.zeros((pad,) + leaf.shape[1:], jnp.float32)])
+                [x, jnp.zeros((pad,) + leaf.shape[1:], acc)])
         sums = x.reshape((n_buckets, s) + leaf.shape[1:]).sum(axis=1)
-        return sums / counts.reshape((n_buckets,) + (1,) * (leaf.ndim - 1))
+        means = sums / counts.astype(acc).reshape(
+            (n_buckets,) + (1,) * (leaf.ndim - 1))
+        return means.astype(leaf.dtype)
 
-    cap = max(0, (n_buckets - 1) // 2)
-    f_adj = jnp.minimum(f, cap).astype(jnp.int32)
-    return jax.tree_util.tree_map(bucket, tree), f_adj
+    return jax.tree_util.tree_map(bucket, tree), _adjusted_f_dyn(f, n_buckets)
 
 
 def robust_aggregate_dyn(tree: PyTree, spec: AggregatorSpec, f: Array, *,
@@ -460,6 +591,9 @@ def robust_aggregate_dyn(tree: PyTree, spec: AggregatorSpec, f: Array, *,
     f = jnp.asarray(f, jnp.int32)
     work = tree
     mix_matrix = None
+    hier = _hier_active(spec)
+    if hier:
+        _validate_hier(spec)
 
     if spec.pre == "bucketing":
         if key is None:
@@ -476,12 +610,26 @@ def robust_aggregate_dyn(tree: PyTree, spec: AggregatorSpec, f: Array, *,
             lambda l: l.astype(jnp.bfloat16), work)
 
     backend, mesh_ctx = _open_routed_record(spec, dyn=True)
-    if backend in ("pallas", "pallas_sharded"):
+    if backend in ("pallas", "pallas_sharded", "pallas_hier"):
         return _aggregate_flat(work, spec, f, key=key, return_coeff=False,
                                dyn=True, backend=backend, mesh_ctx=mesh_ctx,
-                               internals=internals)
+                               internals=internals, hier=hier)
     kdispatch.record_decision("pipeline", "xla", "xla",
                               "leaf-streamed jnp path (GSPMD-friendly)")
+
+    if hier:
+        if key is None:
+            raise ValueError("hierarchical aggregation requires a PRNG key")
+        n = jax.tree_util.tree_leaves(work)[0].shape[0]
+        s = _hier_bucket_size(spec, n, f, dyn=True)
+        if s == 1:
+            kdispatch.record_decision("bucketgram", "xla", "skipped",
+                                      _HIER_S1_NOTE)
+        else:
+            kdispatch.record_decision(
+                "bucketgram", "xla", "xla",
+                "dense leaf-streamed bucketing (gather form)")
+            work, f = _tree_bucket_dyn(work, f, key, s)
 
     if spec.sketch_dim and key is not None:
         g = tree_sketch_gram(work, spec.sketch_dim, key)

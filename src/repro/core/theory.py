@@ -61,12 +61,50 @@ def nnm_variance_factor(n: int, f: int) -> float:
     return 8.0 * f / (n - f)
 
 
-def composed_kappa(rule: str, n: int, f: int, pre: str | None = None) -> float:
-    """Kappa of the composed pipeline pre∘rule.
+def bucketed_population(n: int, f: int, bucket_size: int | None = None
+                        ) -> tuple[int, int]:
+    """(n_buckets, f') after an s-sized bucketing stage.
+
+    The population shrinks to ceil(n/s) while each Byzantine input
+    contaminates at most one bucket, so f' = f (Karimireddy et al.,
+    arXiv 2006.09365 — the paper's Observation 2 trade-off).  Raises when
+    the reduced population can no longer tolerate f (n_buckets <= 2f):
+    shrinking too aggressively destroys the robustness precondition."""
+    from repro.core.bucketing import clamp_bucket_size, num_buckets
+    s = clamp_bucket_size(n, bucket_size, f)
+    n_b = num_buckets(n, s)
+    if f > 0 and n_b <= 2 * f:
+        raise ValueError(
+            f"bucket_size={s} reduces n={n} to {n_b} buckets, which cannot "
+            f"tolerate f={f} (need n_buckets > 2f)")
+    return n_b, f
+
+
+def composed_kappa(rule: str, n: int, f: int, pre: str | None = None, *,
+                   hier: bool = False,
+                   bucket_size: int | None = None) -> float:
+    """Kappa of the composed pipeline [bucketing ->] pre -> rule.
 
     Lemma 1 for ``pre="nnm"`` (covers every base rule with a proved kappa,
-    including the AutoGM surrogate); the bare Table 1 coefficient otherwise.
+    including the AutoGM surrogate); the bare Table 1 coefficient
+    otherwise.  ``pre="bucketing"`` and ``hier=True`` both insert an
+    s-sized bucketing stage (:func:`bucketed_population`): the downstream
+    coefficients are evaluated at the REDUCED population (ceil(n/s), f) —
+    hier composes with a further ``pre="nnm"`` stage on the reduced stack
+    (bucketing -> NNM -> rule, the hierarchical-aggregation pipeline),
+    which is where the s vs kappa trade-off lives: larger s shrinks the
+    O(n^2) compute quadratically but inflates f/(n_b - 2f) and with it
+    every Table 1 coefficient (see docs/perf.md for the table).
     """
+    if pre == "bucketing":
+        if hier:
+            raise ValueError(
+                "hier already inserts a bucketing stage; pre='bucketing' "
+                "would bucket twice")
+        n, f = bucketed_population(n, f, bucket_size)
+        pre = None
+    elif hier:
+        n, f = bucketed_population(n, f, bucket_size)
     base = kappa(rule, n, f)
     if pre in (None, "none"):
         return base

@@ -25,7 +25,20 @@ class AggregatorSpec:
         "cwmed", "cwtm", "mda", "meamed").
       f: number of Byzantine workers tolerated (f < n/2).
       pre: optional pre-aggregation ("nnm", "bucketing", or None).
-      bucket_size: Bucketing bucket size s (defaults to floor(n / 2f)).
+      bucket_size: Bucketing bucket size s (defaults to floor(n / 2f));
+        shared by ``pre="bucketing"`` and the hierarchical stage.
+      hier: hierarchical aggregation — reduce the n-worker stack to
+        ceil(n/s) random bucket means (Karimireddy et al. bucketing as a
+        PRE-reduction) before ``pre``/``rule`` run on the reduced
+        population with the f' = f adjustment, turning the O(n^2) stages
+        into O((n/s)^2).  Composes with ``pre="nnm"`` (bucketing -> NNM ->
+        rule); mutually exclusive with ``pre="bucketing"`` (that IS a
+        bucketing stage) and ``sketch_dim``.  s=1 is an exact no-op
+        (singleton buckets; the permutation is skipped so the pipeline is
+        bitwise the dense one).  Requires a PRNG key; dynamic-f paths need
+        an explicit ``bucket_size``.  Static bucket-key material for the
+        fleet engine — the per-lane permutation key stays a traced
+        operand.
       gm_iters: Weiszfeld iteration count for GM (and AutoGM's inner solve).
       gm_eps: Weiszfeld smoothing epsilon.
       autogm_lamb: AutoGM weight-regularization strength, in units of the
@@ -40,8 +53,14 @@ class AggregatorSpec:
         "pallas_sharded" shard_maps that pipeline along D over a mesh axis
         (per-shard gram + psum'd (n, n) partials, shard-local
         combine/mixtrim — degrades to "xla", RECORDED, without a
-        multi-device mesh); "auto" picks "pallas" on a single-device TPU,
-        "pallas_sharded" on a multi-device TPU, and "xla" elsewhere.
+        multi-device mesh); "pallas_hier" implies ``hier`` and runs the
+        hierarchical reduction on a (possibly 2-D workers x model) mesh —
+        the stack lives sharded along n AND D, the fused bucketed-gram
+        kernel reduces it per device, and only tiny reduced collectives
+        cross shards (degrades to the dense bucketing path, RECORDED,
+        without a multi-device mesh); "auto" picks "pallas" on a
+        single-device TPU, "pallas_sharded" on a multi-device TPU
+        ("pallas_hier" instead when ``hier`` is set), and "xla" elsewhere.
         Routing decisions — oracle fallbacks, the mesh/device-count
         resolution — are queryable via
         ``repro.kernels.dispatch.last_dispatch()``.
@@ -51,6 +70,7 @@ class AggregatorSpec:
     f: int = 0
     pre: Optional[str] = "nnm"
     bucket_size: Optional[int] = None
+    hier: bool = False
     gm_iters: int = 8
     gm_eps: float = 1e-8
     autogm_lamb: float = 1.0

@@ -108,6 +108,13 @@ class FleetJob:
                 "fleet lanes with pre='bucketing' need an explicit "
                 "bucket_size (resolve it host-side, e.g. "
                 "default_bucket_size(m, f_round))")
+        if ((self.cfg.agg.hier or self.cfg.agg.backend == "pallas_hier")
+                and self.cfg.agg.bucket_size is None):
+            raise ValueError(
+                "hierarchical fleet lanes need an explicit bucket_size "
+                "(lanes run the dynamic-f path, whose floor(n/2f) default "
+                "is shape-level); resolve it host-side, e.g. "
+                "default_bucket_size(m, f_round)")
 
     @property
     def m_byz(self) -> int:
@@ -299,7 +306,7 @@ def bucket_key(job: FleetJob, *, chunk: Optional[int] = None) -> tuple:
         np.random.default_rng(0))
     return (c.n_clients, c.clients_per_round,
             c.client.local_steps, c.client.algorithm,
-            c.agg.rule, c.agg.pre, c.agg.bucket_size,
+            c.agg.rule, c.agg.pre, c.agg.bucket_size, c.agg.hier,
             c.agg.gm_iters, c.agg.gm_eps,
             c.agg.autogm_lamb, c.agg.autogm_iters,
             c.agg.transport_dtype, c.agg.sketch_dim,

@@ -12,6 +12,7 @@ blocked gram, streamed combine, fused mix+trim — see docs/perf.md).  The
 CPU dry-run lowers; off-TPU, "pallas" runs the kernel bodies in interpret
 mode.
 """
+from repro.kernels.bucketgram import bucket_means_gram, bucket_means_gram_ref
 from repro.kernels.combine import combine, combine_ref
 from repro.kernels.gram import gram, gram_batched, gram_batched_ref, gram_ref
 from repro.kernels.mixtrim import (
@@ -20,6 +21,7 @@ from repro.kernels.mixtrim import (
 from repro.kernels import dispatch, shard
 
 __all__ = [
+    "bucket_means_gram", "bucket_means_gram_ref",
     "combine", "combine_ref",
     "dispatch",
     "gram", "gram_batched", "gram_batched_ref", "gram_ref",

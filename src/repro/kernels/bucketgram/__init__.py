@@ -1,0 +1,4 @@
+from repro.kernels.bucketgram.ops import bucket_means_gram, pick_block_n
+from repro.kernels.bucketgram.ref import bucket_means_gram_ref
+
+__all__ = ["bucket_means_gram", "bucket_means_gram_ref", "pick_block_n"]

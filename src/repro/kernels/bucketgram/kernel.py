@@ -1,0 +1,119 @@
+"""Pallas TPU kernel: fused bucketed means + reduced Gram, one data pass.
+
+Hierarchical aggregation reduces the (n, d) worker stack to ceil(n/s)
+bucket means before the O(n_b^2) NNM/rule pipeline.  Done naively that is
+a permute (gather) + reshape + mean + a second full pass for the reduced
+Gram — three HBM-wide intermediates.  Here the permutation is carried by
+the row-normalized bucket-assignment matrix B (n_b, n)
+(:func:`repro.core.bucketing.bucket_matrix`, built in-graph so the PRNG
+key stays a traced operand) and the whole reduction is two chained MXU
+contractions on VMEM tiles:
+
+    HBM:  X (n, d), B (n_b, n)
+    VMEM: X_blk (BLK_N, BLK_D), B_blk (n_b, BLK_N)
+    MXU:  Y_blk  += B_blk @ X_blk           (accumulated over the n sweep)
+          G      += Y_blk @ Y_blk^T         (once per d block, on the
+                                             finished fp32 Y_blk)
+
+grid = (d_blocks, n_blocks) with the n sweep INNERMOST, so each (n_b,
+BLK_D) means block is finished — and immediately folded into the (n_b,
+n_b) Gram accumulator — before the grid moves to the next d block.  The
+permuted stack and the reduced stack never exist in HBM; the kernel's only
+outputs are the means (fp32, cast by ops.py) and the tiny reduced Gram.
+
+Dims: n_b multiple of 8 (sublane), BLK_N multiple of 128 (lane dim of the
+B tile), BLK_D multiple of 128.  This targets s >> 1 (n_b in the hundreds:
+B tile + G accumulator ~3 MB of VMEM at n_b=640, BLK_N=512).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _bucketgram_kernel(b_ref, x_ref, y_ref, g_ref):
+    j = pl.program_id(1)                      # n-block index (innermost)
+
+    @pl.when(j == 0)
+    def _init_means():
+        y_ref[...] = jnp.zeros_like(y_ref)
+
+    @pl.when((pl.program_id(0) == 0) & (j == 0))
+    def _init_gram():
+        g_ref[...] = jnp.zeros_like(g_ref)
+
+    b = b_ref[...].astype(jnp.float32)
+    x = x_ref[...].astype(jnp.float32)
+    y_ref[...] += jax.lax.dot_general(
+        b, x, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+    @pl.when(j == pl.num_programs(1) - 1)
+    def _fold_gram():
+        y = y_ref[...]
+        g_ref[...] += jax.lax.dot_general(
+            y, y, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)
+
+
+def _bucketmeans_kernel(b_ref, x_ref, y_ref):
+    @pl.when(pl.program_id(1) == 0)
+    def _init_means():
+        y_ref[...] = jnp.zeros_like(y_ref)
+
+    b = b_ref[...].astype(jnp.float32)
+    x = x_ref[...].astype(jnp.float32)
+    y_ref[...] += jax.lax.dot_general(
+        b, x, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("block_n", "block_d", "with_gram",
+                                    "interpret"))
+def bucketgram_pallas(x: jax.Array, bmat: jax.Array, *, block_n: int,
+                      block_d: int, with_gram: bool = True,
+                      interpret: bool = False):
+    """Fused Y = B @ X (fp32) and optionally G = Y Y^T.
+
+    Args:
+      x: (n, d) stack; n % block_n == 0 and d % block_d == 0 (ops.py pads).
+      bmat: (n_b, n) assignment matrix, n_b a multiple of 8.
+      with_gram: also emit the (n_b, n_b) reduced Gram in the same pass.
+    Returns (means fp32 (n_b, d), gram fp32 (n_b, n_b) | None).
+    """
+    n, d = x.shape
+    n_b = bmat.shape[0]
+    assert bmat.shape[1] == n, (bmat.shape, n)
+    assert n % block_n == 0 and d % block_d == 0, (n, d, block_n, block_d)
+    grid = (d // block_d, n // block_n)
+    in_specs = [
+        pl.BlockSpec((n_b, block_n), lambda i, j: (0, j)),
+        pl.BlockSpec((block_n, block_d), lambda i, j: (j, i)),
+    ]
+    if not with_gram:
+        y = pl.pallas_call(
+            _bucketmeans_kernel,
+            grid=grid,
+            in_specs=in_specs,
+            out_specs=pl.BlockSpec((n_b, block_d), lambda i, j: (0, i)),
+            out_shape=jax.ShapeDtypeStruct((n_b, d), jnp.float32),
+            interpret=interpret,
+        )(bmat, x)
+        return y, None
+    y, g = pl.pallas_call(
+        _bucketgram_kernel,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=[
+            pl.BlockSpec((n_b, block_d), lambda i, j: (0, i)),
+            pl.BlockSpec((n_b, n_b), lambda i, j: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n_b, d), jnp.float32),
+            jax.ShapeDtypeStruct((n_b, n_b), jnp.float32),
+        ],
+        interpret=interpret,
+    )(bmat, x)
+    return y, g

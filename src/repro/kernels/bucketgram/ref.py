@@ -1,0 +1,24 @@
+"""Pure-jnp oracle for the fused bucketed-gram kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def bucket_means_gram_ref(x: jax.Array, bmat: jax.Array, *,
+                          with_gram: bool = True
+                          ) -> tuple[jax.Array, jax.Array | None]:
+    """(n, d) stack + (n_b, n) row-normalized assignment -> bucket means
+    ``Y = B @ X`` (cast back to ``x.dtype``) and their fp32 Gram ``Y Y^T``.
+
+    The Gram is taken of the fp32 accumulator BEFORE the transport-dtype
+    cast — the same contract as the fused kernel, which never leaves fp32
+    between the two contractions."""
+    y32 = jnp.dot(bmat.astype(jnp.float32), x.astype(jnp.float32),
+                  preferred_element_type=jnp.float32)
+    y = y32.astype(x.dtype)
+    if not with_gram:
+        return y, None
+    g = jax.lax.dot_general(y32, y32, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    return y, g

@@ -24,6 +24,16 @@ blocked gram + an O(n^2)-byte psum, replicated coefficient math,
 shard-local combine/mixtrim — the memory bound per device drops from
 n x largest-leaf-shard to the (n, BLK_D) VMEM tile.
 
+``backend="pallas_hier"`` is the hierarchical form for large worker
+counts (``AggregatorSpec.hier``): the fused bucketed-gram kernel
+(``kernels/bucketgram``) reduces the (n, D) stack to ceil(n/s) bucket
+means + their reduced Gram in one pass — on a (possibly 2-D workers x
+model) mesh the stack lives sharded along BOTH n and D, and only
+REDUCED-population collectives cross shards (:func:`resolve_hier_mesh` /
+``shard.sharded_bucketgram``).  The downstream NNM/coeff/mixtrim
+primitives then run on the (n/s)-row stack through the same dispatchers
+("pallas_hier" routes them like "pallas_sharded" over the model axis).
+
 Every dispatch decision — including jnp-oracle fallbacks (meamed, sketch
 grams) and a "pallas_sharded" request degrading to the leaf-streamed XLA
 path because no multi-device mesh exists — is recorded on a
@@ -64,36 +74,45 @@ from repro.kernels.mixtrim import mixtrim_dyn as _mixtrim_dyn_op
 Array = jax.Array
 PyTree = Any
 
-BACKENDS = ("xla", "pallas", "pallas_sharded", "auto")
+BACKENDS = ("xla", "pallas", "pallas_sharded", "pallas_hier", "auto")
 
-#: The two backends that run the Pallas kernel pipeline (the third value a
+#: Backends that run the Pallas kernel pipeline (the remaining value a
 #: KernelDecision.requested can hold is "xla").
-_PALLAS_BACKENDS = ("pallas", "pallas_sharded")
+_PALLAS_BACKENDS = ("pallas", "pallas_sharded", "pallas_hier")
+
+#: Backends whose downstream primitives run the shard_map'd kernel forms.
+_SHARDED_BACKENDS = ("pallas_sharded", "pallas_hier")
 
 #: Default VMEM tile-width cap (lane-dim multiple of 128, MXU-sized).
 DEFAULT_BLOCK_D = 512
 
 
-def resolve_backend(requested: str) -> str:
+def resolve_backend(requested: str, *, hier: bool = False) -> str:
     """Resolve "auto" to a concrete backend.
 
     "auto" on TPU picks "pallas" on a single device and "pallas_sharded"
     on multi-device hosts (the shard_map'd pipeline: per-shard blocked
     gram + psum, shard-local combine/mixtrim — see kernels/shard.py), so
     the deployment shapes that matter most no longer pay the two
-    full-width (n, d) HBM intermediates of the leaf-streamed path.
+    full-width (n, d) HBM intermediates of the leaf-streamed path; with
+    ``hier=True`` (a hierarchical spec) the multi-device pick is
+    "pallas_hier" instead, so the bucketed reduction runs sharded too.
     Off-TPU "auto" stays "xla" (interpret-mode kernels are a structural
     tool, not a fast path).  Explicit requests are always honored —
-    "pallas_sharded" additionally needs a multi-device mesh at dispatch
-    time (:func:`resolve_shard_mesh`); without one it degrades to the
-    leaf-streamed XLA pipeline and the degrade is RECORDED, never silent.
+    "pallas_sharded" / "pallas_hier" additionally need a multi-device mesh
+    at dispatch time (:func:`resolve_shard_mesh` /
+    :func:`resolve_hier_mesh`); without one they degrade (to the
+    leaf-streamed XLA pipeline / the dense bucketing path) and the degrade
+    is RECORDED, never silent.
     """
     if requested not in BACKENDS:
         raise ValueError(
             f"unknown backend {requested!r}; expected one of {BACKENDS}")
     if requested == "auto":
         if jax.default_backend() == "tpu":
-            return "pallas" if jax.device_count() == 1 else "pallas_sharded"
+            if jax.device_count() == 1:
+                return "pallas"
+            return "pallas_hier" if hier else "pallas_sharded"
         return "xla"
     return requested
 
@@ -104,6 +123,15 @@ def resolve_shard_mesh() -> Optional[tuple[jax.sharding.Mesh, str]]:
     stay importable without touching jax device state)."""
     from repro.launch.mesh import aggregation_mesh
     return aggregation_mesh()
+
+
+def resolve_hier_mesh() -> Optional[
+        tuple[jax.sharding.Mesh, Optional[str], str]]:
+    """(mesh, worker_axis | None, model_axis) for the hierarchical backend,
+    or None when the host has no multi-device mesh (worker_axis is None on
+    1-D meshes: D-sharded hier)."""
+    from repro.launch.mesh import hier_aggregation_mesh
+    return hier_aggregation_mesh()
 
 
 def pick_block_d(d: int, cap: int = DEFAULT_BLOCK_D) -> int:
@@ -144,13 +172,21 @@ class DispatchRecord:
     rule: str
     pre: Optional[str]
     dyn: bool = False
-    #: Mesh decision for the sharded backend: how many devices the
+    #: Mesh decision for the sharded backends: how many devices the
     #: aggregation actually sharded over (1 = unsharded — a
-    #: "pallas_sharded" record with mesh_devices=1 is a DEGRADED request,
-    #: paired with a recorded "pipeline" fallback decision) and along
-    #: which mesh axis the feature dim was split.
+    #: "pallas_sharded"/"pallas_hier" record with mesh_devices=1 is a
+    #: DEGRADED request, paired with a recorded "pipeline" fallback
+    #: decision) and along which mesh axis the feature dim was split.
     mesh_devices: int = 1
     mesh_axis: Optional[str] = None
+    #: Hierarchical stage: whether this dispatch ran a bucketed
+    #: pre-reduction, its resolved bucket size (None = the shape-level
+    #: floor(n/2f) default, resolved at flatten time), and — on the 2-D
+    #: mesh form — the mesh axis the WORKER dim sharded over (None: the
+    #: stack stayed worker-replicated, D-sharded only).
+    hier: bool = False
+    bucket_size: Optional[int] = None
+    mesh_worker_axis: Optional[str] = None
     decisions: list = dataclasses.field(default_factory=list)
 
     @property
@@ -161,8 +197,11 @@ class DispatchRecord:
     def describe(self) -> str:
         mesh = f" mesh={self.mesh_devices}x{self.mesh_axis}" \
             if self.mesh_axis else ""
+        if self.mesh_worker_axis:
+            mesh += f" workers={self.mesh_worker_axis}"
+        hier = f" hier(s={self.bucket_size or 'auto'})" if self.hier else ""
         parts = [f"{self.requested}->{self.backend} rule={self.rule} "
-                 f"pre={self.pre or 'none'} dyn={self.dyn}{mesh}"]
+                 f"pre={self.pre or 'none'} dyn={self.dyn}{hier}{mesh}"]
         for d in self.decisions:
             why = f" ({d.reason})" if d.reason else ""
             parts.append(f"  {d.primitive}: {d.used}{why}")
@@ -203,13 +242,18 @@ def dispatch_count() -> int:
 def open_record(*, requested: str, backend: str, rule: str,
                 pre: Optional[str], dyn: bool = False,
                 mesh_devices: int = 1,
-                mesh_axis: Optional[str] = None) -> DispatchRecord:
+                mesh_axis: Optional[str] = None,
+                hier: bool = False,
+                bucket_size: Optional[int] = None,
+                mesh_worker_axis: Optional[str] = None) -> DispatchRecord:
     """Start a fresh decision record; subsequent primitive dispatches in
     this trace append to it."""
     global _OPENED
     rec = DispatchRecord(requested=requested, backend=backend, rule=rule,
                          pre=pre, dyn=dyn, mesh_devices=mesh_devices,
-                         mesh_axis=mesh_axis)
+                         mesh_axis=mesh_axis, hier=hier,
+                         bucket_size=bucket_size,
+                         mesh_worker_axis=mesh_worker_axis)
     _HISTORY.append(rec)
     _OPENED += 1
     # Mirror into the runtime event ring (lazy import: obs.runtime imports
@@ -329,7 +373,7 @@ def dispatch_gram(x: Array, *, backend: str, block_d: Optional[int] = None,
 
     ``backend="pallas_sharded"`` needs the resolved (mesh, axis): the
     blocked kernel runs per D-shard and the tiny partial Grams psum."""
-    if backend == "pallas_sharded":
+    if backend in _SHARDED_BACKENDS:
         interpret = jax.default_backend() != "tpu"
         used, why = _pallas_used(interpret, sharded=True)
         record_decision("gram", backend, used, why)
@@ -359,12 +403,59 @@ def dispatch_gram_batched(x: Array, *, backend: str,
     return _gram_batched_op(x, use_pallas=False)
 
 
+def dispatch_bucketgram(x: Array, bmat: Array, *, backend: str,
+                        with_gram: bool = True,
+                        block_n: Optional[int] = None,
+                        block_d: Optional[int] = None,
+                        mesh: Optional[jax.sharding.Mesh] = None,
+                        worker_axis: Optional[str] = None,
+                        axis: Optional[str] = None
+                        ) -> tuple[Array, Optional[Array]]:
+    """(n, D) stack + (n_b, n) assignment -> (bucket means (n_b, D) in the
+    stack dtype, reduced (n_b, n_b) fp32 Gram | None) — the hierarchical
+    pre-reduction, fused so neither the permuted nor the reduced stack
+    materializes in HBM.
+
+    ``backend="pallas_hier"`` needs the resolved (mesh, worker_axis, axis):
+    the stack shards along workers x D and only reduced-population psums
+    cross shards.  "pallas_sharded" runs the 1-D D-sharded form over its
+    (mesh, axis).  "pallas" is the single-device fused kernel; anything
+    else runs the jnp oracle (RECORDED)."""
+    from repro.kernels.bucketgram import bucket_means_gram as _bucketgram_op
+    if backend == "pallas_hier":
+        interpret = jax.default_backend() != "tpu"
+        used, why = _pallas_used(interpret, sharded=True)
+        w = f"workers={worker_axis}" if worker_axis else "D-sharded only"
+        record_decision("bucketgram", backend, used,
+                        f"{why}; {w}" if why else w)
+        return shardlib.sharded_bucketgram(
+            x, bmat, mesh=mesh, worker_axis=worker_axis, model_axis=axis,
+            with_gram=with_gram, block_n=block_n, block_d=block_d,
+            interpret=interpret)
+    if backend == "pallas_sharded":
+        interpret = jax.default_backend() != "tpu"
+        used, why = _pallas_used(interpret, sharded=True)
+        record_decision("bucketgram", backend, used, why)
+        return shardlib.sharded_bucketgram(
+            x, bmat, mesh=mesh, worker_axis=None, model_axis=axis,
+            with_gram=with_gram, block_n=block_n, block_d=block_d,
+            interpret=interpret)
+    if backend == "pallas":
+        interpret = jax.default_backend() != "tpu"
+        used, why = _pallas_used(interpret)
+        record_decision("bucketgram", "pallas", used, why)
+        return _bucketgram_op(x, bmat, with_gram=with_gram, block_n=block_n,
+                              block_d=block_d, interpret=interpret)
+    record_decision("bucketgram", backend, "xla")
+    return _bucketgram_op(x, bmat, with_gram=with_gram, use_pallas=False)
+
+
 def dispatch_combine(x: Array, coeff: Array, *, backend: str,
                      block_d: Optional[int] = None,
                      mesh: Optional[jax.sharding.Mesh] = None,
                      axis: Optional[str] = None) -> Array:
     """(n, D), (n,) -> (D,): streamed linear combination."""
-    if backend == "pallas_sharded":
+    if backend in _SHARDED_BACKENDS:
         interpret = jax.default_backend() != "tpu"
         used, why = _pallas_used(interpret, sharded=True)
         record_decision("combine", backend, used, why)
@@ -399,7 +490,7 @@ def dispatch_mixtrim(x: Array, m: Optional[Array], f, *, mode: str,
         pad = _pad_note(n)
         return f"{why}; {pad}" if why and pad else (pad or why)
 
-    if backend == "pallas_sharded":
+    if backend in _SHARDED_BACKENDS:
         interpret = jax.default_backend() != "tpu"
         used, why = _pallas_used(interpret, sharded=True)
         record_decision("mixtrim", backend, used, _note(why))
@@ -435,7 +526,7 @@ def dispatch_meamed(x: Array, m: Optional[Array], f, *, backend: str,
     backends) runs shard-locally under the sharded backend, keeping the
     wide intermediates at (n, D/k) per device.  ``m`` arrives pre-cast to
     the stack dtype (the bf16-parity contract of the caller)."""
-    if backend == "pallas_sharded":
+    if backend in _SHARDED_BACKENDS:
         record_decision("mixtrim", backend, "xla",
                         "meamed has no fused kernel (shard-local jnp form)")
         return shardlib.sharded_meamed(x, m, f, mesh=mesh, axis=axis,

@@ -28,6 +28,8 @@ import jax.numpy as jnp
 from jax.experimental.shard_map import shard_map
 from jax.sharding import PartitionSpec as P
 
+from repro.kernels.bucketgram import bucket_means_gram as _bucketgram_op
+from repro.kernels.bucketgram import pick_block_n as _pick_block_n
 from repro.kernels.combine import combine as _combine_op
 from repro.kernels.gram import gram as _gram_op
 from repro.kernels.mixtrim import mixtrim as _mixtrim_op
@@ -129,6 +131,89 @@ def sharded_mixtrim(x: Array, m: Optional[Array], f, *, mode: str,
     fn = shard_map(body, mesh=mesh, in_specs=tuple(in_specs),
                    out_specs=P(axis), check_rep=False)
     return fn(*operands)[:d]
+
+
+def sharded_bucketgram(x: Array, bmat: Array, *, mesh: jax.sharding.Mesh,
+                       worker_axis: Optional[str], model_axis: str,
+                       with_gram: bool = True,
+                       block_n: Optional[int] = None,
+                       block_d: Optional[int] = None,
+                       interpret: Optional[bool] = None
+                       ) -> tuple[Array, Optional[Array]]:
+    """Hierarchical reduction on a (possibly 2-D) mesh: (n, D) stack +
+    (n_b, n) assignment -> (bucket means (n_b, D) sharded along
+    ``model_axis``, replicated (n_b, n_b) fp32 reduced Gram | None).
+
+    The stack lives sharded along BOTH mesh axes (worker shards x D
+    shards); ``bmat``'s columns shard with the workers.  Each device runs
+    the fused bucketgram kernel on its local (n/w, D/k) tile; the only
+    collectives are REDUCED-population ones — a psum of (n_b, D/k) partial
+    means across the worker shards (s-fold smaller than gathering the
+    stack, and valid for ANY global permutation: bucket membership never
+    needs to align with the shard boundaries) and a psum of the tiny
+    (n_b, n_b) partial Grams across the D shards.  No (n, D)-shaped value
+    crosses a device boundary and none materializes outside the VMEM
+    tiles.
+
+    ``worker_axis=None`` is the 1-D form: the stack shards only along D,
+    ``bmat`` replicates, and the fused kernel emits means AND partial Gram
+    in one pass per shard (single collective: the Gram psum).
+    """
+    n, d = x.shape
+    kd = axis_size(mesh, model_axis)
+    kw = axis_size(mesh, worker_axis) if worker_axis is not None else 1
+    pad_d = (-d) % kd
+    pad_n = (-n) % kw
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    from repro.kernels.dispatch import pick_block_d
+    bd = block_d if block_d is not None else pick_block_d((d + pad_d) // kd)
+    bn = block_n if block_n is not None else _pick_block_n((n + pad_n) // kw)
+    xw = _pad_cols(x, pad_d)
+    if pad_n:
+        # Zero worker rows + zero assignment columns: phantom workers
+        # belong to no bucket, so the padded reduction is exact.
+        xw = jnp.pad(xw, ((0, pad_n), (0, 0)))
+        bmat = jnp.pad(bmat, ((0, 0), (0, pad_n)))
+
+    if worker_axis is None:
+        def body1(xl, bl):
+            y, g = _bucketgram_op(xl, bl, with_gram=with_gram, block_n=bn,
+                                  block_d=bd, interpret=interpret)
+            if not with_gram:
+                return (y,)
+            return y, jax.lax.psum(g, model_axis)
+
+        fn = shard_map(body1, mesh=mesh,
+                       in_specs=(P(None, model_axis), P()),
+                       out_specs=((P(None, model_axis), P()) if with_gram
+                                  else (P(None, model_axis),)),
+                       check_rep=False)
+        out = fn(xw, bmat)
+        y = out[0][:, :d]
+        return (y, out[1]) if with_gram else (y, None)
+
+    def body2(xl, bl):
+        # Per-device partial means over the local worker rows; the psum
+        # over the worker shards completes every bucket regardless of how
+        # the permutation scattered its members across devices.
+        y_part, _ = _bucketgram_op(xl, bl, with_gram=False, block_n=bn,
+                                   block_d=bd, interpret=interpret)
+        y = jax.lax.psum(y_part, worker_axis)
+        if not with_gram:
+            return (y,)
+        g = _gram_op(y, block_d=bd, use_pallas=True, interpret=interpret)
+        return y, jax.lax.psum(g, model_axis)
+
+    fn = shard_map(body2, mesh=mesh,
+                   in_specs=(P(worker_axis, model_axis),
+                             P(None, worker_axis)),
+                   out_specs=((P(None, model_axis), P()) if with_gram
+                              else (P(None, model_axis),)),
+                   check_rep=False)
+    out = fn(xw, bmat)
+    y = out[0][:, :d]
+    return (y, out[1]) if with_gram else (y, None)
 
 
 def sharded_meamed(x: Array, m: Optional[Array], f, *,

@@ -119,6 +119,67 @@ def aggregation_mesh() -> Optional[tuple[jax.sharding.Mesh, str]]:
     return None
 
 
+#: Mesh axes the HIERARCHICAL aggregation backend ("pallas_hier") prefers
+#: to shard the worker dim n over, in order.  "workers" is the dedicated
+#: axis of :func:`make_hier_mesh`; "data" is where per-worker gradients
+#: already live on the production mesh; "pod" covers multi-pod layouts.
+AGG_WORKER_AXIS_PREFERENCE = ("workers", "data", "pod")
+
+
+def aggregation_worker_axis(mesh: jax.sharding.Mesh,
+                            model_axis: Optional[str]) -> Optional[str]:
+    """The mesh axis hierarchical aggregation shards the worker dim over,
+    or None (1-D hier: D-sharded only).
+
+    Prefers :data:`AGG_WORKER_AXIS_PREFERENCE` (size > 1, distinct from the
+    D axis), else the largest remaining axis."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    for name in AGG_WORKER_AXIS_PREFERENCE:
+        if name != model_axis and sizes.get(name, 1) > 1:
+            return name
+    rest = {a: k for a, k in sizes.items() if a != model_axis and k > 1}
+    if not rest:
+        return None
+    return max(rest, key=lambda a: rest[a])
+
+
+def hier_aggregation_mesh() -> Optional[
+        tuple[jax.sharding.Mesh, Optional[str], str]]:
+    """(mesh, worker_axis | None, model_axis) for ``backend="pallas_hier"``,
+    or None when the host has no multi-device mesh.
+
+    The innermost active :func:`use_mesh` scope wins: D shards along its
+    :func:`aggregation_axis` and the worker dim along
+    :func:`aggregation_worker_axis` (None on 1-D meshes — the stack stays
+    worker-replicated and only D shards).  With no active mesh, >= 4
+    visible devices (even count) get an ad-hoc 2-D (2, k/2)
+    ("workers", "shard") mesh; 2..3 devices get the 1-D "shard" mesh.
+    None means "no multi-device mesh" — the dispatcher records the degrade
+    to the dense bucketing path (never silent)."""
+    import numpy as np
+    mesh = current_mesh()
+    if mesh is not None:
+        model_ax = aggregation_axis(mesh)
+        if model_ax is None:
+            return None
+        return mesh, aggregation_worker_axis(mesh, model_ax), model_ax
+    dc = jax.device_count()
+    if dc >= 4 and dc % 2 == 0:
+        devs = np.asarray(jax.devices()).reshape(2, dc // 2)
+        return jax.sharding.Mesh(devs, ("workers", "shard")), "workers", \
+            "shard"
+    if dc > 1:
+        return jax.sharding.Mesh(np.asarray(jax.devices()), ("shard",)), \
+            None, "shard"
+    return None
+
+
+def make_hier_mesh(workers: int, model: int):
+    """Explicit 2-D mesh for hierarchical aggregation: the (n, D) stack
+    lives sharded along BOTH axes (worker shards x D shards)."""
+    return jax.make_mesh((workers, model), ("workers", "model"))
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (PODS, DATA_PAR, MODEL_PAR) if multi_pod else (DATA_PAR, MODEL_PAR)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
